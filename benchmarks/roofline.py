@@ -1,0 +1,71 @@
+"""Roofline table aggregation: read the dry-run JSONL and emit the
+per-(arch × shape) three-term roofline table (EXPERIMENTS.md §Roofline).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [results/dryrun.jsonl]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = "results/dryrun.jsonl"
+
+
+def load(path=RESULTS):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    for line in open(path):
+        r = json.loads(line)
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+        recs[key] = r  # last record wins (reruns)
+    return recs
+
+
+def table(recs, mesh="pod16x16"):
+    rows = []
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or "error" in r:
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": arch, "shape": shape,
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "useful_ratio": r.get("useful_flops_ratio", 0.0),
+            "peak_gb": r["memory_analysis"]["peak_bytes"] / 1e9,
+            "roofline_fraction": rl["compute_s"] / max(
+                rl["compute_s"], rl["memory_s"], rl["collective_s"]),
+        })
+    return rows
+
+
+def run(verbose=True, path=RESULTS):
+    recs = load(path)
+    rows = table(recs)
+    out = []
+    if verbose:
+        print(f"{'arch':24s}{'shape':13s}{'compute':>9s}{'memory':>9s}"
+              f"{'collect':>9s}  {'dominant':12s}{'useful':>7s}{'frac':>6s}"
+              f"{'mem/dev':>9s}")
+        for r in rows:
+            print(f"{r['arch']:24s}{r['shape']:13s}{r['compute_s']:9.3f}"
+                  f"{r['memory_s']:9.3f}{r['collective_s']:9.3f}  "
+                  f"{r['dominant']:12s}{r['useful_ratio']:7.2f}"
+                  f"{r['roofline_fraction']:6.2f}{r['peak_gb']:8.1f}G")
+    for r in rows:
+        out.append((f"roofline_{r['arch']}_{r['shape']}",
+                    r["roofline_fraction"] * 100,
+                    f"dominant={r['dominant']}"))
+    errors = [(k, v["error"][:80]) for k, v in recs.items() if "error" in v]
+    if verbose and errors:
+        print(f"\n{len(errors)} cells with errors:")
+        for k, e in errors:
+            print(" ", k, e)
+    return out
+
+
+if __name__ == "__main__":
+    run(path=sys.argv[1] if len(sys.argv) > 1 else RESULTS)

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows:
+  * fig6_*     — Fig. 6 reproduction (relaxed 8:128 vs S2TA/VEGETA/SPOTS)
+  * fig8_*     — Fig. 8 reproduction (fine-grained 1:8/1:4/1:2)
+  * kernel_*   — DeMM kernel structural benchmarks (packed-byte roofline)
+  * roofline_* — per-(arch×shape) roofline fractions from the dry-run JSONL
+                 (requires results/dryrun.jsonl; skipped gracefully if absent)
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import fig6_resnet50, fig8_finegrained, kernel_bench
+    from benchmarks import roofline as roofline_mod
+
+    rows = []
+    print("== Fig. 6: relaxed 8:128 on ResNet50 (paper: 18/54/67%) ==")
+    f6 = fig6_resnet50.run(verbose=False)
+    rows += f6
+    for name, val, derived in f6:
+        print(f"{name},{val:.2f},{derived}")
+
+    print("== Fig. 8: fine-grained 1:8/1:4/1:2 (ResNet50+ConvNeXt) ==")
+    f8 = fig8_finegrained.run(verbose=False)
+    rows += f8
+    for name, val, derived in f8:
+        print(f"{name},{val:.2f},{derived}")
+
+    print("== DeMM kernel benchmarks ==")
+    kb = kernel_bench.run(verbose=False)
+    rows += kb
+    for name, val, derived in kb:
+        print(f"{name},{val:.2f},{derived}")
+
+    print("== Roofline (from dry-run) ==")
+    rl = roofline_mod.run(verbose=False)
+    rows += rl
+    for name, val, derived in rl:
+        print(f"{name},{val:.2f},{derived}")
+    if not rl:
+        print("roofline_skipped,0,run results/run_dryrun.sh first")
+
+    print(f"== total: {len(rows)} benchmark rows ==")
+
+
+if __name__ == "__main__":
+    main()

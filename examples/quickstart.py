@@ -1,0 +1,95 @@
+"""Quickstart: the paper's technique end to end in five minutes.
+
+1. Build a relaxed 8:128-sparse matrix, pack it, and run the DeMM engine.
+2. Validate the Pallas TPU kernel (interpret mode) against the jnp oracle.
+3. Train a tiny sparse LM for a few steps and serve it with packed weights.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.demm import DeMMConfig, demm_spmm
+from repro.core.sparsity import (
+    SparsityConfig,
+    pack,
+    prune,
+    random_sparse_dense,
+    satisfies_pattern,
+)
+from repro.kernels.demm_spmm import demm_spmm_pallas
+from repro.kernels.ref import spmm_ref
+
+print("=" * 70)
+print("1. Relaxed structured sparsity + the decoupled engine")
+print("=" * 70)
+cfg = SparsityConfig(n=8, m=128)
+rng = np.random.default_rng(0)
+a = random_sparse_dense(rng, rows=256, cols=512, cfg=cfg)
+b = rng.standard_normal((512, 128)).astype(np.float32)
+print(f"pattern {cfg.pattern_name()}: density {cfg.density:.3%}, "
+      f"packed compression {cfg.compression_ratio(2, 1):.1f}x (bf16+int8)")
+assert satisfies_pattern(jnp.asarray(a), cfg)
+
+packed = pack(jnp.asarray(a), cfg)
+print(f"packed: values {packed.values.shape}, indices {packed.indices.shape}")
+out = demm_spmm(packed, jnp.asarray(b))          # row-wise product-first
+np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4, atol=1e-4)
+print("DeMM row-wise product-first == dense matmul  [ok]")
+
+engine = DeMMConfig(n=8, m=128, c=64, k=8)       # the paper's DeMM(8,128,64,8)
+print(f"engine DeMM(8,128,64,8): {engine.multipliers} MACs, supports 8:128 "
+      f"through {engine.k * engine.n}:128 (k-reconfiguration)")
+
+print()
+print("=" * 70)
+print("2. Pallas TPU kernel vs oracle (interpret mode on CPU)")
+print("=" * 70)
+t0 = time.time()
+got = demm_spmm_pallas(packed.values, packed.indices, jnp.asarray(b), cfg,
+                       block_r=128, block_c=128, interpret=True)
+want = spmm_ref(packed.values, packed.indices, jnp.asarray(b), cfg,
+                (256, 512))
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                           atol=1e-4)
+print(f"fused decompress->MXU kernel == oracle  [ok]  ({time.time()-t0:.1f}s)")
+
+print()
+print("=" * 70)
+print("3. Sparse LM: train (masked) -> pack -> serve (DeMM)")
+print("=" * 70)
+from repro.configs.base import get_arch
+from repro.launch.pack_tree import pack_tree
+from repro.models.families import build_model
+from repro.optim import adamw
+from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
+from repro.train.train_loop import make_train_step
+
+arch = get_arch("stablelm_3b").reduced()
+model = build_model(arch)
+params = model.init(jax.random.PRNGKey(0))
+opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=20, warmup_steps=2)
+opt = adamw.init(opt_cfg, params)
+step = jax.jit(make_train_step(model, opt_cfg))
+batch = {
+    "tokens": jnp.asarray(rng.integers(0, arch.vocab_size, (4, 32))),
+    "targets": jnp.asarray(rng.integers(0, arch.vocab_size, (4, 32))),
+}
+losses = []
+for i in range(8):
+    params, opt, m = step(params, opt, batch, i)
+    losses.append(float(m["loss"]))
+print(f"masked-sparse training: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+packed_params = pack_tree(params)
+eng = ServeEngine(model, packed_params, ServeConfig(num_slots=2, max_len=48),
+                  mode="packed")
+eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                   max_new_tokens=8))
+eng.run_until_drained()
+print(f"packed-DeMM serving: generated {eng.completed[0].output}")
+print("\nquickstart complete.")

@@ -1,0 +1,71 @@
+"""Serve a small model with batched requests, comparing the dense-masked vs
+packed-DeMM serving paths (the paper's inference use case).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.sparsity import SparsityConfig
+from repro.launch.pack_tree import pack_tree
+from repro.models.families import build_model
+from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
+
+
+def run_engine(model, params, cfg, mode, requests):
+    eng = ServeEngine(model, params, ServeConfig(num_slots=4, max_len=64),
+                      mode=mode)
+    for r in requests:
+        eng.submit(Request(uid=r.uid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens))
+    t0 = time.time()
+    eng.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in eng.completed)
+    return eng.completed, toks / dt, dt
+
+
+def main():
+    cfg = get_arch("gemma3_1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    requests = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 8,
+                                            dtype=np.int32),
+                        max_new_tokens=12)
+                for i in range(8)]
+
+    done_m, tps_m, dt_m = run_engine(model, params, cfg, "masked", requests)
+    packed = pack_tree(params)
+    done_p, tps_p, dt_p = run_engine(model, packed, cfg, "packed", requests)
+
+    sp = cfg.sparsity
+    print(f"arch {cfg.name} (reduced), sparsity {sp.pattern_name()}, "
+          f"weight compression {sp.compression_ratio(2, 1):.1f}x")
+    print(f"masked-dense serving: {len(done_m)} reqs, {tps_m:.1f} tok/s")
+    print(f"packed-DeMM  serving: {len(done_p)} reqs, {tps_p:.1f} tok/s "
+          f"(CPU interpret — on TPU the packed path cuts weight HBM reads "
+          f"~{sp.compression_ratio(2, 1):.0f}x; see EXPERIMENTS.md §Perf)")
+
+    # generations agree modulo fp-tie argmax flips (the packed path
+    # accumulates in fp32, the masked path in bf16)
+    by_uid_m = {r.uid: r.output for r in done_m}
+    by_uid_p = {r.uid: r.output for r in done_p}
+    agree = np.mean([
+        np.mean(np.asarray(by_uid_m[u]) == np.asarray(by_uid_p[u]))
+        for u in by_uid_m])
+    print(f"greedy top-1 agreement across paths: {agree:.1%} "
+          f"(fp32 vs bf16 accumulation)")
+    assert agree > 0.7, "packed and masked paths diverged beyond fp noise"
+    for uid in sorted(by_uid_m)[:3]:
+        print(f"  req {uid}: masked {by_uid_m[uid]}")
+        print(f"          packed {by_uid_p[uid]}")
+
+
+if __name__ == "__main__":
+    main()

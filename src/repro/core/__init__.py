@@ -1,0 +1,13 @@
+"""DeMM core: relaxed N:M structured sparsity + the decoupled engine."""
+from repro.core.sparsity import (  # noqa: F401
+    PATTERNS,
+    PackedSparse,
+    SparsityConfig,
+    pack,
+    prune,
+    prune_mask,
+    satisfies_pattern,
+    unpack,
+    unpack_packed,
+)
+from repro.core.demm import DeMMConfig, demm_spmm, demm_spmm_k_passes  # noqa: F401

@@ -1,0 +1,119 @@
+"""Pruning schedules for relaxed N:M structured sparsity.
+
+Two training-time paths, both of which produce weights that satisfy the
+pattern and can be packed losslessly for DeMM serving:
+
+* **Straight-through masked training** — the weight is kept dense; the
+  forward pass multiplies by the top-N:M magnitude mask, the backward pass
+  passes gradients straight through to the dense weight (so pruned weights
+  keep receiving gradient and may re-enter the pattern later).  This is the
+  standard way N:M models are fine-tuned.
+
+* **RigL-style prune/regrow** — the mask is updated every ``update_every``
+  steps: drop the smallest-magnitude kept weights, regrow at the positions
+  with the largest dense-gradient magnitude, keeping exactly N per M group
+  (Evci et al., the pruning method the paper's 95% ResNet50 workload uses).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import SparsityConfig, prune_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSchedule:
+    cfg: SparsityConfig
+    update_every: int = 100          # RigL mask-update cadence (steps)
+    regrow_fraction: float = 0.3     # fraction of kept slots reconsidered
+    stop_update_after: Optional[int] = None  # freeze mask late in training
+
+
+@jax.custom_vjp
+def straight_through_mask(w: jax.Array, mask: jax.Array) -> jax.Array:
+    return w * mask.astype(w.dtype)
+
+
+def _st_fwd(w, mask):
+    return w * mask.astype(w.dtype), None
+
+
+def _st_bwd(_, g):
+    # Gradient flows to the dense weight unmasked (straight-through);
+    # the mask is not differentiable.
+    return g, None
+
+
+straight_through_mask.defvjp(_st_fwd, _st_bwd)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def masked_weight(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Forward-time N:M projection with straight-through gradients.
+
+    Recomputes the top-N mask from the current dense weight every call, so
+    the pattern tracks weight magnitude during training ("soft" N:M, as used
+    by SR-STE-style methods).
+    """
+    return straight_through_mask(w, prune_mask(w, cfg))
+
+
+@partial(jax.jit, static_argnames=("sched",), donate_argnums=(1,))
+def rigl_update_mask(w: jax.Array, mask: jax.Array, grad: jax.Array,
+                     sched: PruneSchedule) -> jax.Array:
+    """One RigL mask update: drop smallest kept |w|, regrow largest |grad|.
+
+    Operates per (row, group): scores kept slots by |w|, candidate slots by
+    |grad|, and re-selects the top ``n_effective`` of the union with
+    ``regrow_fraction`` of the budget reserved for gradient-selected slots.
+    The result always satisfies the N:M pattern exactly.
+    """
+    cfg = sched.cfg
+    r, kdim = w.shape
+    g = kdim // cfg.m
+    ne = cfg.n_effective
+    n_regrow = max(1, int(round(sched.regrow_fraction * ne)))
+    n_keep = ne - n_regrow
+
+    wg = jnp.abs(w.reshape(r, g, cfg.m))
+    gg = jnp.abs(grad.reshape(r, g, cfg.m))
+    mg = mask.reshape(r, g, cfg.m).astype(bool)
+
+    # Keep the n_keep largest-|w| currently-active slots...
+    w_score = jnp.where(mg, wg, -jnp.inf)
+    keep_vals, keep_idx = jax.lax.top_k(w_score, n_keep)
+    keep_oh = jnp.zeros_like(mg).at[
+        jnp.arange(r)[:, None, None], jnp.arange(g)[None, :, None], keep_idx
+    ].set(keep_vals > -jnp.inf)
+
+    # ...and regrow the n_regrow largest-|grad| currently-inactive slots.
+    g_score = jnp.where(keep_oh, -jnp.inf, gg)
+    grow_vals, grow_idx = jax.lax.top_k(g_score, n_regrow)
+    grow_oh = jnp.zeros_like(mg).at[
+        jnp.arange(r)[:, None, None], jnp.arange(g)[None, :, None], grow_idx
+    ].set(grow_vals > -jnp.inf)
+
+    return (keep_oh | grow_oh).reshape(r, kdim)
+
+
+def init_mask(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    return prune_mask(w, cfg)
+
+
+def maybe_update_mask(step: jax.Array, w: jax.Array, mask: jax.Array,
+                      grad: jax.Array, sched: PruneSchedule) -> jax.Array:
+    """Conditionally apply the RigL update on schedule (jit-safe)."""
+    due = (step % sched.update_every) == 0
+    if sched.stop_update_after is not None:
+        due = due & (step < sched.stop_update_after)
+    return jax.lax.cond(
+        due,
+        lambda: rigl_update_mask(w, mask, grad, sched),
+        lambda: mask,
+    )

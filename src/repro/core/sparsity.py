@@ -1,0 +1,275 @@
+"""Relaxed N:M structured sparsity — formats, pruning, packing.
+
+This module is the data-format half of the paper's contribution: a matrix A
+follows *relaxed structured sparsity* N:M when every group of M contiguous
+elements along the contraction dimension of each row holds at most N
+non-zeros.  The packed representation stores, per (row, group), exactly N
+``{value, col_idx}`` pairs (zero-padded when fewer non-zeros exist), which is
+what the DeMM engine streams: values feed the multipliers, indices feed the
+read ports.
+
+Shapes
+------
+dense   A        : (R, K)            with K % M == 0, G = K // M groups
+packed  values   : (R, G, N)         same dtype as A
+packed  indices  : (R, G, N) int32   local column index within the group,
+                                     in [0, M); padded slots point at 0 with
+                                     value 0 (contributing nothing).
+
+The k-reconfiguration of the paper (a DeMM(N, M, C, k) engine serving kN:M
+patterns by time-sharing its N read ports over k cycles) is mirrored by
+``reconfigure_k``: a packed (R, G, kN) tensor is viewed as k passes of
+(R, G, N), preserving the engine-config semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Relaxed structured sparsity pattern N:M with k-reconfiguration.
+
+    The *native* engine pattern is ``n:m``.  ``k`` > 1 means the engine is
+    reconfigured to serve the denser ``k*n : m`` pattern in ``k`` passes over
+    the same pre-loaded B block (paper §II-B).  The *effective* number of
+    non-zeros per group is ``n_effective = n * k``.
+    """
+
+    n: int = 8
+    m: int = 128
+    k: int = 1
+
+    def __post_init__(self):
+        if self.n < 1 or self.m < 1 or self.k < 1:
+            raise ValueError(f"n, m, k must be >= 1, got {self}")
+        if self.n * self.k > self.m:
+            raise ValueError(
+                f"effective non-zeros n*k={self.n * self.k} exceeds group size m={self.m}"
+            )
+
+    @property
+    def n_effective(self) -> int:
+        return self.n * self.k
+
+    @property
+    def density(self) -> float:
+        return self.n_effective / self.m
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.density
+
+    def pattern_name(self) -> str:
+        if self.k == 1:
+            return f"{self.n}:{self.m}"
+        return f"{self.n_effective}:{self.m} (as {self.k}x{self.n}:{self.m})"
+
+    def packed_bytes(self, rows: int, cols: int, value_bytes: int = 2,
+                     index_bytes: int = 1) -> int:
+        """HBM footprint of the packed representation."""
+        groups = cols // self.m
+        return rows * groups * self.n_effective * (value_bytes + index_bytes)
+
+    def dense_bytes(self, rows: int, cols: int, value_bytes: int = 2) -> int:
+        return rows * cols * value_bytes
+
+    def compression_ratio(self, value_bytes: int = 2, index_bytes: int = 1) -> float:
+        """Dense/packed byte ratio — the memory-roofline lever on TPU."""
+        return (self.m * value_bytes) / (self.n_effective * (value_bytes + index_bytes))
+
+
+# Common named patterns from the paper.
+PATTERNS = {
+    "8:128": SparsityConfig(8, 128, 1),
+    "8:256": SparsityConfig(8, 256, 1),
+    "4:64": SparsityConfig(4, 64, 1),
+    "1:2": SparsityConfig(1, 2, 1),
+    "1:4": SparsityConfig(1, 4, 1),
+    "1:8": SparsityConfig(1, 8, 1),
+    "2:4": SparsityConfig(2, 4, 1),
+    # DeMM(8,128,·,8) reconfigured to fine-grained-equivalent densities:
+    "64:128 (as 8x8:128)": SparsityConfig(8, 128, 8),
+}
+
+
+def _check_dims(shape, m: int):
+    if len(shape) != 2:
+        raise ValueError(f"expected 2-D matrix, got shape {shape}")
+    if shape[1] % m == 0:
+        return
+    raise ValueError(f"contraction dim {shape[1]} not divisible by group size {m}")
+
+
+# ---------------------------------------------------------------------------
+# Pattern validation / mask utilities
+# ---------------------------------------------------------------------------
+
+def group_nonzero_counts(a: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Non-zero count per (row, group): shape (R, G)."""
+    _check_dims(a.shape, cfg.m)
+    r, kdim = a.shape
+    g = kdim // cfg.m
+    return jnp.sum((a.reshape(r, g, cfg.m) != 0).astype(jnp.int32), axis=-1)
+
+
+def satisfies_pattern(a: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """True iff every (row, group) has at most n_effective non-zeros."""
+    return jnp.all(group_nonzero_counts(a, cfg) <= cfg.n_effective)
+
+
+def prune_mask(a: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Magnitude top-``n_effective``-per-group boolean mask with A's shape.
+
+    This is the pruning rule used to derive relaxed-structured-sparse models
+    (keep the largest-|w| N elements of every M-block of every row).  Ties are
+    broken deterministically by column order (first occurrence wins), matching
+    ``jax.lax.top_k`` semantics.
+    """
+    _check_dims(a.shape, cfg.m)
+    r, kdim = a.shape
+    g = kdim // cfg.m
+    ne = cfg.n_effective
+    mag = jnp.abs(a.reshape(r, g, cfg.m))
+    # Threshold = value of the ne-th largest magnitude in each group.
+    top_vals, _ = jax.lax.top_k(mag, ne)
+    thresh = top_vals[..., ne - 1 : ne]  # (R, G, 1)
+    keep = mag >= thresh
+    # Resolve ties: if >ne elements meet the threshold, keep the first ones.
+    over = jnp.cumsum(keep.astype(jnp.int32), axis=-1)
+    keep = keep & (over <= ne)
+    # Never keep exact zeros (threshold can be 0 in an all-zero group).
+    keep = keep & (mag > 0)
+    return keep.reshape(r, kdim)
+
+
+def prune(a: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Magnitude-prune ``a`` to the N:M pattern (dense output, zeros inserted)."""
+    return jnp.where(prune_mask(a, cfg), a, jnp.zeros((), a.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedSparse:
+    """Packed relaxed-structured-sparse matrix (the DeMM input stream)."""
+
+    values: jax.Array   # (R, G, Ne)
+    indices: jax.Array  # (R, G, Ne) int32, local in [0, M)
+    cfg: SparsityConfig
+    shape: tuple        # dense (R, K)
+
+    @property
+    def dense_shape(self):
+        return self.shape
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.cfg, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, indices = children
+        cfg, shape = aux
+        return cls(values=values, indices=indices, cfg=cfg, shape=shape)
+
+
+jax.tree_util.register_pytree_node(
+    PackedSparse, PackedSparse.tree_flatten, PackedSparse.tree_unflatten
+)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def pack(a: jax.Array, cfg: SparsityConfig) -> PackedSparse:
+    """Pack a dense matrix that satisfies (or is pruned to) N:M into
+    ``{values, indices}``.
+
+    Elements beyond the ``n_effective`` magnitude-largest per group are
+    dropped (i.e. ``pack(prune(a)) == pack(a)``); use :func:`satisfies_pattern`
+    first if lossless packing must be asserted.
+    """
+    _check_dims(a.shape, cfg.m)
+    r, kdim = a.shape
+    g = kdim // cfg.m
+    ne = cfg.n_effective
+    grp = a.reshape(r, g, cfg.m)
+    mag = jnp.abs(grp)
+    # top_k by magnitude; indices are positions within the group.
+    _, idx = jax.lax.top_k(mag, ne)                      # (R, G, Ne)
+    idx = jnp.sort(idx, axis=-1)                          # canonical order
+    vals = jnp.take_along_axis(grp, idx, axis=-1)         # (R, G, Ne)
+    # Padded slots (zero values) are pointed at column 0 with value 0.
+    vals = jnp.where(vals != 0, vals, jnp.zeros((), a.dtype))
+    idx = jnp.where(vals != 0, idx, jnp.zeros((), jnp.int32))
+    return PackedSparse(values=vals, indices=idx.astype(jnp.int32), cfg=cfg,
+                        shape=(r, kdim))
+
+
+@partial(jax.jit, static_argnames=("cfg", "shape"))
+def unpack(values: jax.Array, indices: jax.Array, cfg: SparsityConfig,
+           shape: tuple) -> jax.Array:
+    """Scatter a packed representation back to a dense (R, K) matrix."""
+    r, kdim = shape
+    g = kdim // cfg.m
+    ne = cfg.n_effective
+    assert values.shape == (r, g, ne), (values.shape, (r, g, ne))
+    # One-hot scatter: out[r, g, m] = sum_n values[r, g, n] * [indices==m]
+    iota = jnp.arange(cfg.m, dtype=jnp.int32)
+    onehot = (indices[..., None] == iota).astype(values.dtype)  # (R,G,Ne,M)
+    dense = jnp.einsum("rgn,rgnm->rgm", values, onehot)
+    return dense.reshape(r, kdim)
+
+
+def unpack_packed(p: PackedSparse) -> jax.Array:
+    return unpack(p.values, p.indices, p.cfg, p.shape)
+
+
+def reconfigure_k(p: PackedSparse, k: int) -> PackedSparse:
+    """View a packed kN:M matrix as ``k`` sequential N:M passes.
+
+    Mirrors the paper's §II-B reconfiguration: an engine with N read ports
+    serves a kN:M pattern by reading the same B block k times.  The packed
+    (R, G, kN) tensors are reshaped to (R, G*k', ...) views consumed pass by
+    pass; numerically ``sum_k demm(pass_k) == demm(full)``.
+    """
+    ne = p.cfg.n_effective
+    if ne % k:
+        raise ValueError(f"cannot split n_effective={ne} into k={k} passes")
+    n_pass = ne // k
+    r, g, _ = p.values.shape
+    vals = p.values.reshape(r, g, k, n_pass)
+    idx = p.indices.reshape(r, g, k, n_pass)
+    return dataclasses.replace(
+        p,
+        values=vals.reshape(r, g * k, n_pass),
+        indices=idx.reshape(r, g * k, n_pass),
+        cfg=SparsityConfig(n=n_pass, m=p.cfg.m, k=k),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side helpers (numpy; used by data/checkpoint tooling and tests)
+# ---------------------------------------------------------------------------
+
+def random_sparse_dense(rng: np.random.Generator, rows: int, cols: int,
+                        cfg: SparsityConfig, dtype=np.float32) -> np.ndarray:
+    """A dense matrix exactly satisfying N:M (each group gets <= n_effective
+    non-zeros at uniformly random positions)."""
+    _check_dims((rows, cols), cfg.m)
+    g = cols // cfg.m
+    out = np.zeros((rows, g, cfg.m), dtype=dtype)
+    ne = cfg.n_effective
+    for rr in range(rows):
+        for gg in range(g):
+            nnz = rng.integers(0, ne + 1)
+            if nnz:
+                pos = rng.choice(cfg.m, size=nnz, replace=False)
+                out[rr, gg, pos] = rng.standard_normal(nnz).astype(dtype)
+    return out.reshape(rows, cols)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for DeMM (validated with interpret=True on CPU)."""

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: scalar-prefetch block-gather DeMM spmm.
+
+This is the *decoupled-memory* half of the DeMM adaptation (DESIGN.md §2,
+row (b)): the column indices of the sparse matrix drive **which blocks of B
+are fetched from HBM at all**.  The packed format is two-level:
+
+  level 1 — per row-block, the list of *active* M-groups (groups where at
+            least one row of the block has a non-zero).  Groups absent from
+            the list are never DMA'd and never touch the MXU: the address
+            stream gates the memory system exactly like DeMM's read ports
+            gate its SRAM.
+  level 2 — within each active group, the usual relaxed N:M packed
+            {values, indices} (consumed by the same scatter→MXU body as
+            ``demm_spmm``).
+
+The active-group ids are passed through ``PrefetchScalarGridSpec`` so the
+BlockSpec ``index_map`` of B reads them *before* the grid step runs — i.e.
+the DMA engine is addressed by the sparse metadata, which is the paper's
+decoupling, relocated to the HBM→VMEM boundary.
+
+Padded slots (row blocks with fewer than ``a_max`` active groups) point at
+group 0 with all-zero values: they cost a redundant (but cheap, VMEM-hit)
+step and contribute exactly 0.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparsity import SparsityConfig
+from repro.kernels.demm_spmm import _scatter_matrix
+
+DEFAULT_BLOCK_R = 128
+DEFAULT_BLOCK_C = 256
+
+
+def pack_block_sparse(
+    a: np.ndarray, cfg: SparsityConfig, block_r: int = DEFAULT_BLOCK_R,
+    a_max: int | None = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Host-side two-level packing.
+
+    Returns (active_groups (RB, A_max) int32,
+             values (RB, A_max, block_r, Ne),
+             indices (RB, A_max, block_r, Ne),
+             a_max).
+    """
+    r, k = a.shape
+    m, ne = cfg.m, cfg.n_effective
+    assert r % block_r == 0 and k % m == 0
+    rb, g = r // block_r, k // m
+    blocks = a.reshape(rb, block_r, g, m)
+
+    active = [np.nonzero(np.any(blocks[i] != 0, axis=(0, 2)))[0] for i in range(rb)]
+    max_needed = max((len(x) for x in active), default=0)
+    a_max = max(1, max_needed if a_max is None else a_max)
+    if max_needed > a_max:
+        raise ValueError(f"a_max={a_max} < needed {max_needed}")
+
+    ag = np.zeros((rb, a_max), np.int32)
+    vals = np.zeros((rb, a_max, block_r, ne), a.dtype)
+    idxs = np.zeros((rb, a_max, block_r, ne), np.int32)
+    for i in range(rb):
+        for j, gg in enumerate(active[i]):
+            ag[i, j] = gg
+            grp = blocks[i, :, gg, :]                       # (block_r, M)
+            order = np.argsort(-np.abs(grp), axis=-1, kind="stable")[:, :ne]
+            order = np.sort(order, axis=-1)
+            v = np.take_along_axis(grp, order, axis=-1)
+            order = np.where(v != 0, order, 0)
+            vals[i, j] = v
+            idxs[i, j] = order
+    return ag, vals, idxs, a_max
+
+
+def _block_spmm_kernel(ag_ref, values_ref, indices_ref, b_ref, out_ref, *, m, n):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # values_ref block: (1, 1, block_r, N) — squeeze the block-level dims.
+    vals = values_ref[0]                                     # (1, block_r, N) -> treat as (block_r,1,N)
+    idxs = indices_ref[0]
+    s = _scatter_matrix(
+        jnp.swapaxes(vals, 0, 1), jnp.swapaxes(idxs, 0, 1), m, n, b_ref.dtype
+    )                                                        # (block_r, M)
+    out_ref[...] += jax.lax.dot_general(
+        s, b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "r", "cd_block", "interpret"),
+)
+def demm_block_spmm_pallas(
+    active_groups: jax.Array,  # (RB, A_max) int32
+    values: jax.Array,         # (RB, A_max, block_r, Ne)
+    indices: jax.Array,        # (RB, A_max, block_r, Ne)
+    b: jax.Array,              # (K, Cd)
+    cfg: SparsityConfig,
+    *,
+    r: int,
+    cd_block: int = DEFAULT_BLOCK_C,
+    interpret: bool = False,
+) -> jax.Array:
+    rb, a_max, block_r, n = values.shape
+    k, cd = b.shape
+    m = cfg.m
+    assert rb * block_r == r
+    assert n == cfg.n_effective
+    cd_block = min(cd_block, cd)
+    assert cd % cd_block == 0
+
+    grid = (rb, cd // cd_block, a_max)
+    kernel = functools.partial(_block_spmm_kernel, m=m, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_r, n), lambda i, c, j, ag: (i, j, 0, 0)),
+                pl.BlockSpec((1, 1, block_r, n), lambda i, c, j, ag: (i, j, 0, 0)),
+                # The decoupled read port: B's DMA address comes from the
+                # prefetched active-group id, not from the grid position.
+                pl.BlockSpec((m, cd_block), lambda i, c, j, ag: (ag[i, j], c)),
+            ],
+            out_specs=pl.BlockSpec((block_r, cd_block), lambda i, c, j, ag: (i, c)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r, cd), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="demm_block_spmm",
+    )(active_groups, values, indices, b)

@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: fused decompress→MXU DeMM spmm.
+
+TPU adaptation of the DeMM engine (DESIGN.md §2).  The packed sparse matrix
+(values + column indices) is the only representation of A that leaves HBM.
+Inside the kernel — i.e. *after* the DMA stage, in VMEM — the N
+``{value, col_idx}`` pairs of each row-group are expanded into a (rows, M)
+scatter matrix S (the software analogue of DeMM's N read ports selecting N
+rows of the pre-loaded B block), and the MXU performs S @ B_block, fusing the
+paper's multiplier array and adder trees into the systolic matmul.
+
+Two entry points:
+
+* ``demm_spmm_pallas(values, indices, b)``   — C = A_sparse @ B
+  (the paper's orientation: A (R, K) packed, B (K, Cd) dense).
+* ``demm_xwT_pallas(x, values, indices)``    — y = x @ W_sparseᵀ
+  (the serving hot path: dense activations × packed weightᵀ).
+
+Both tile with explicit BlockSpecs: the B (resp. x) block of one M-group is
+resident in VMEM across the inner grid dimension, mirroring the engine's
+pre-loaded memory block; the output block is revisited across groups and
+accumulated in fp32.
+
+VMEM budget (defaults, bf16): B block M×Ct = 128×256×2 = 64 KiB; A packed
+block Rt×N×(2+4) ≈ 6 KiB; out block Rt×Ct×4 = 128 KiB — comfortably inside
+the ~16 MiB/core VMEM with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparsity import SparsityConfig
+
+# MXU/VPU-aligned defaults.
+DEFAULT_BLOCK_R = 128   # rows of the sparse matrix per tile
+DEFAULT_BLOCK_C = 256   # dense output columns per tile
+DEFAULT_BLOCK_B = 128   # activation rows per tile (xwT orientation)
+
+
+def _scatter_matrix(values_blk, indices_blk, m: int, n: int, dtype):
+    """Expand packed (rows, 1, N) values/indices into the (rows, M) scatter
+    matrix S — the in-VMEM image of DeMM's N read ports.
+
+    S[r, j] = sum_n values[r, n] * [indices[r, n] == j]
+
+    The N loop is static and small (the paper's read-port count), so it is
+    unrolled into N VPU select-accumulate ops over (rows, M) tiles.
+    Duplicate indices accumulate, matching the oracle's scatter-add.
+    """
+    rows = values_blk.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (rows, m), 1)
+    s = jnp.zeros((rows, m), dtype)
+    for j in range(n):
+        v = values_blk[:, 0, j].astype(dtype)[:, None]        # (rows, 1)
+        idx = indices_blk[:, 0, j][:, None]                    # (rows, 1)
+        s = s + jnp.where(idx == iota, v, jnp.zeros((), dtype))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# C = A_sparse @ B (paper orientation)
+# ---------------------------------------------------------------------------
+
+def _spmm_kernel(values_ref, indices_ref, b_ref, out_ref, *, m, n, n_groups):
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    s = _scatter_matrix(values_ref[...], indices_ref[...], m, n,
+                        b_ref.dtype)                            # (Rt, M)
+    contrib = jax.lax.dot_general(
+        s, b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                           # (Rt, Ct)
+    out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_r", "block_c", "interpret"),
+)
+def demm_spmm_pallas(
+    values: jax.Array,      # (R, G, N)
+    indices: jax.Array,     # (R, G, N) int32
+    b: jax.Array,           # (K, Cd), K = G * M
+    cfg: SparsityConfig,
+    *,
+    block_r: int = DEFAULT_BLOCK_R,
+    block_c: int = DEFAULT_BLOCK_C,
+    interpret: bool = False,
+) -> jax.Array:
+    r, g, n = values.shape
+    k, cd = b.shape
+    m = cfg.m
+    assert k == g * m, (k, g, m)
+    assert n == cfg.n_effective, (n, cfg)
+    block_r = min(block_r, r)
+    block_c = min(block_c, cd)
+    assert r % block_r == 0 and cd % block_c == 0, (r, cd, block_r, block_c)
+
+    grid = (r // block_r, cd // block_c, g)
+    kernel = functools.partial(_spmm_kernel, m=m, n=n, n_groups=g)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, 1, n), lambda i, j, gg: (i, gg, 0)),
+            pl.BlockSpec((block_r, 1, n), lambda i, j, gg: (i, gg, 0)),
+            pl.BlockSpec((m, block_c), lambda i, j, gg: (gg, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j, gg: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, cd), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="demm_spmm",
+    )(values, indices, b)
+
+
+# ---------------------------------------------------------------------------
+# y = x @ W_sparseᵀ (serving orientation: W packed (O, K), x (Bx, K))
+# ---------------------------------------------------------------------------
+
+def _xwT_kernel(x_ref, values_ref, indices_ref, out_ref, *, m, n):
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    s = _scatter_matrix(values_ref[...], indices_ref[...], m, n,
+                        x_ref.dtype)                            # (Ot, M)
+    contrib = jax.lax.dot_general(
+        x_ref[...], s,
+        dimension_numbers=(((1,), (1,)), ((), ())),             # contract M
+        preferred_element_type=jnp.float32,
+    )                                                           # (Bt, Ot)
+    out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_b", "block_o", "interpret"),
+)
+def demm_xwT_pallas(
+    x: jax.Array,           # (Bx, K) dense activations
+    values: jax.Array,      # (O, G, N) packed weight
+    indices: jax.Array,     # (O, G, N) int32
+    cfg: SparsityConfig,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_o: int = DEFAULT_BLOCK_R,
+    interpret: bool = False,
+) -> jax.Array:
+    bx, k = x.shape
+    o, g, n = values.shape
+    m = cfg.m
+    assert k == g * m, (k, g, m)
+    assert n == cfg.n_effective, (n, cfg)
+    block_b = min(block_b, bx)
+    block_o = min(block_o, o)
+    assert bx % block_b == 0 and o % block_o == 0, (bx, o, block_b, block_o)
+
+    grid = (bx // block_b, o // block_o, g)
+    kernel = functools.partial(_xwT_kernel, m=m, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i, j, gg: (i, gg)),
+            pl.BlockSpec((block_o, 1, n), lambda i, j, gg: (j, gg, 0)),
+            pl.BlockSpec((block_o, 1, n), lambda i, j, gg: (j, gg, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, gg: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bx, o), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="demm_xwT",
+    )(x, values, indices)

@@ -1,0 +1,83 @@
+"""jit'd public ops over the DeMM kernels, with sparse-aware gradients.
+
+Backend dispatch:
+  * ``reference``        — pure-jnp decompress+matmul (XLA path; used inside
+                           distributed jit steps and on CPU).
+  * ``pallas``           — the Pallas TPU kernel (real hardware).
+  * ``pallas_interpret`` — the Pallas kernel in interpret mode (CPU checks).
+
+Gradients (custom_vjp on the xwT op):
+  dL/dx       = dy @ W_dense
+  dL/dvalues  = gather of (dyᵀ x) at the packed index positions — i.e. the
+                gradient of a sparse weight exists only at its non-zero
+                coordinates, which is what keeps DeMM serving and sparse
+                fine-tuning consistent.
+  indices are non-differentiable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import SparsityConfig, unpack
+from repro.kernels import ref as kref
+from repro.kernels.demm_spmm import demm_spmm_pallas, demm_xwT_pallas
+
+BACKENDS = ("reference", "pallas", "pallas_interpret")
+
+
+def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):
+    if backend == "reference":
+        return kref.xwT_ref(x, values, indices, cfg, w_shape)
+    if backend == "pallas":
+        return demm_xwT_pallas(x, values, indices, cfg, interpret=False)
+    if backend == "pallas_interpret":
+        return demm_xwT_pallas(x, values, indices, cfg, interpret=True)
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def demm_matmul_xwT(x, values, indices, cfg: SparsityConfig, w_shape,
+                    backend: str = "reference"):
+    """y = x @ W_sparseᵀ; x (B, K), W packed (O, G, Ne) for dense (O, K)."""
+    return _dispatch_xwT(x, values, indices, cfg, w_shape, backend)
+
+
+def _xwT_fwd(x, values, indices, cfg, w_shape, backend):
+    y = _dispatch_xwT(x, values, indices, cfg, w_shape, backend)
+    return y, (x, values, indices)
+
+
+def _xwT_bwd(cfg, w_shape, backend, res, dy):
+    x, values, indices = res
+    o, k = w_shape
+    m = cfg.m
+    g = k // m
+    w = unpack(values, indices, cfg, (o, k))                 # (O, K)
+    dx = jnp.dot(dy, w.astype(dy.dtype))                      # (B, K)
+    # dW = dyᵀ @ x, needed only at the packed coordinates.
+    dw = jnp.dot(dy.T.astype(jnp.float32), x.astype(jnp.float32))  # (O, K)
+    dw_g = dw.reshape(o, g, m)
+    dvalues = jnp.take_along_axis(dw_g, indices, axis=-1).astype(values.dtype)
+    # Padded slots (value 0 at index 0) must not accumulate gradient, or they
+    # would densify the pattern.
+    dvalues = jnp.where(values != 0, dvalues, jnp.zeros((), values.dtype))
+    return dx.astype(x.dtype), dvalues, None
+
+
+demm_matmul_xwT.defvjp(_xwT_fwd, _xwT_bwd)
+
+
+def demm_spmm(values, indices, b, cfg: SparsityConfig, a_shape,
+              backend: str = "reference"):
+    """C = A_sparse @ B (paper orientation)."""
+    if backend == "reference":
+        return kref.spmm_ref(values, indices, b, cfg, a_shape)
+    if backend == "pallas":
+        return demm_spmm_pallas(values, indices, b, cfg, interpret=False)
+    if backend == "pallas_interpret":
+        return demm_spmm_pallas(values, indices, b, cfg, interpret=True)
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the DeMM kernels.
+
+Every Pallas kernel in this package is validated with
+``np.testing.assert_allclose`` against these references across shape/dtype
+sweeps (see tests/test_demm_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import SparsityConfig, unpack
+
+
+def spmm_ref(values: jax.Array, indices: jax.Array, b: jax.Array,
+             cfg: SparsityConfig, a_shape) -> jax.Array:
+    """C = A_sparse @ B via unpack-to-dense then dense matmul (fp32 accum)."""
+    a = unpack(values, indices, cfg, tuple(a_shape))
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def xwT_ref(x: jax.Array, values: jax.Array, indices: jax.Array,
+            cfg: SparsityConfig, w_shape) -> jax.Array:
+    """y = x @ W_sparseᵀ via unpack-to-dense (fp32 accum)."""
+    w = unpack(values, indices, cfg, tuple(w_shape))
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)
+
+
+def block_spmm_ref(active_groups, values, indices, b, cfg: SparsityConfig,
+                   r: int) -> jax.Array:
+    """Oracle for the two-level block-sparse format: scatter every active
+    group back to dense, then matmul."""
+    rb, a_max, block_r, ne = values.shape
+    k, cd = b.shape
+    m = cfg.m
+    g = k // m
+    dense = jnp.zeros((rb, block_r, g, m), values.dtype)
+    iota = jnp.arange(m, dtype=jnp.int32)
+    onehot = (indices[..., None] == iota).astype(values.dtype)  # (RB,A,br,Ne,M)
+    per_slot = jnp.einsum("rabn,rabnm->rabm", values, onehot)    # (RB,A,br,M)
+    # scatter-add each active slot into its group (duplicate ids accumulate,
+    # matching the kernel's revisit-accumulate semantics)
+    def per_block(dense_b, ag_b, slot_b):
+        return dense_b.at[:, ag_b, :].add(jnp.swapaxes(slot_b, 0, 1))
+    dense = jax.vmap(per_block)(dense, active_groups, per_slot)
+    a = dense.reshape(r, k)
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)

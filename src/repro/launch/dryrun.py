@@ -1,0 +1,372 @@
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh)
+cell on the production mesh and extract memory / cost / collective analysis.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3_1b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--out results.jsonl]
+
+Each cell prints a JSON record:
+    memory_analysis   bytes-per-device breakdown (proves it fits)
+    cost_analysis     per-device HLO FLOPs / bytes accessed
+    collectives       per-device bytes by collective kind (parsed from HLO)
+    roofline          the three §Roofline terms in seconds
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax-importing import: jax locks the device count on
+#   first initialization (see the brief).
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    applicable_shapes,
+    get_arch,
+)
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.families import build_model
+from repro.optim import adamw
+from repro.sharding import context as shctx
+from repro.sharding.partitioning import (
+    batch_axes,
+    opt_state_specs,
+    param_specs,
+    shardings_for,
+)
+
+# TPU v5e hardware constants (the brief's §Roofline numbers)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+# ---------------------------------------------------------------------------
+# Decode-state sharding inference (probe-based, DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def _axis_of_change(a, b):
+    if not hasattr(a, "shape"):
+        return None
+    return next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y), None)
+
+
+def decode_state_specs(model, shape, mesh, *, seq_shard: bool):
+    """Infer PartitionSpecs for the decode state: batch axis over DP (or the
+    KV sequence axis over 'data' when batch=1), a model-axis dim preferring
+    heads over head_dim, found by divisibility."""
+    b = shape.global_batch
+    base = jax.eval_shape(lambda: model.init_decode_state(b, shape.seq_len))
+    probe_b = jax.eval_shape(
+        lambda: model.init_decode_state(b + 1, shape.seq_len))
+    probe_s = jax.eval_shape(
+        lambda: model.init_decode_state(b, shape.seq_len + 1))
+
+    tp = mesh.shape["model"]
+    dp_axes = batch_axes(mesh)
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
+    seq_axes = dp_axes  # when seq-sharding, use all DP axes
+
+    def one(leaf, pb, ps):
+        if not hasattr(leaf, "shape"):
+            return P()
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        batch_ax = _axis_of_change(leaf, pb)
+        seq_ax = _axis_of_change(leaf, ps)
+        used = set()
+        if seq_shard and seq_ax is not None and \
+                leaf.shape[seq_ax] % dp_total == 0:
+            parts[seq_ax] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+            used.add(seq_ax)
+        elif batch_ax is not None and leaf.shape[batch_ax] % dp_total == 0:
+            parts[batch_ax] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            used.add(batch_ax)
+        if batch_ax is not None:
+            used.add(batch_ax)
+        if seq_ax is not None:
+            used.add(seq_ax)
+        # model axis: prefer second-from-right (heads), then last (head_dim)
+        for ax in ([nd - 2, nd - 1] if nd >= 2 else []):
+            if ax in used or ax < 0:
+                continue
+            if leaf.shape[ax] % tp == 0 and leaf.shape[ax] >= tp:
+                parts[ax] = "model"
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, base, probe_b, probe_s), base
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _result_bytes(line: str) -> int:
+    """Total bytes of the op's result tuple/array on the lhs of '='."""
+    lhs = line.split(" = ", 1)
+    target = lhs[1] if len(lhs) == 2 else line
+    # take shapes up to the opcode's '(' operand list start
+    head = target.split("(", 1)[0]
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes moved per collective kind.
+
+    Ring-cost weighting: all-reduce counts 2× its payload (reduce-scatter +
+    all-gather phases); others count their result payload once.  Shapes in
+    an SPMD-partitioned module are already per-device."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        opcode_part = ls.split(" = ", 1)[1]
+        for kind in _COLL_KINDS:
+            # opcode appears right after the shape, e.g. "bf16[8,16] all-reduce("
+            if re.search(r"\]\{?[\d,]*\}?\s+%?" + kind + r"[.(]", opcode_part) \
+                    or re.search(r"\]\s+" + kind + r"\(", opcode_part):
+                nbytes = _result_bytes(ls)
+                mult = 2 if kind == "all-reduce" else 1
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += nbytes * mult
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               num_microbatches: int = 8, packed: bool = False,
+               opt_override=None, arch_override: dict | None = None):
+    cfg = get_arch(arch_id)
+    if arch_override:
+        cfg = dataclasses.replace(cfg, **arch_override)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    dp_axes = batch_axes(mesh)
+
+    seq_shard = shape.kind == "decode" and shape.global_batch == 1
+    ctx = shctx.make_context(mesh, num_kv_heads=cfg.num_kv_heads,
+                             num_heads=cfg.num_heads,
+                             seq_shard_cache=seq_shard)
+
+    tp = mesh.shape["model"]
+    kv_repl = (cfg.num_kv_heads % tp != 0 and cfg.num_heads % tp == 0
+               and shape.kind != "decode")
+    pshapes = specs_mod.param_shapes(model)
+    pspecs = param_specs(pshapes, attn_kv_replicated=kv_repl)
+    pshard = shardings_for(mesh, pspecs)
+
+    t0 = time.time()
+    with shctx.use_mesh(ctx):
+        if shape.kind == "train":
+            opt_cfg = opt_override or adamw.AdamWConfig()
+            ostate = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), pshapes)
+            dd = mesh.shape["data"]
+            zspecs = opt_state_specs(pspecs, pshapes, dd)
+            ospecs = adamw.AdamWState(
+                step=P(), m=zspecs, v=zspecs,
+                compression=(zspecs if opt_cfg.compression == "topk"
+                             else None))
+            oshard = shardings_for(mesh, ospecs)
+            batch = specs_mod.train_batch_specs(cfg, shape)
+            bshard = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P(dp_axes, *([None] * (len(s.shape) - 1)))), batch)
+            from repro.train.train_loop import make_train_step
+            nmb = num_microbatches
+            step_fn = make_train_step(model, opt_cfg, num_microbatches=nmb,
+                                      mode="masked")
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, bshard, None),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            ).lower(pshapes, ostate, batch, jnp.zeros((), jnp.int32))
+        elif shape.kind == "prefill":
+            batch = specs_mod.prefill_batch_specs(cfg, shape)
+            bshard = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P(dp_axes, *([None] * (len(s.shape) - 1)))), batch)
+
+            def prefill_fn(params, batch):
+                logits, _ = model.prefill(params, batch, mode="masked")
+                return logits
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(pshard, bshard),
+            ).lower(pshapes, batch)
+        else:  # decode
+            params_in = pshapes
+            if packed:
+                from repro.launch.pack_tree import pack_tree_shapes
+                params_in = pack_tree_shapes(model, pshapes)
+                pspecs = param_specs(params_in)
+                pshard = shardings_for(mesh, pspecs)
+            sspecs, sshapes = decode_state_specs(model, shape, mesh,
+                                                 seq_shard=seq_shard)
+            sshard = shardings_for(mesh, sspecs)
+            tok = specs_mod.decode_token_specs(shape)
+            tok_shard = NamedSharding(
+                mesh, P(dp_axes if shape.global_batch % ctx.dp_degree() == 0
+                        else None, None))
+            # serving baseline: dense weights (masks baked offline); packed =
+            # the paper's DeMM serving form
+            mode = "packed" if packed else "dense"
+
+            def decode_fn(params, state, tokens):
+                return model.decode_step(params, state, tokens, mode=mode)
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(pshard, sshard, tok_shard),
+                out_shardings=(None, sshard),
+                donate_argnums=(1,),
+            ).lower(params_in, sshapes, tok)
+
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # Loop-exact analysis: XLA's cost_analysis counts scan bodies ONCE; the
+    # weighted HLO walk multiplies by known_trip_count (hlo_analysis.py).
+    from repro.launch import hlo_analysis
+    exact = hlo_analysis.analyze(hlo)
+    coll = exact.to_dict()["collectives"]
+
+    flops = float(exact.flops)
+    bytes_acc = float(exact.bytes_accessed)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll["total_bytes"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    record = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "arch_override": arch_override or {},
+        "num_microbatches": num_microbatches,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "kind": shape.kind,
+        "packed": packed,
+        "compile_s": round(t1 - t0, 1),
+        "memory_analysis": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "temp_size_in_bytes", 0)) +
+            int(getattr(mem, "argument_size_in_bytes", 0)),
+        },
+        "cost_analysis": {"flops": flops, "bytes_accessed": bytes_acc,
+                          "xla_raw_flops": float(cost.get("flops", 0.0)),
+                          "unknown_trip_loops": exact.unknown_trip_loops},
+        "collectives": coll,
+        "roofline": dict(terms, dominant=dominant),
+        "model_flops": _model_flops(cfg, shape),
+    }
+    record["useful_flops_ratio"] = (
+        record["model_flops"] / (flops * _n_chips(multi_pod))
+        if flops else 0.0)
+    return record
+
+
+def _n_chips(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256
+
+
+def _model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per step; decode
+    processes global_batch tokens, train/prefill global_batch×seq."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * tokens)
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="decode cells: DeMM packed weights")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in applicable_shapes(get_arch(a)):
+                cells.append((a, s, False))
+                cells.append((a, s, True))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    sink = open(args.out, "a") if args.out else sys.stdout
+    ok = True
+    for arch, shape, mp in cells:
+        try:
+            rec = lower_cell(arch, shape, multi_pod=mp, packed=args.packed,
+                             num_microbatches=args.microbatches)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "pod2x16x16" if mp else "pod16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            ok = False
+        print(json.dumps(rec), file=sink, flush=True)
+    if args.out:
+        sink.close()
+    # error cells are recorded in the JSONL; exit 0 so drivers don't
+    # double-record
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Whole-model conversion to the DeMM packed serving form.
+
+``pack_tree(params)`` walks the param pytree and converts every sparse
+linear ({w, _sparse_m, _sparse_n}) to its packed {values, indices, shape}
+form; ``pack_tree_shapes`` is the eval_shape twin used by the dry-run."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import Static, pack_linear
+
+
+def _is_sparse_linear(node) -> bool:
+    return isinstance(node, dict) and "_sparse_m" in node and "w" in node
+
+
+def _pack_sparse_linear(node):
+    w = node["w"]
+    if w.ndim == 2:
+        return pack_linear(node)
+    # layer-stacked (L, ..., O, K): pack rows flat, restore the stack dims
+    lead = w.shape[:-2]
+    o, k = w.shape[-2], w.shape[-1]
+    out = pack_linear(dict(node, w=w.reshape(-1, k)))
+    out["values"] = out["values"].reshape(*lead, o, *out["values"].shape[1:])
+    out["indices"] = out["indices"].reshape(*lead, o, *out["indices"].shape[1:])
+    out["shape"] = Static((o, k))  # per-layer dense shape (post scan-slice)
+    return out
+
+
+def pack_tree(params):
+    if _is_sparse_linear(params):
+        return _pack_sparse_linear(params)
+    if isinstance(params, dict):
+        return {k: pack_tree(v) for k, v in params.items()}
+    return params
+
+
+def pack_tree_shapes(model, param_shapes):
+    """ShapeDtypeStruct tree of the packed params (no allocation)."""
+    return jax.eval_shape(pack_tree, param_shapes)

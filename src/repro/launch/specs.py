@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+No device allocation: params, optimizer state, decode states, and batches
+are all ``jax.eval_shape`` / ``ShapeDtypeStruct`` stand-ins (weak-type
+correct, shardable).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    gb, t = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "vision":
+        t_text = t - cfg.num_patches
+        return {
+            "tokens": sds((gb, t_text), jnp.int32),
+            "targets": sds((gb, t_text), jnp.int32),
+            "patch_embeds": sds((gb, cfg.num_patches, cfg.d_model),
+                                jnp.float32),
+        }
+    batch = {
+        "tokens": sds((gb, t), jnp.int32),
+        "targets": sds((gb, t), jnp.int32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = sds((gb, t // cfg.encoder_seq_divisor, cfg.d_model),
+                              jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b = train_batch_specs(cfg, shape)
+    b.pop("targets", None)
+    return b
+
+
+def decode_token_specs(shape: ShapeConfig):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def param_shapes(model) -> dict:
+    return jax.eval_shape(model.init,
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def decode_state_shapes(model, shape: ShapeConfig) -> dict:
+    return jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, shape.seq_len))

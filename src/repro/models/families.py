@@ -1,0 +1,509 @@
+"""EncDecLM (seamless-m4t), HybridLM (zamba2), XLSTMLM (xlstm).
+
+Same interface as DecoderLM (init / train_loss / prefill / decode_step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_embedding,
+    apply_linear,
+    apply_mlp,
+    apply_rmsnorm,
+    apply_unembedding,
+    dtype_of,
+    Static,
+    init_embedding,
+    init_linear,
+    init_mlp,
+    init_rmsnorm,
+)
+from repro.models.transformer import (
+    FULL_WINDOW,
+    _remat,
+    apply_tblock_seq,
+    init_tblock,
+    softmax_xent,
+)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless-m4t): audio-stub encoder + cross-attn decoder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EncDecLM:
+    cfg: ArchConfig
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        ks = jax.random.split(key, 6)
+        enc_layers = jax.vmap(
+            lambda k: init_tblock(k, cfg, dtype=dtype))(
+            jax.random.split(ks[0], cfg.encoder_layers))
+        dec_layers = jax.vmap(
+            lambda k: init_tblock(k, cfg, cross=True, dtype=dtype))(
+            jax.random.split(ks[1], cfg.num_layers))
+        return {
+            "frame_proj": init_linear(ks[2], cfg.d_model, cfg.d_model,
+                                      sparse=None, dtype=dtype),
+            "enc_layers": enc_layers,
+            "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+            "embed": init_embedding(ks[3], cfg.padded_vocab, cfg.d_model, dtype),
+            "unembed": init_embedding(ks[4], cfg.padded_vocab, cfg.d_model, dtype),
+            "dec_layers": dec_layers,
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def encode(self, params, frames, *, mode="masked", backend="reference"):
+        """frames: (B, S_src, D) stub audio embeddings."""
+        cfg = self.cfg
+        x = apply_linear(params["frame_proj"],
+                         frames.astype(dtype_of(cfg.compute_dtype)))
+        t = x.shape[1]
+
+        def body(x, blk):
+            x, _ = apply_tblock_seq(blk, x, cfg, window=FULL_WINDOW,
+                                    positions=jnp.arange(t), causal=False,
+                                    mode=mode, backend=backend)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
+        return apply_rmsnorm(params["enc_norm"], x)
+
+    def _decode_seq(self, params, tokens, enc_out, *, mode, backend):
+        cfg = self.cfg
+        x = apply_embedding(params["embed"], tokens).astype(enc_out.dtype)
+        t = x.shape[1]
+
+        def body(x, blk):
+            x, _ = apply_tblock_seq(blk, x, cfg, window=FULL_WINDOW,
+                                    positions=jnp.arange(t), enc_out=enc_out,
+                                    mode=mode, backend=backend)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
+        return apply_rmsnorm(params["final_norm"], x)
+
+    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
+        enc_out = self.encode(params, batch["frames"], mode=mode,
+                              backend=backend)
+        x = self._decode_seq(params, batch["tokens"], enc_out, mode=mode,
+                             backend=backend)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        loss = softmax_xent(logits, batch["targets"])
+        return loss, {"xent": loss}
+
+    def prefill(self, params, batch, *, max_len=None, mode="masked",
+                backend="reference"):
+        enc_out = self.encode(params, batch["frames"], mode=mode,
+                              backend=backend)
+        x = self._decode_seq(params, batch["tokens"], enc_out, mode=mode,
+                             backend=backend)
+        logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
+        b = x.shape[0]
+        state = self.init_decode_state(b, max_len or x.shape[1] + 1,
+                                       enc_len=enc_out.shape[1])
+        state["enc_out"] = enc_out
+        return logits, state
+
+    def init_decode_state(self, batch, max_len, enc_len=None,
+                          dtype=jnp.bfloat16):
+        cfg = self.cfg
+        hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        l = cfg.num_layers
+        enc_len = enc_len or max_len // cfg.encoder_seq_divisor
+        return {
+            "caches": {
+                "kind": Static("full"),
+                "k": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
+                "v": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
+            },
+            "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def decode_step(self, params, state, tokens, *, mode="masked",
+                    backend="reference"):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+        pos = state["pos"]
+        enc_out = state["enc_out"]
+        caches = state["caches"]
+
+        def body(x, layer):
+            blk, kc, vc = layer
+            h = apply_rmsnorm(blk["ln1"], x)
+            h, nc = attn.apply_attention_decode(
+                blk["attn"], h, {"k": kc, "v": vc}, pos,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=FULL_WINDOW, mode=mode, backend=backend)
+            x = x + h
+            h = apply_rmsnorm(blk["ln_x"], x)
+            h = attn.apply_attention(
+                blk["xattn"], h,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                causal=False, window=-1, kv_x=enc_out, mode=mode,
+                backend=backend)
+            x = x + h
+            h = apply_rmsnorm(blk["ln2"], x)
+            h = apply_mlp(blk["mlp"], h, mode=mode, backend=backend)
+            return x + h, (nc["k"], nc["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["dec_layers"], caches["k"],
+                                    caches["v"]))
+        x = apply_rmsnorm(params["final_norm"], x)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        return logits, {"caches": {"kind": Static("full"), "k": ks, "v": vs},
+                        "enc_out": enc_out, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): Mamba2 backbone + one SHARED attention+MLP block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HybridLM:
+    """Mamba2 backbone with ONE shared attention+MLP block applied after
+    every ``shared_attn_every``-th mamba layer.  The layer stack is scanned
+    as cond-free superblocks: n_periods blocks of (every) mamba layers +
+    one shared-attn application, plus a tail of leftover mamba layers —
+    this keeps HLO while-loops trip-count-exact for the roofline analysis."""
+
+    cfg: ArchConfig
+
+    def _ssm_kwargs(self):
+        s = self.cfg.ssm
+        return dict(expand=s.expand, state=s.state_dim, head_dim=s.head_dim)
+
+    def _layout(self):
+        period = self.cfg.shared_attn_every
+        n_p = self.cfg.num_layers // period
+        return period, n_p, self.cfg.num_layers - n_p * period
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        s = cfg.ssm
+        ks = jax.random.split(key, 5)
+        layers = jax.vmap(lambda k: {
+            "ln": init_rmsnorm(cfg.d_model, dtype),
+            "mamba": ssm_mod.init_mamba2(
+                k, cfg.d_model, expand=s.expand, state=s.state_dim,
+                head_dim=s.head_dim, conv=s.conv_dim,
+                sparse=cfg.sparsity if "mlp" in cfg.sparse_scope else None,
+                dtype=dtype),
+        })(jax.random.split(ks[0], cfg.num_layers))
+        return {
+            "embed": init_embedding(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+            "unembed": init_embedding(ks[2], cfg.padded_vocab, cfg.d_model, dtype),
+            "layers": layers,
+            "shared": init_tblock(ks[3], cfg, dtype=dtype),  # ONE param set
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def _split_layers(self, params):
+        period, n_p, n_tail = self._layout()
+        stacked = jax.tree.map(
+            lambda a: a[:n_p * period].reshape(n_p, period, *a.shape[1:]),
+            params["layers"])
+        tail = jax.tree.map(lambda a: a[n_p * period:], params["layers"])
+        return stacked, tail
+
+    def _mamba_layer(self, blk, x, *, mode, backend):
+        cfg = self.cfg
+        h = apply_rmsnorm(blk["ln"], x)
+        h = ssm_mod.apply_mamba2_seq(
+            blk["mamba"], h, chunk=cfg.ssm.chunk, mode=mode,
+            backend=backend, **self._ssm_kwargs())
+        return x + h
+
+    def _seq(self, params, tokens, *, mode, backend):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+        t = x.shape[1]
+        period, n_p, n_tail = self._layout()
+        stacked, tail = self._split_layers(params)
+        shared = params["shared"]
+
+        def body(x, blks):
+            for i in range(period):
+                blk = jax.tree.map(lambda a: a[i], blks)
+                x = self._mamba_layer(blk, x, mode=mode, backend=backend)
+            x, _ = apply_tblock_seq(shared, x, cfg, window=FULL_WINDOW,
+                                    positions=jnp.arange(t), mode=mode,
+                                    backend=backend)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, stacked)
+        for i in range(n_tail):
+            blk = jax.tree.map(lambda a: a[i], tail)
+            x = self._mamba_layer(blk, x, mode=mode, backend=backend)
+        return apply_rmsnorm(params["final_norm"], x)
+
+    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
+        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        loss = softmax_xent(logits, batch["targets"])
+        return loss, {"xent": loss}
+
+    def prefill(self, params, batch, *, max_len=None, mode="masked",
+                backend="reference"):
+        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+        logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
+        return logits, self.init_decode_state(
+            x.shape[0], max_len or x.shape[1] + 1)
+
+    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        heads = di // s.head_dim
+        period, n_p, n_tail = self._layout()
+        hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+
+        def ssm_state(*lead):
+            return {
+                "h": jnp.zeros((*lead, batch, heads, s.head_dim, s.state_dim),
+                               jnp.float32),
+                "conv": jnp.zeros((*lead, batch, s.conv_dim - 1,
+                                   di + 2 * s.state_dim), dtype),
+            }
+
+        return {
+            "ssm": ssm_state(n_p, period),
+            "ssm_tail": ssm_state(max(n_tail, 1)),
+            "attn": {
+                "k": jnp.zeros((n_p, batch, max_len, hkv, dh), dtype),
+                "v": jnp.zeros((n_p, batch, max_len, hkv, dh), dtype),
+            },
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def _mamba_step(self, blk, x, st, *, mode, backend):
+        h = apply_rmsnorm(blk["ln"], x)
+        h, st2 = ssm_mod.apply_mamba2_step(
+            blk["mamba"], h, st, mode=mode, backend=backend,
+            **self._ssm_kwargs())
+        return x + h, st2
+
+    def decode_step(self, params, state, tokens, *, mode="masked",
+                    backend="reference"):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+        pos = state["pos"]
+        period, n_p, n_tail = self._layout()
+        stacked, tail = self._split_layers(params)
+        shared = params["shared"]
+
+        def body(x, per):
+            blks, sst, kc, vc = per
+            new_s = []
+            for i in range(period):
+                blk = jax.tree.map(lambda a: a[i], blks)
+                sti = jax.tree.map(lambda a: a[i], sst)
+                x, st2 = self._mamba_step(blk, x, sti, mode=mode,
+                                          backend=backend)
+                new_s.append(st2)
+            h = apply_rmsnorm(shared["ln1"], x)
+            h, nc = attn.apply_attention_decode(
+                shared["attn"], h, {"k": kc, "v": vc}, pos,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=FULL_WINDOW, mode=mode, backend=backend)
+            x = x + h
+            h = apply_rmsnorm(shared["ln2"], x)
+            h = apply_mlp(shared["mlp"], h, mode=mode, backend=backend)
+            x = x + h
+            stacked_s = jax.tree.map(lambda *a: jnp.stack(a), *new_s)
+            return x, (stacked_s, nc["k"], nc["v"])
+
+        x, (sst, ks, vs) = jax.lax.scan(
+            body, x, (stacked, state["ssm"], state["attn"]["k"],
+                      state["attn"]["v"]))
+
+        new_tail = []
+        for i in range(n_tail):
+            blk = jax.tree.map(lambda a: a[i], tail)
+            sti = jax.tree.map(lambda a: a[i], state["ssm_tail"])
+            x, st2 = self._mamba_step(blk, x, sti, mode=mode, backend=backend)
+            new_tail.append(st2)
+        tail_s = (jax.tree.map(lambda *a: jnp.stack(a), *new_tail)
+                  if new_tail else state["ssm_tail"])
+
+        x = apply_rmsnorm(params["final_norm"], x)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        return logits, {"ssm": sst, "ssm_tail": tail_s,
+                        "attn": {"k": ks, "v": vs}, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: periodic superblocks of (slstm_every - 1) mLSTM + 1 sLSTM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class XLSTMLM:
+    cfg: ArchConfig
+
+    @property
+    def _period(self):
+        return self.cfg.ssm.slstm_every
+
+    @property
+    def _n_periods(self):
+        assert self.cfg.num_layers % self._period == 0, \
+            "xlstm layer count must be a multiple of slstm_every"
+        return self.cfg.num_layers // self._period
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        sp = cfg.sparsity if "mlp" in cfg.sparse_scope else None
+        ks = jax.random.split(key, 4)
+        n_m = self._period - 1
+
+        def init_period(k):
+            kk = jax.random.split(k, n_m + 1)
+            return {
+                "mlstm": jax.vmap(lambda kk_: {
+                    "ln": init_rmsnorm(cfg.d_model, dtype),
+                    "blk": ssm_mod.init_mlstm(kk_, cfg.d_model,
+                                              heads=cfg.num_heads,
+                                              sparse=sp, dtype=dtype),
+                })(kk[:n_m]),
+                "slstm": {
+                    "ln": init_rmsnorm(cfg.d_model, dtype),
+                    "blk": ssm_mod.init_slstm(kk[n_m], cfg.d_model,
+                                              heads=cfg.num_heads,
+                                              sparse=sp, dtype=dtype),
+                },
+            }
+
+        periods = jax.vmap(init_period)(
+            jax.random.split(ks[0], self._n_periods))
+        return {
+            "embed": init_embedding(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+            "unembed": init_embedding(ks[2], cfg.padded_vocab, cfg.d_model, dtype),
+            "periods": periods,
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def _seq(self, params, tokens, *, mode, backend):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+        n_m = self._period - 1
+
+        def body(x, period):
+            for i in range(n_m):
+                sub = jax.tree.map(lambda a: a[i], period["mlstm"])
+                h = apply_rmsnorm(sub["ln"], x)
+                x = x + ssm_mod.apply_mlstm_seq(
+                    sub["blk"], h, heads=cfg.num_heads, chunk=cfg.ssm.chunk,
+                    mode=mode, backend=backend)
+            h = apply_rmsnorm(period["slstm"]["ln"], x)
+            x = x + ssm_mod.apply_slstm_seq(
+                period["slstm"]["blk"], h, heads=cfg.num_heads, mode=mode,
+                backend=backend)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["periods"])
+        return apply_rmsnorm(params["final_norm"], x)
+
+    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
+        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        loss = softmax_xent(logits, batch["targets"])
+        return loss, {"xent": loss}
+
+    def prefill(self, params, batch, *, max_len=None, mode="masked",
+                backend="reference"):
+        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+        logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
+        return logits, self.init_decode_state(x.shape[0], max_len or 1)
+
+    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        d = cfg.d_model
+        np_ = self._n_periods
+        n_m = self._period - 1
+        pf = 2
+        di = pf * d
+        dh = di // cfg.num_heads
+        dhs = d // cfg.num_heads
+        conv = cfg.ssm.conv_dim if hasattr(cfg.ssm, "conv_dim") else 4
+        return {
+            "mlstm": {
+                "C": jnp.zeros((np_, n_m, batch, cfg.num_heads, dh, dh), jnp.float32),
+                "n": jnp.zeros((np_, n_m, batch, cfg.num_heads, dh), jnp.float32),
+                "m": jnp.full((np_, n_m, batch, cfg.num_heads), -1e30, jnp.float32),
+                "conv": jnp.zeros((np_, n_m, batch, conv - 1, di), dtype),
+            },
+            "slstm": {
+                "c": jnp.zeros((np_, batch, cfg.num_heads, dhs), jnp.float32),
+                "n": jnp.zeros((np_, batch, cfg.num_heads, dhs), jnp.float32),
+                "h": jnp.zeros((np_, batch, cfg.num_heads, dhs), jnp.float32),
+                "m": jnp.full((np_, batch, cfg.num_heads, dhs), -1e30, jnp.float32),
+            },
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def decode_step(self, params, state, tokens, *, mode="masked",
+                    backend="reference"):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+        n_m = self._period - 1
+
+        def body(x, layer):
+            period, mst, sst = layer
+            new_m = []
+            for i in range(n_m):
+                sub = jax.tree.map(lambda a: a[i], period["mlstm"])
+                sti = jax.tree.map(lambda a: a[i], mst)
+                h = apply_rmsnorm(sub["ln"], x)
+                out, st2 = ssm_mod.apply_mlstm_step(
+                    sub["blk"], h, sti, heads=cfg.num_heads, mode=mode,
+                    backend=backend)
+                x = x + out
+                new_m.append(st2)
+            h = apply_rmsnorm(period["slstm"]["ln"], x)
+            out, sst2 = ssm_mod.apply_slstm_step(
+                period["slstm"]["blk"], h, sst, heads=cfg.num_heads,
+                mode=mode, backend=backend)
+            x = x + out
+            stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+            return x, (stacked_m, sst2)
+
+        x, (mst, sst) = jax.lax.scan(
+            body, x, (params["periods"], state["mlstm"], state["slstm"]))
+        x = apply_rmsnorm(params["final_norm"], x)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        return logits, {"mlstm": mst, "slstm": sst, "pos": state["pos"] + 1}
+
+
+def build_model(cfg: ArchConfig):
+    from repro.models.transformer import DecoderLM
+
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    return DecoderLM(cfg)

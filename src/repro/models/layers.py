@@ -1,0 +1,189 @@
+"""Shared layer primitives: norms, RoPE, embeddings, (sparse) MLP.
+
+Pure-functional: params are nested dicts of arrays; every ``init_*`` has a
+matching ``apply_*``.  Weight matrices that fall inside the arch's
+``sparse_scope`` are created through the DeMM SparseLinear paths — masked
+dense for training, packed for serving (repro.core.sparse_linear).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear as sl
+from repro.core.pruning import masked_weight
+from repro.core.sparsity import SparsityConfig
+from repro.configs.base import choose_group
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+@jax.tree_util.register_static
+class Static:
+    """Hashable static metadata stored inside a params pytree (not traced)."""
+
+    def __init__(self, value):
+        self.value = value
+
+    def __eq__(self, other):
+        return isinstance(other, Static) and self.value == other.value
+
+    def __hash__(self):
+        return hash(("Static", self.value))
+
+    def __repr__(self):
+        return f"Static({self.value!r})"
+
+
+# ---------------------------------------------------------------------------
+# Linear with optional DeMM sparsity
+# ---------------------------------------------------------------------------
+
+PRODUCTION_TP = 16  # group boundaries must align to TP shards (DESIGN.md §4)
+
+
+def init_linear(key, in_f: int, out_f: int, *, sparse: Optional[SparsityConfig],
+                dtype=jnp.float32, name: str = "linear"):
+    """Weight (out_f, in_f).  When ``sparse`` is set, the effective group
+    config is adapted to the contraction dim (choose_group) and the weight is
+    initialized pre-pruned to the pattern.
+
+    The group size M must divide the per-TP-shard slice of the contraction
+    dim (row-parallel weights shard K over 'model'): otherwise computing the
+    N:M mask forces an all-gather of the weight.  We therefore align M to
+    ``in_f // PRODUCTION_TP`` whenever the dim is TP-divisible."""
+    if sparse is not None:
+        k_align = in_f // PRODUCTION_TP if in_f % PRODUCTION_TP == 0 else in_f
+        cfg = choose_group(k_align, sparse.density, sparse.m)
+        p = sl.init_sparse(key, in_f, out_f, cfg, dtype)
+        p["_sparse_m"] = Static(cfg.m)   # static metadata (not traced)
+        p["_sparse_n"] = Static(cfg.n)
+        return p
+    return sl.init_dense(key, in_f, out_f, dtype)
+
+
+def apply_linear(params, x, *, mode: str = "masked", backend: str = "reference"):
+    """mode: dense | masked (train) | packed (serve)."""
+    if "_sparse_m" not in params and "values" not in params:
+        return sl.apply_dense(params, x)
+    if "values" in params:  # packed serving form
+        cfg = SparsityConfig(params["_sparse_n"].value,
+                             params["_sparse_m"].value, 1)
+        return sl.apply_packed(params, x, cfg, backend=backend)
+    cfg = SparsityConfig(params["_sparse_n"].value, params["_sparse_m"].value, 1)
+    if mode == "dense":
+        return sl.apply_dense(params, x)
+    return sl.apply_masked(params, x, cfg)
+
+
+def pack_linear(params):
+    """Convert a (sparse) trained linear to the packed DeMM serving form."""
+    if "_sparse_m" not in params:
+        return params
+    cfg = SparsityConfig(params["_sparse_n"].value, params["_sparse_m"].value, 1)
+    out = sl.pack_params(params, cfg)
+    out["_sparse_m"] = Static(cfg.m)
+    out["_sparse_n"] = Static(cfg.n)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, Dh); positions: (B, T) or (T,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,T,Dh/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def apply_embedding(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def apply_unembedding(params, x, true_vocab: Optional[int] = None):
+    """Logits = x @ tableᵀ (vocab-sharded over 'model').  When the table is
+    padded (padded_vocab > true_vocab), the padded columns are masked to a
+    large negative so neither the loss nor greedy decode can select them."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+    v = logits.shape[-1]
+    if true_vocab is not None and true_vocab < v:
+        pad_mask = jnp.arange(v) >= true_vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (dense or DeMM-sparse)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, *, sparse, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, d_ff, sparse=sparse, dtype=dtype),
+        "up": init_linear(k2, d, d_ff, sparse=sparse, dtype=dtype),
+        "down": init_linear(k3, d_ff, d, sparse=sparse, dtype=dtype),
+    }
+
+
+def apply_mlp(params, x, *, mode="masked", backend="reference"):
+    g = apply_linear(params["gate"], x, mode=mode, backend=backend)
+    u = apply_linear(params["up"], x, mode=mode, backend=backend)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u.astype(x.dtype)
+    return apply_linear(params["down"], h, mode=mode, backend=backend)

@@ -1,0 +1,381 @@
+"""State-space mixers: Mamba2 (SSD chunked form) and xLSTM (mLSTM + sLSTM).
+
+All mixers expose three entry points with a common carry convention:
+  init_*           — parameters
+  apply_*_seq      — full-sequence (train / prefill): chunked, MXU-friendly
+  apply_*_step     — single-token decode with an O(1) recurrent state
+
+Mamba2 follows the SSD formulation: within a chunk the recurrence is
+evaluated as a decay-masked attention-like matmul (C·Bᵀ ⊙ L) and states are
+carried across chunks — this is the TPU-friendly parallel form.  The mLSTM
+chunked form is analogous (gated linear attention with a log-space
+stabilizer); sLSTM is inherently sequential (paper's own statement) and uses
+a time scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, init_linear, init_rmsnorm, apply_rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2's backbone mixer)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, d: int, *, expand=2, state=64, head_dim=64, conv=4,
+                sparse=None, dtype=jnp.float32):
+    di = expand * d
+    heads = di // head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (di), x (di), B (state), C (state), dt (heads)]
+        "in_proj": init_linear(ks[0], d, 2 * di + 2 * state + heads,
+                               sparse=sparse, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (conv, di + 2 * state), dtype) * 0.1,
+        "A_log": jnp.zeros((heads,), jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": init_linear(ks[2], di, d, sparse=sparse, dtype=dtype),
+    }
+
+
+def _mamba2_split(params, u, *, di, state, heads, mode, backend):
+    zxbcdt = apply_linear(params["in_proj"], u, mode=mode, backend=backend)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return z, xbc, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along T.  x: (B, T, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_mamba2_seq(params, u, *, expand=2, state=64, head_dim=64,
+                     chunk=128, mode="masked", backend="reference"):
+    """Full-sequence Mamba2 (SSD chunked).  u: (B, T, D) -> (B, T, D)."""
+    b, t, d = u.shape
+    di = expand * d
+    heads = di // head_dim
+    z, xbc, dt = _mamba2_split(params, u, di=di, state=state, heads=heads,
+                               mode=mode, backend=backend)
+    xbc = _causal_conv(xbc, params["conv_w"])
+    x, bmat, cmat = jnp.split(xbc, [di, di + state], axis=-1)
+    x = x.reshape(b, t, heads, head_dim)
+    a = -jnp.exp(params["A_log"])                      # (H,) negative
+    log_a = (dt * a).astype(jnp.float32)               # (B, T, H) log decay
+
+    # pad to chunk multiple
+    nc = -(-t // chunk)
+    tp = nc * chunk
+    pad = ((0, 0), (0, tp - t))
+    xp = jnp.pad(x, pad + ((0, 0), (0, 0))).reshape(b, nc, chunk, heads, head_dim)
+    bp = jnp.pad(bmat, pad + ((0, 0),)).reshape(b, nc, chunk, state)
+    cp = jnp.pad(cmat, pad + ((0, 0),)).reshape(b, nc, chunk, state)
+    dtp = jnp.pad(dt, pad + ((0, 0),)).reshape(b, nc, chunk, heads)
+    lap = jnp.pad(log_a, pad + ((0, 0),)).reshape(b, nc, chunk, heads)
+
+    def chunk_step(h_in, inp):
+        xc, bc, cc, dtc, lac = inp                     # per-chunk slices
+        # cumulative decays within the chunk
+        cum = jnp.cumsum(lac, axis=1)                  # (B, c, H)
+        total = cum[:, -1]                             # (B, H)
+        # intra-chunk: attention-like with decay mask
+        # L[t,s] = exp(cum[t]-cum[s]) for s<=t else 0
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]     # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+        scores = jnp.einsum("btn,bsn->bts", cc, bc)[..., None] * decay
+        y_intra = jnp.einsum("btsh,bsh,bshp->bthp", scores,
+                             dtc, xc.astype(jnp.float32))
+        # contribution of the carried state
+        y_state = jnp.einsum("btn,bhpn,bth->bthp", cc, h_in,
+                             jnp.exp(cum))
+        # new carried state
+        w_s = jnp.exp(total[:, None] - cum)            # (B,c,H)
+        h_new = h_in * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bsh,bshp,bsn->bhpn", dtc * w_s, xc.astype(jnp.float32), bc)
+        return h_new, y_intra + y_state
+
+    h0 = jnp.zeros((b, heads, head_dim, state), jnp.float32)
+    inputs = (xp.swapaxes(0, 1), bp.swapaxes(0, 1), cp.swapaxes(0, 1),
+              dtp.swapaxes(0, 1), lap.swapaxes(0, 1))
+    _, ys = jax.lax.scan(chunk_step, h0, inputs)       # (nc, B, c, H, P)
+    y = ys.swapaxes(0, 1).reshape(b, tp, heads, head_dim)[:, :t]
+    y = y + x.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(u.dtype)
+    y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(u.dtype)
+    return apply_linear(params["out_proj"], y, mode=mode, backend=backend)
+
+
+def init_mamba2_state(batch, d, *, expand=2, state=64, head_dim=64, conv=4,
+                      dtype=jnp.float32):
+    di = expand * d
+    heads = di // head_dim
+    return {
+        "h": jnp.zeros((batch, heads, head_dim, state), jnp.float32),
+        "conv": jnp.zeros((batch, conv - 1, di + 2 * state), dtype),
+    }
+
+
+def apply_mamba2_step(params, u, ssm_state, *, expand=2, state=64,
+                      head_dim=64, mode="masked", backend="reference"):
+    """Single-token decode.  u: (B, 1, D); O(1) state update."""
+    b, _, d = u.shape
+    di = expand * d
+    heads = di // head_dim
+    z, xbc, dt = _mamba2_split(params, u, di=di, state=state, heads=heads,
+                               mode=mode, backend=backend)
+    # causal conv over the carried window
+    hist = jnp.concatenate([ssm_state["conv"], xbc], axis=1)  # (B, K, C)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu((hist * w[None]).sum(1,).astype(jnp.float32)
+                           ).astype(u.dtype)[:, None, :]
+    new_conv = hist[:, 1:]
+    x, bmat, cmat = jnp.split(conv_out, [di, di + state], axis=-1)
+    x = x.reshape(b, heads, head_dim)
+    dt1 = dt[:, 0]                                      # (B, H)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt1 * a)                            # (B, H)
+    h = ssm_state["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, x.astype(jnp.float32), bmat[:, 0])
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], h)
+    y = y + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(u.dtype)
+    out = apply_linear(params["out_proj"], y, mode=mode, backend=backend)
+    return out, {"h": h, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM's matrix-memory block)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, *, heads=4, pf=2, conv=4, sparse=None,
+               dtype=jnp.float32):
+    di = pf * d
+    dh = di // heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up": init_linear(ks[0], d, 2 * di, sparse=sparse, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (conv, di), dtype) * 0.1,
+        "wq": init_linear(ks[2], di, di, sparse=sparse, dtype=dtype),
+        "wk": init_linear(ks[3], di, di, sparse=sparse, dtype=dtype),
+        "wv": init_linear(ks[4], di, di, sparse=sparse, dtype=dtype),
+        "w_if": init_linear(ks[5], di, 2 * heads, sparse=None, dtype=dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "down": init_linear(ks[6], di, d, sparse=sparse, dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(params, xm, *, heads, mode, backend):
+    b, t, di = xm.shape
+    dh = di // heads
+    conv_x = _causal_conv(xm, params["conv_w"])
+    q = apply_linear(params["wq"], conv_x, mode=mode, backend=backend)
+    k = apply_linear(params["wk"], conv_x, mode=mode, backend=backend)
+    v = apply_linear(params["wv"], xm, mode=mode, backend=backend)
+    gif = apply_linear(params["w_if"], xm, mode=mode, backend=backend)
+    i_pre, f_pre = jnp.split(gif.astype(jnp.float32), 2, axis=-1)  # (B,T,H)
+    q = q.reshape(b, t, heads, dh)
+    k = k.reshape(b, t, heads, dh) * dh ** -0.5
+    v = v.reshape(b, t, heads, dh)
+    log_f = -jax.nn.softplus(-f_pre)       # log sigmoid(f)
+    return q, k, v, i_pre, log_f
+
+
+def apply_mlstm_seq(params, x, *, heads=4, pf=2, chunk=128, mode="masked",
+                    backend="reference"):
+    """Full-sequence mLSTM via the stabilized *chunked* parallel form:
+    within a chunk, a decay-masked attention-like matmul; across chunks, the
+    (C, n, m) matrix-memory carry — O(T·chunk) memory, MXU-friendly."""
+    b, t, d = x.shape
+    up = apply_linear(params["up"], x, mode=mode, backend=backend)
+    xm, z = jnp.split(up, 2, axis=-1)
+    di = xm.shape[-1]
+    dh = di // heads
+    q, k, v, i_pre, log_f = _mlstm_qkvif(params, xm, heads=heads, mode=mode,
+                                         backend=backend)
+    c = min(chunk, t)
+    nc = -(-t // c)
+    tp = nc * c
+    padt = ((0, 0), (0, tp - t))
+    qp = jnp.pad(q, padt + ((0, 0), (0, 0))).reshape(b, nc, c, heads, dh)
+    kp = jnp.pad(k, padt + ((0, 0), (0, 0))).reshape(b, nc, c, heads, dh)
+    vp = jnp.pad(v, padt + ((0, 0), (0, 0))).reshape(b, nc, c, heads, dh)
+    # padded steps must not contribute: i -> -inf, log_f -> 0
+    ip = jnp.pad(i_pre, padt + ((0, 0),), constant_values=-1e30
+                 ).reshape(b, nc, c, heads)
+    fp = jnp.pad(log_f, padt + ((0, 0),)).reshape(b, nc, c, heads)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, inp):
+        C_p, n_p, m_p = carry                          # (B,H,dh,dh) (B,H,dh) (B,H)
+        qc, kc, vc, ic, fc = inp
+        qc = qc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        cum = jnp.cumsum(fc, axis=1)                   # (B,c,H)
+        total = cum[:, -1]                             # (B,H)
+        # intra-chunk stabilized decay D[t,s] = cum[t]-cum[s]+i_s  (s<=t)
+        dmat = cum[:, :, None, :] - cum[:, None, :, :] + ic[:, None, :, :]
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)                # (B,c,H)
+        m_state = cum + m_p[:, None, :]                # carried stabilizer
+        m_t = jnp.maximum(m_intra, m_state)            # (B,c,H)
+        dstab = jnp.exp(dmat - m_t[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * dstab
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        # n accumulates k weighted by the same decays
+        n_intra = jnp.einsum("btsh,bshd->bthd", dstab, kc)
+        w_state = jnp.exp(m_state - m_t)               # (B,c,H)
+        y_state = jnp.einsum("bthd,bhde->bthe", qc, C_p) * w_state[..., None]
+        n_state = n_p[:, None] * w_state[..., None]    # (B,c,H,dh)
+        n_t = n_intra + n_state
+        den = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", qc, n_t)),
+                          jnp.exp(-m_t))
+        y = (y_intra + y_state) / den[..., None]
+        # chunk-end carry
+        m_new = jnp.maximum(m_p + total,
+                            jnp.max(total[:, None] - cum + ic, axis=1))
+        w_kv = jnp.exp(total[:, None] - cum + ic - m_new[:, None])  # (B,c,H)
+        C_new = C_p * jnp.exp(m_p + total - m_new)[..., None, None] + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w_kv, kc, vc)
+        n_new = n_p * jnp.exp(m_p + total - m_new)[..., None] + \
+            jnp.einsum("bsh,bshd->bhd", w_kv, kc)
+        return (C_new, n_new, m_new), y
+
+    carry0 = (jnp.zeros((b, heads, dh, dh), jnp.float32),
+              jnp.zeros((b, heads, dh), jnp.float32),
+              jnp.full((b, heads), -1e30, jnp.float32))
+    inputs = tuple(a.swapaxes(0, 1) for a in (qp, kp, vp, ip, fp))
+    _, ys = jax.lax.scan(chunk_step, carry0, inputs)   # (nc,B,c,H,dh)
+    y = ys.swapaxes(0, 1).reshape(b, tp, heads, dh)[:, :t]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    return apply_linear(params["down"], y, mode=mode, backend=backend)
+
+
+def init_mlstm_state(batch, d, *, heads=4, pf=2, conv=4, dtype=jnp.float32):
+    di = pf * d
+    dh = di // heads
+    return {
+        "C": jnp.zeros((batch, heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, heads, dh), jnp.float32),
+        "m": jnp.full((batch, heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, conv - 1, di), dtype),
+    }
+
+
+def apply_mlstm_step(params, x, st, *, heads=4, pf=2, mode="masked",
+                     backend="reference"):
+    b, _, d = x.shape
+    up = apply_linear(params["up"], x, mode=mode, backend=backend)
+    xm, z = jnp.split(up, 2, axis=-1)
+    di = xm.shape[-1]
+    dh = di // heads
+    hist = jnp.concatenate([st["conv"], xm], axis=1)
+    conv_x = jax.nn.silu((hist * params["conv_w"][None]).sum(1)
+                         .astype(jnp.float32)).astype(x.dtype)[:, None]
+    q = apply_linear(params["wq"], conv_x, mode=mode, backend=backend)
+    k = apply_linear(params["wk"], conv_x, mode=mode, backend=backend)
+    v = apply_linear(params["wv"], xm, mode=mode, backend=backend)
+    gif = apply_linear(params["w_if"], xm, mode=mode, backend=backend)
+    i_pre, f_pre = jnp.split(gif[:, 0].astype(jnp.float32), 2, axis=-1)
+    log_f = -jax.nn.softplus(-f_pre)                    # (B,H)
+    q = q.reshape(b, heads, dh).astype(jnp.float32)
+    k = k.reshape(b, heads, dh).astype(jnp.float32) * dh ** -0.5
+    v = v.reshape(b, heads, dh).astype(jnp.float32)
+    m_new = jnp.maximum(log_f + st["m"], i_pre)
+    f_eff = jnp.exp(log_f + st["m"] - m_new)
+    i_eff = jnp.exp(i_pre - m_new)
+    C = st["C"] * f_eff[..., None, None] + i_eff[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = st["n"] * f_eff[..., None] + i_eff[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, di).astype(x.dtype)
+    y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    out = apply_linear(params["down"], y, mode=mode, backend=backend)
+    return out, {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM's scalar-memory block; sequential by construction)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d: int, *, heads=4, sparse=None, dtype=jnp.float32):
+    dh = d // heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": init_linear(ks[0], d, 4 * d, sparse=sparse, dtype=dtype),
+        # block-diagonal recurrent weights, one (4dh, dh) block per head
+        "r": jax.random.normal(ks[1], (heads, 4 * dh, dh), dtype) * 0.1,
+        "norm": init_rmsnorm(d, dtype),
+        "down": init_linear(ks[2], d, d, sparse=sparse, dtype=dtype),
+    }
+
+
+def init_slstm_state(batch, d, *, heads=4, dtype=jnp.float32):
+    dh = d // heads
+    z = lambda: jnp.zeros((batch, heads, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, heads, dh), -1e30, jnp.float32)}
+
+
+def _slstm_cell(params, wx_t, st, *, heads):
+    """wx_t: (B, 4D) pre-computed input projection for one step."""
+    b = wx_t.shape[0]
+    d4 = wx_t.shape[-1]
+    dh = d4 // 4 // heads
+    rec = jnp.einsum("bhd,hgd->bhg", st["h"].astype(params["r"].dtype),
+                     params["r"]).astype(jnp.float32)   # (B,H,4dh)
+    pre = wx_t.reshape(b, heads, 4 * dh).astype(jnp.float32) + rec
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + st["m"], i_pre)
+    i_eff = jnp.exp(i_pre - m_new)
+    f_eff = jnp.exp(log_f + st["m"] - m_new)
+    c = f_eff * st["c"] + i_eff * z
+    n = jnp.maximum(f_eff * st["n"] + i_eff, 1e-6)
+    h = o * c / n
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def apply_slstm_seq(params, x, *, heads=4, mode="masked", backend="reference"):
+    b, t, d = x.shape
+    wx = apply_linear(params["w_in"], x, mode=mode, backend=backend)
+
+    def step(st, wx_t):
+        st2 = _slstm_cell(params, wx_t, st, heads=heads)
+        return st2, st2["h"]
+
+    st0 = init_slstm_state(b, d, heads=heads)
+    _, hs = jax.lax.scan(step, st0, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, t, d).astype(x.dtype)
+    y = apply_rmsnorm(params["norm"], y)
+    return apply_linear(params["down"], y, mode=mode, backend=backend)
+
+
+def apply_slstm_step(params, x, st, *, heads=4, mode="masked",
+                     backend="reference"):
+    b, _, d = x.shape
+    wx = apply_linear(params["w_in"], x, mode=mode, backend=backend)[:, 0]
+    st2 = _slstm_cell(params, wx, st, heads=heads)
+    y = st2["h"].reshape(b, 1, d).astype(x.dtype)
+    y = apply_rmsnorm(params["norm"], y)
+    return apply_linear(params["down"], y, mode=mode, backend=backend), st2

@@ -1,0 +1,463 @@
+"""Model assembly for all assigned architecture families.
+
+Four families share one functional interface:
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss, metrics = model.train_loss(params, batch, mode=...)
+    logits, state = model.prefill(params, inputs)
+    logits, state = model.decode_step(params, state, tokens)
+
+* ``DecoderLM``   — dense / moe / vlm (vision stub prepends patch embeddings)
+* ``EncDecLM``    — seamless-m4t (audio-stub encoder + cross-attn decoder)
+* ``HybridLM``    — zamba2 (Mamba2 backbone + shared attention block)
+* ``XLSTMLM``     — xlstm (periodic sLSTM/mLSTM superblocks)
+
+Layers are stacked and scanned (``jax.lax.scan``) with ``jax.checkpoint``
+remat so the 81-layer/48-layer configs compile to compact HLO.  Layer-type
+variation (gemma3 local:global, zamba shared-attn sites) is handled with
+per-layer window values (train) and cond-free superblock scans (decode), so
+every HLO while-loop carries an exact known_trip_count for the roofline.
+
+Decode caches:
+* full-attention layers — (B, S, Hkv, Dh) append caches;
+* windowed layers — (B, W, Hkv, Dh) ring buffers with per-slot positions;
+* SSM layers — O(1) recurrent states.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_embedding,
+    apply_linear,
+    apply_mlp,
+    apply_rmsnorm,
+    apply_rope,
+    apply_unembedding,
+    dtype_of,
+    Static,
+    init_embedding,
+    init_linear,
+    init_mlp,
+    init_rmsnorm,
+)
+
+FULL_WINDOW = jnp.int32(2**30)  # "unbounded" window sentinel (traced-safe)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer (windowed) KV cache
+# ---------------------------------------------------------------------------
+
+def init_ring_cache(batch, window, hkv, dh, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, window, hkv, dh), dtype),
+        "v": jnp.zeros((batch, window, hkv, dh), dtype),
+        "slot_pos": jnp.full((batch, window), -1, jnp.int32),
+    }
+
+
+def ring_decode_attention(params_block, x, cache, pos, *, cfg: ArchConfig,
+                          window, mode, backend):
+    """One-token attention against a ring-buffer cache (window W slots)."""
+    b = x.shape[0]
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k_new, v_new = attn._project_qkv(params_block, x, x, hq, hkv, dh,
+                                        mode, backend)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    w = cache["k"].shape[1]
+    slot = pos % w                                         # (B,)
+    onehot = jax.nn.one_hot(slot, w, dtype=cache["k"].dtype)
+    keepm = (1.0 - onehot)[:, :, None, None]
+    k_c = cache["k"] * keepm + onehot[:, :, None, None] * k_new.astype(cache["k"].dtype)
+    v_c = cache["v"] * keepm + onehot[:, :, None, None] * v_new.astype(cache["v"].dtype)
+    slot_pos = jnp.where(jax.nn.one_hot(slot, w, dtype=jnp.int32) > 0,
+                         pos[:, None], cache["slot_pos"])
+    # mask directly from stored absolute positions
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None]) & \
+        (slot_pos > pos[:, None] - window)
+    logits = attn._gqa_scores(q, k_c) * dh ** -0.5
+    logits = jnp.where(valid[:, None, None, :], logits, attn.NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = attn._gqa_out(p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30), v_c)
+    out = out.reshape(b, 1, hq * dh).astype(x.dtype)
+    out = apply_linear(params_block["wo"], out, mode=mode, backend=backend)
+    return out, {"k": k_c, "v": v_c, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# Standard transformer block (attention + MLP/MoE)
+# ---------------------------------------------------------------------------
+
+def init_tblock(key, cfg: ArchConfig, *, cross=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    sp = cfg.sparsity
+    blk = {
+        "ln1": init_rmsnorm(d, dtype),
+        "attn": attn.init_attention(
+            ks[0], d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+            sparse=sp if "attn_qkv" in cfg.sparse_scope else None, dtype=dtype),
+        "ln2": init_rmsnorm(d, dtype),
+    }
+    if cross:
+        blk["ln_x"] = init_rmsnorm(d, dtype)
+        blk["xattn"] = attn.init_attention(
+            ks[1], d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+            sparse=None, dtype=dtype)
+    if cfg.moe is not None:
+        blk["moe"] = moe_mod.init_moe(
+            ks[2], d, cfg.moe,
+            sparse=sp if "mlp" in cfg.sparse_scope else None, dtype=dtype)
+    else:
+        blk["mlp"] = init_mlp(ks[3], d, cfg.d_ff,
+                              sparse=sp if "mlp" in cfg.sparse_scope else None,
+                              dtype=dtype)
+    return blk
+
+
+def apply_tblock_seq(blk, x, cfg: ArchConfig, *, window, positions=None,
+                     enc_out=None, causal=True, static_window=None,
+                     mode, backend):
+    h = apply_rmsnorm(blk["ln1"], x)
+    h = attn.apply_attention(
+        blk["attn"], h,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        positions=positions, causal=causal, window=window,
+        static_window=static_window, mode=mode, backend=backend)
+    x = x + h
+    if "xattn" in blk and enc_out is not None:
+        h = apply_rmsnorm(blk["ln_x"], x)
+        h = attn.apply_attention(
+            blk["xattn"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            causal=False, window=-1, kv_x=enc_out, mode=mode, backend=backend)
+        x = x + h
+    h = apply_rmsnorm(blk["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in blk:
+        h, aux = moe_mod.apply_moe(blk["moe"], h, cfg.moe, mode=mode,
+                                   backend=backend)
+    else:
+        h = apply_mlp(blk["mlp"], h, mode=mode, backend=backend)
+    return x + h, aux
+
+
+# ---------------------------------------------------------------------------
+# Per-layer window schedule (gemma3 local:global, h2o SWA, full)
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """int32 (L,): attention window per layer (FULL_WINDOW = unbounded)."""
+    l = cfg.num_layers
+    if cfg.attention == "swa":
+        return jnp.full((l,), cfg.window, jnp.int32)
+    if cfg.attention == "local_global":
+        idx = jnp.arange(l)
+        is_global = (idx % (cfg.local_global_ratio + 1)) == cfg.local_global_ratio
+        return jnp.where(is_global, FULL_WINDOW, cfg.local_window)
+    return jnp.full((l,), FULL_WINDOW, jnp.int32)
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# DecoderLM: dense / moe / vlm
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecoderLM:
+    cfg: ArchConfig
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        k_e, k_u, k_l, k_p = jax.random.split(key, 4)
+        layer_keys = jax.random.split(k_l, cfg.num_layers)
+        layers = jax.vmap(
+            lambda k: init_tblock(k, cfg, dtype=dtype))(layer_keys)
+        params = {
+            "embed": init_embedding(k_e, cfg.padded_vocab, cfg.d_model, dtype),
+            "unembed": init_embedding(k_u, cfg.padded_vocab, cfg.d_model, dtype),
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+            "layers": layers,
+        }
+        if cfg.frontend == "vision":
+            params["patch_proj"] = init_linear(k_p, cfg.d_model, cfg.d_model,
+                                               sparse=None, dtype=dtype)
+        return params
+
+    # ---- full-sequence forward (train / prefill logits) ----
+    def _backbone_seq(self, params, x, *, positions, mode, backend):
+        cfg = self.cfg
+
+        if cfg.attention == "local_global":
+            # cond-free superblocks with STATIC local windows: local layers
+            # run banded flash (EXPERIMENTS.md §Perf iteration 3).
+            period, n_p, n_tail = self._lg_layout()
+            stacked = jax.tree.map(
+                lambda a: a[:n_p * period].reshape(n_p, period,
+                                                   *a.shape[1:]),
+                params["layers"])
+            tail = jax.tree.map(lambda a: a[n_p * period:], params["layers"])
+
+            def body(carry, blks):
+                x, aux = carry
+                for i in range(period - 1):
+                    blk = jax.tree.map(lambda a: a[i], blks)
+                    x, a = apply_tblock_seq(
+                        blk, x, cfg, window=cfg.local_window,
+                        static_window=cfg.local_window,
+                        positions=positions, mode=mode, backend=backend)
+                    aux = aux + a
+                blk = jax.tree.map(lambda a: a[period - 1], blks)
+                x, a = apply_tblock_seq(blk, x, cfg, window=-1,
+                                        positions=positions, mode=mode,
+                                        backend=backend)
+                return (x, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(
+                _remat(body, cfg), (x, jnp.zeros((), jnp.float32)), stacked)
+            for i in range(n_tail):
+                blk = jax.tree.map(lambda a: a[i], tail)
+                x, a = apply_tblock_seq(
+                    blk, x, cfg, window=cfg.local_window,
+                    static_window=cfg.local_window, positions=positions,
+                    mode=mode, backend=backend)
+                aux = aux + a
+            return apply_rmsnorm(params["final_norm"], x), aux
+
+        static_window = cfg.window if cfg.attention == "swa" else None
+        windows = layer_windows(cfg)
+
+        def body(carry, layer):
+            x, aux = carry
+            blk, window = layer
+            x, a = apply_tblock_seq(blk, x, cfg, window=window,
+                                    static_window=static_window,
+                                    positions=positions, mode=mode,
+                                    backend=backend)
+            return (x, aux + a), None
+
+        body = _remat(body, cfg)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["layers"], windows))
+        return apply_rmsnorm(params["final_norm"], x), aux
+
+    def _embed_inputs(self, params, batch, dtype):
+        cfg = self.cfg
+        x = apply_embedding(params["embed"], batch["tokens"]).astype(dtype)
+        if cfg.frontend == "vision":
+            pe = apply_linear(params["patch_proj"],
+                              batch["patch_embeds"].astype(dtype))
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = self._embed_inputs(params, batch, dtype)
+        t = x.shape[1]
+        x, aux = self._backbone_seq(params, x, positions=jnp.arange(t),
+                                    mode=mode, backend=backend)
+        if cfg.frontend == "vision":  # only text positions carry loss
+            x = x[:, cfg.num_patches:]
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        loss = softmax_xent(logits, batch["targets"])
+        return loss + aux, {"xent": loss, "aux": aux}
+
+    # ---- serving ----
+    def prefill(self, params, batch, *, max_len=None, mode="masked",
+                backend="reference"):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = self._embed_inputs(params, batch, dtype)
+        b, t = x.shape[0], x.shape[1]
+        x, _ = self._backbone_seq(params, x, positions=jnp.arange(t),
+                                  mode=mode, backend=backend)
+        logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
+        state = self.init_decode_state(b, max_len or t + 1, dtype=dtype)
+        # NOTE: serving fills the cache during prefill; for the dry-run cells
+        # the decode state is initialized directly (decode-only lowering).
+        return logits, state
+
+    def _lg_layout(self):
+        """local_global layout: (period, n_periods, n_tail)."""
+        cfg = self.cfg
+        period = cfg.local_global_ratio + 1
+        n_p = cfg.num_layers // period
+        return period, n_p, cfg.num_layers - n_p * period
+
+    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        l = cfg.num_layers
+
+        def ring(*lead):
+            w = int(cfg.local_window if cfg.attention == "local_global"
+                    else cfg.window)
+            return {
+                "k": jnp.zeros((*lead, batch, w, hkv, dh), dtype),
+                "v": jnp.zeros((*lead, batch, w, hkv, dh), dtype),
+                "slot_pos": jnp.full((*lead, batch, w), -1, jnp.int32),
+            }
+
+        if cfg.attention == "full":
+            caches = {
+                "kind": Static("full"),
+                "k": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
+                "v": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
+            }
+        elif cfg.attention == "swa":
+            caches = {"kind": Static("swa"), "ring": ring(l)}
+        else:  # local_global: periods of (ratio local + 1 global) + tail
+            period, n_p, n_tail = self._lg_layout()
+            caches = {
+                "kind": Static("local_global"),
+                "local": ring(n_p, period - 1),
+                "tail": ring(max(n_tail, 1)),
+                "global_k": jnp.zeros((max(n_p, 1), batch, max_len, hkv, dh),
+                                      dtype),
+                "global_v": jnp.zeros((max(n_p, 1), batch, max_len, hkv, dh),
+                                      dtype),
+            }
+        return {"caches": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+
+    def _decode_ffn(self, blk, x, mode, backend):
+        cfg = self.cfg
+        h = apply_rmsnorm(blk["ln2"], x)
+        if "moe" in blk:
+            h, _ = moe_mod.apply_moe(blk["moe"], h, cfg.moe, mode=mode,
+                                     backend=backend)
+        else:
+            h = apply_mlp(blk["mlp"], h, mode=mode, backend=backend)
+        return x + h
+
+    def _decode_full_layer(self, blk, x, cache, pos, window, mode, backend):
+        cfg = self.cfg
+        h = apply_rmsnorm(blk["ln1"], x)
+        h, nc = attn.apply_attention_decode(
+            blk["attn"], h, cache, pos,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=window, mode=mode, backend=backend)
+        return self._decode_ffn(blk, x + h, mode, backend), nc
+
+    def _decode_ring_layer(self, blk, x, cache, pos, window, mode, backend):
+        h = apply_rmsnorm(blk["ln1"], x)
+        h, nc = ring_decode_attention(blk["attn"], h, cache, pos,
+                                      cfg=self.cfg, window=window, mode=mode,
+                                      backend=backend)
+        return self._decode_ffn(blk, x + h, mode, backend), nc
+
+    def decode_step(self, params, state, tokens, *, mode="masked",
+                    backend="reference"):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+        pos = state["pos"]
+        caches = state["caches"]
+        kind = caches["kind"].value
+
+        if kind == "full":
+            def body(x, layer):
+                blk, kc, vc = layer
+                x, nc = self._decode_full_layer(
+                    blk, x, {"k": kc, "v": vc}, pos, FULL_WINDOW, mode,
+                    backend)
+                return x, (nc["k"], nc["v"])
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], caches["k"], caches["v"]))
+            new_caches = {"kind": Static("full"), "k": ks, "v": vs}
+
+        elif kind == "swa":
+            def body(x, layer):
+                blk, ring = layer
+                x, nc = self._decode_ring_layer(blk, x, ring, pos,
+                                                cfg.window, mode, backend)
+                return x, nc
+
+            x, rings = jax.lax.scan(body, x, (params["layers"],
+                                              caches["ring"]))
+            new_caches = {"kind": Static("swa"), "ring": rings}
+
+        else:  # local_global periods + local tail (cond-free)
+            period, n_p, n_tail = self._lg_layout()
+            stacked = jax.tree.map(
+                lambda a: a[:n_p * period].reshape(n_p, period,
+                                                   *a.shape[1:]),
+                params["layers"])
+            tail = jax.tree.map(lambda a: a[n_p * period:], params["layers"])
+
+            def body(x, per):
+                blks, local, gk, gv = per
+                new_local = []
+                for i in range(period - 1):
+                    blk = jax.tree.map(lambda a: a[i], blks)
+                    ring = jax.tree.map(lambda a: a[i], local)
+                    x, nc = self._decode_ring_layer(
+                        blk, x, ring, pos, cfg.local_window, mode, backend)
+                    new_local.append(nc)
+                # the global layer (full cache, unbounded window)
+                blk = jax.tree.map(lambda a: a[period - 1], blks)
+                x, nc = self._decode_full_layer(
+                    blk, x, {"k": gk, "v": gv}, pos, FULL_WINDOW, mode,
+                    backend)
+                stacked_local = jax.tree.map(lambda *a: jnp.stack(a),
+                                             *new_local)
+                return x, (stacked_local, nc["k"], nc["v"])
+
+            x, (locals_, gks, gvs) = jax.lax.scan(
+                body, x,
+                (stacked, caches["local"], caches["global_k"],
+                 caches["global_v"]))
+
+            new_tail = []
+            for i in range(n_tail):
+                blk = jax.tree.map(lambda a: a[i], tail)
+                ring = jax.tree.map(lambda a: a[i], caches["tail"])
+                x, nc = self._decode_ring_layer(
+                    blk, x, ring, pos, cfg.local_window, mode, backend)
+                new_tail.append(nc)
+            tail_caches = (jax.tree.map(lambda *a: jnp.stack(a), *new_tail)
+                           if new_tail else caches["tail"])
+            new_caches = {"kind": Static("local_global"), "local": locals_,
+                          "tail": tail_caches, "global_k": gks,
+                          "global_v": gvs}
+
+        x = apply_rmsnorm(params["final_norm"], x)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        return logits, {"caches": new_caches, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (vocab-sharded logits friendly)
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, targets):
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

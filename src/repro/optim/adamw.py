@@ -1,0 +1,118 @@
+"""AdamW with ZeRO-1-ready state layout, grad clipping, and schedules.
+
+Functional (optax-style) but self-contained.  Optimizer moments are stored
+in fp32 regardless of param dtype.  Under distribution, the moment pytrees
+get the ZeRO-1 shardings from ``partitioning.opt_state_specs`` — the update
+then computes on (data-axis) shards and SPMD all-gathers fresh params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+    compression: Optional[dict] = None  # error-feedback residuals
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # gradient compression (see optim/compression.py)
+    compression: Optional[str] = None     # None | "topk" | "int8"
+    topk_fraction: float = 0.05
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _is_float(x):
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32) if _is_float(p) else None,
+        params)
+    comp = None
+    if cfg.compression == "topk":
+        comp = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32) if _is_float(p) else None,
+            params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros,
+                      compression=comp)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree) if _is_float(g)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    from repro.optim import compression as comp_mod
+
+    step = state.step + 1
+    comp_state = state.compression
+    if cfg.compression == "topk":
+        grads, comp_state = comp_mod.topk_with_error_feedback(
+            grads, comp_state, cfg.topk_fraction)
+    elif cfg.compression == "int8":
+        grads = comp_mod.int8_roundtrip(grads)
+
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(
+            lambda g: g * scale if _is_float(g) else g, grads)
+
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if not _is_float(p) or g is None:
+            return p, m, v
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p - lr * delta.astype(p.dtype)).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v,
+                             compression=comp_state), \
+        {"grad_norm": gnorm, "lr": lr}

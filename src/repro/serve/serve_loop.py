@@ -1,0 +1,132 @@
+"""Batched serving with continuous slot-based batching.
+
+The engine owns a fixed decode batch of ``num_slots`` sequences.  Requests
+(prompts) are queued; a free slot is claimed, its cache region reset, the
+prompt prefilled token-by-token (the jitted decode step doubles as a
+prefill-by-steps path so the engine needs exactly one compiled program),
+then generation proceeds until EOS/max_tokens and the slot frees.
+
+The packed-DeMM serving path is selected with ``backend``/``mode`` — with
+``mode='packed'`` all sparse weights are in the paper's packed form and every
+matmul in the decode step reads only packed bytes (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[list] = None
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    num_slots: int = 4
+    max_len: int = 256
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, model, params, cfg: ServeConfig, *, mode="masked",
+                 backend="reference"):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.state = model.init_decode_state(cfg.num_slots, cfg.max_len,
+                                             dtype=jnp.float32)
+        self._init_state = jax.tree.map(lambda x: x, self.state)
+        # locate each leaf's slot (batch) axis robustly: init a state with
+        # one extra slot and diff the shapes.
+        probe = model.init_decode_state(cfg.num_slots + 1, cfg.max_len,
+                                        dtype=jnp.float32)
+        self._slot_axis = jax.tree.map(
+            lambda a, b: next((i for i, (x, y) in
+                               enumerate(zip(a.shape, b.shape)) if x != y),
+                              None) if hasattr(a, "shape") else None,
+            self.state, probe)
+        self._step = jax.jit(
+            lambda p, s, t: model.decode_step(p, s, t, mode=mode,
+                                              backend=backend))
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * cfg.num_slots
+        self._fed: List[int] = [0] * cfg.num_slots    # prompt tokens fed
+        self._next_tok = np.zeros((cfg.num_slots, 1), np.int32)
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        req.output = []
+        self.queue.append(req)
+
+    def _claim_slots(self):
+        for i in range(self.cfg.num_slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[i] = req
+                self._fed[i] = 0
+                self._reset_slot(i)
+                self._next_tok[i, 0] = req.prompt[0]
+
+    def _reset_slot(self, i):
+        """Restore slot ``i``'s state region from the initial template.
+
+        KV caches self-mask stale entries (cache_len / slot_pos), but the
+        O(1) SSM/mLSTM states must be re-initialized per request.  The slot
+        axis is the first axis whose size equals num_slots."""
+        def reset(cur, init, ax):
+            if ax is None or not hasattr(cur, "shape"):
+                return cur
+            idx = [slice(None)] * cur.ndim
+            idx[ax] = i
+            return cur.at[tuple(idx)].set(init[tuple(idx)])
+
+        self.state = jax.tree.map(reset, self.state, self._init_state,
+                                  self._slot_axis)
+
+    def step(self) -> int:
+        """One engine tick = one decode step for the whole batch.
+        Returns the number of active slots."""
+        self._claim_slots()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.state = self._step(self.params, self.state,
+                                        jnp.asarray(self._next_tok))
+        logits = np.asarray(logits[:, 0], np.float32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self._fed[i] += 1
+            if self._fed[i] < len(req.prompt):
+                # still prefilling: feed the next prompt token
+                self._next_tok[i, 0] = req.prompt[self._fed[i]]
+                continue
+            tok = int(np.argmax(logits[i]))
+            req.output.append(tok)
+            self._next_tok[i, 0] = tok
+            done = (len(req.output) >= req.max_new_tokens or
+                    (req.eos_id is not None and tok == req.eos_id) or
+                    int(self.state["pos"][i]) >= self.cfg.max_len - 1)
+            if done:
+                self.completed.append(req)
+                self.active[i] = None
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_ticks: int = 10000):
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.active)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

@@ -1,0 +1,84 @@
+"""Global sharding context.
+
+Model code stays mesh-agnostic; step builders (train/serve/dryrun) install a
+``ShardingContext`` so the few places that need explicit distribution —
+the MoE expert-parallel dispatch, activation sharding constraints — can
+query the active mesh and policies.  With no context installed, everything
+degrades to single-device semantics (CPU tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Mesh
+    shard_heads: bool = True        # kv_heads % tp == 0
+    seq_shard_cache: bool = False   # long-context decode: KV seq over 'data'
+    batch_axes: Tuple[str, ...] = ("data",)
+    num_heads: int = 0              # arch Q heads (attention TP policy)
+    num_kv_heads: int = 0
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape["model"]
+
+    def dp_degree(self) -> int:
+        d = 1
+        for a in self.batch_axes:
+            d *= self.mesh.shape[a]
+        return d
+
+
+_CTX: Optional[ShardingContext] = None
+
+
+def get_context() -> Optional[ShardingContext]:
+    return _CTX
+
+
+@contextlib.contextmanager
+def use_mesh(ctx: ShardingContext):
+    global _CTX
+    prev = _CTX
+    _CTX = ctx
+    try:
+        with ctx.mesh:
+            yield ctx
+    finally:
+        _CTX = prev
+
+
+def make_context(mesh: Mesh, *, num_kv_heads: int = 16, num_heads: int = 0,
+                 seq_shard_cache: bool = False) -> ShardingContext:
+    tp = mesh.shape["model"]
+    return ShardingContext(
+        mesh=mesh,
+        shard_heads=(num_kv_heads % tp == 0),
+        seq_shard_cache=seq_shard_cache,
+        batch_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+        num_heads=num_heads or num_kv_heads,
+        num_kv_heads=num_kv_heads,
+    )
+
+
+def constrain(x, *parts):
+    """with_sharding_constraint if a context is active, else identity."""
+    ctx = _CTX
+    if ctx is None:
+        return x
+    resolved = []
+    for p in parts:
+        if p == "BATCH":
+            resolved.append(ctx.batch_axes)
+        else:
+            resolved.append(p)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*resolved)))

@@ -1,0 +1,228 @@
+"""Partitioning rules: param-path patterns → PartitionSpec.
+
+Megatron-style TP over the 'model' axis, DP over ('pod', 'data') for the
+batch, EP for expert tensors, and a head-dim fallback for archs whose KV
+head count does not divide the TP degree (DESIGN.md §5).
+
+Rules are matched on the '/'-joined param path (first match wins), so the
+same rule set serves every architecture family.  ``_sparse_*`` static
+metadata and scalar leaves get a fully-replicated spec.
+
+ZeRO-1: optimizer-state specs are derived from the param specs by sharding
+the largest replicated dimension over 'data' (opt_state_specs).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (regex on path, spec builder(ndim) -> PartitionSpec)
+# 'M' = model axis, 'D' = data axes tuple ('pod','data') or ('data',)
+
+def _rules():
+    return [
+        # embeddings / unembedding: vocab-sharded
+        (r"(embed|unembed)/table", lambda nd: P("model", None)),
+        # MoE expert tensors (E, in, out): EP over model
+        (r"moe/w_(gate|up|down)", lambda nd: P("model", None, None)),
+        (r"moe/router/w", lambda nd: P(None, None)),
+        # attention projections: column-parallel q/k/v, row-parallel o
+        (r"(attn|xattn)/w[qkv]/(w|values|indices)", "col"),
+        (r"(attn|xattn)/wo/(w|values|indices)", "row"),
+        # MLP: column-parallel gate/up, row-parallel down
+        (r"mlp/(gate|up)/(w|values|indices)", "col"),
+        (r"mlp/down/(w|values|indices)", "row"),
+        # mamba: column-parallel in_proj, row-parallel out_proj
+        (r"mamba/in_proj/(w|values|indices)", "col"),
+        (r"mamba/out_proj/(w|values|indices)", "row"),
+        (r"mamba/conv_w", lambda nd: P(None, "model")),
+        (r"mamba/(A_log|D|dt_bias)", lambda nd: P("model",)),
+        # xlstm blocks
+        (r"(blk)/(up|wq|wk|wv|w_in)/(w|values|indices)", "col"),
+        (r"(blk)/(down)/(w|values|indices)", "row"),
+        (r"blk/w_if/w", lambda nd: P(None, None)),
+        (r"blk/r$", lambda nd: P(None, None, None)),  # tiny sLSTM recurrent
+        # frontends / misc projections: column-parallel
+        (r"(patch_proj|frame_proj)/w", "col"),
+        # norms, biases, scalars: replicated
+        (r".*", lambda nd: P(*([None] * nd))),
+    ]
+
+
+def _col_spec(ndim: int) -> P:
+    """Column-parallel: output dim (axis 0 of (out, in) weights) sharded.
+    Packed sparse tensors (O, G, N) shard the same axis 0."""
+    return P(*(["model"] + [None] * (ndim - 1)))
+
+
+def _row_spec(ndim: int) -> P:
+    """Row-parallel: contraction dim sharded.  Dense (out, in) -> axis 1;
+    packed (O, G, N) -> the group axis 1 (groups tile the contraction dim,
+    and choose_group aligned M to the shard size)."""
+    if ndim == 1:
+        return P(None)
+    return P(*([None, "model"] + [None] * (ndim - 2)))
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    for pat, builder in _rules():
+        if re.search(pat, path):
+            if builder == "col":
+                return _col_spec(ndim)
+            if builder == "row":
+                return _row_spec(ndim)
+            spec = builder(ndim)
+            # pad/truncate to ndim
+            parts = list(spec) + [None] * (ndim - len(spec))
+            return P(*parts[:ndim])
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _stacked_offset(leaf_ndim: int, spec_ndim: int) -> int:
+    """Layer-stacked params have a leading (L,) axis (or (P, n_m) for xlstm
+    periods): specs shift right by the extra leading dims."""
+    return leaf_ndim - spec_ndim
+
+
+def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
+    """PartitionSpec pytree matching ``params``.
+
+    Handles layer stacking: rule specs are defined for the *unstacked*
+    2-D/3-D weights; extra leading axes (scan stacking) are replicated.
+
+    ``attn_kv_replicated``: for archs whose KV head count does not divide
+    TP (but whose Q heads do), K/V projection weights are replicated so the
+    projected K/V tensors need no gather (EXPERIMENTS.md §Perf iter 1).
+    """
+
+    def one(path, leaf):
+        if not hasattr(leaf, "ndim"):
+            return P()  # Static metadata
+        p = _path_str(path)
+        nd = leaf.ndim
+        # how many leading stack dims? infer from known rule arity:
+        base_nd = _base_ndim(p, nd)
+        extra = nd - base_nd
+        if attn_kv_replicated and re.search(
+                r"(attn|xattn)/w[kv]/(w|values|indices)", p):
+            base = P(*([None] * base_nd))
+        else:
+            base = spec_for_path(p, base_nd)
+        return P(*([None] * extra + list(base)))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _base_ndim(path: str, nd: int) -> int:
+    """Arity of the unstacked tensor for this path."""
+    if re.search(r"(values|indices)$", path):
+        return 3
+    if re.search(r"moe/w_(gate|up|down)", path):
+        return 3
+    if re.search(r"blk/r$", path):
+        return 3
+    if re.search(r"conv_w", path):
+        return 2
+    if re.search(r"(embed|unembed)/table", path):
+        return 2
+    if re.search(r"/w$", path):
+        return 2
+    if re.search(r"(scale|bias|A_log|D$|dt_bias)", path):
+        return 1
+    return min(nd, 2)
+
+
+def opt_state_specs(pspecs, param_shapes=None, data_degree: int = 16) -> dict:
+    """ZeRO-1: shard optimizer moments over 'data' on a still-replicated
+    axis whose size divides the data degree (grads are reduce-scattered onto
+    the shard, updates all-gathered back — SPMD inserts both).
+
+    ``param_shapes`` (same structure) enables divisibility checks; without
+    it, only the first None axis is used unchecked (legacy behaviour)."""
+
+    def one(spec, shape=None):
+        if not isinstance(spec, P):
+            return spec
+        parts = list(spec)
+        candidates = [i for i, s in enumerate(parts) if s is None]
+        if shape is not None:
+            dims = shape.shape if hasattr(shape, "shape") else shape
+            candidates = [i for i in candidates
+                          if i < len(dims) and dims[i] % data_degree == 0]
+            # prefer the largest divisible axis (best shard balance)
+            candidates.sort(key=lambda i: -dims[i])
+        if candidates:
+            parts[candidates[0]] = "data"
+            return P(*parts)
+        return spec
+
+    if param_shapes is None:
+        return jax.tree_util.tree_map(
+            one, pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = treedef.flatten_up_to(param_shapes)
+    return treedef.unflatten([one(s, p) for s, p in zip(flat_s, flat_p)])
+
+
+def shardings_for(mesh: Mesh, specs) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else
+        NamedSharding(mesh, P()),
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation/batch specs
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh):
+    """The data-parallel axes present in this mesh ('pod' included)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, seq_axis: Optional[int] = None,
+               seq_shard: bool = False) -> P:
+    """Batch tensors: leading axis over DP axes; optionally shard a sequence
+    axis over 'data' (long-context decode)."""
+    parts = [batch_axes(mesh)] + [None] * (ndim - 1)
+    if seq_shard and seq_axis is not None:
+        parts[0] = "pod" if "pod" in mesh.axis_names else None
+        parts[seq_axis] = "data"
+    return P(*parts)
+
+
+def cache_spec(mesh: Mesh, ndim: int, *, batch_axis: int = 1,
+               head_axis: int = 3, seq_axis: int = 2,
+               shard_heads: bool, seq_shard: bool = False) -> P:
+    """KV caches (L, B, S, H, Dh): batch over DP, heads over model (when the
+    arch's KV heads divide TP), optionally sequence over 'data'."""
+    parts = [None] * ndim
+    if seq_shard:
+        parts[seq_axis] = "data"
+        if "pod" in mesh.axis_names:
+            parts[batch_axis] = "pod"
+    else:
+        parts[batch_axis] = batch_axes(mesh)
+    if shard_heads:
+        parts[head_axis] = "model"
+    return P(*parts)

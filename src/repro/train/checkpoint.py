@@ -1,0 +1,123 @@
+"""Sharded, atomic, reshard-on-restore checkpointing.
+
+Layout::
+
+    <dir>/step_<N>/
+        manifest.json        # pytree structure, shapes, dtypes, paths
+        <leaf-path>.npy      # one file per leaf (host-gathered)
+    <dir>/step_<N>.tmp/      # staging; os.rename() commits atomically
+
+Restore takes target shardings (possibly for a DIFFERENT mesh than the one
+that saved — elastic restarts) and rebuilds global arrays with
+``jax.make_array_from_callback``, so each device materializes only its
+shard.  ``save_async`` stages device-to-host transfers immediately and
+writes on a background thread (training continues).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Static
+
+_EXEC = ThreadPoolExecutor(max_workers=2)
+
+
+def _leaf_paths(tree):
+    paths = []
+
+    def one(path, leaf):
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        paths.append(("/".join(parts), leaf))
+
+    jax.tree_util.tree_map_with_path(one, tree)
+    return paths
+
+
+def save(tree, directory: str, step: int) -> str:
+    """Synchronous atomic save.  Returns the committed directory."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "leaves": []}
+    for path, leaf in _leaf_paths(tree):
+        fname = path.replace("/", "__") + ".npy"
+        if isinstance(leaf, Static):
+            manifest["leaves"].append(
+                {"path": path, "kind": "static", "value": leaf.value})
+            continue
+        if leaf is None:
+            manifest["leaves"].append({"path": path, "kind": "none"})
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "path": path, "kind": "array", "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def save_async(tree, directory: str, step: int) -> Future:
+    host_tree = jax.tree.map(
+        lambda x: np.asarray(jax.device_get(x))
+        if x is not None and not isinstance(x, Static) else x, tree)
+    return _EXEC.submit(save, host_tree, directory, step)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(template, directory: str, step: int, shardings=None):
+    """Restore into ``template``'s structure.  ``shardings`` (same structure)
+    places every leaf; None leaves restore to host numpy (then committed to
+    the default device by jnp.asarray)."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    shard_flat = (treedef.flatten_up_to(shardings)
+                  if shardings is not None else [None] * len(flat))
+    paths = [p for p, _ in _leaf_paths(template)]
+    out = []
+    for (path, leaf), sh in zip(zip(paths, flat), shard_flat):
+        entry = by_path[path]
+        if entry["kind"] == "static":
+            out.append(Static(entry["value"]))
+            continue
+        if entry["kind"] == "none":
+            out.append(None)
+            continue
+        data = np.load(os.path.join(final, entry["file"]))
+        if sh is not None:
+            arr = jax.make_array_from_callback(
+                tuple(entry["shape"]), sh, lambda idx, d=data: d[idx])
+        else:
+            arr = jnp.asarray(data)
+        out.append(arr)
+    return treedef.unflatten(out)

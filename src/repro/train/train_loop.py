@@ -1,0 +1,132 @@
+"""Distributed training step: microbatch scan + remat + ZeRO-1 AdamW.
+
+``make_train_step(model, cfg, opt_cfg, num_microbatches)`` builds a jittable
+``train_step(params, opt_state, batch, step)``:
+
+  * the global batch (already DP-sharded by ``in_shardings``) is split into
+    ``num_microbatches`` chunks processed by a ``lax.scan`` that accumulates
+    fp32 gradients — this bounds activation memory (the 262k-vocab logits of
+    gemma3 would not fit otherwise);
+  * the loss is the model's ``train_loss`` with the DeMM masked-sparse path;
+  * AdamW moments carry ZeRO-1 shardings (partitioning.opt_state_specs), so
+    the update computes on data-axis shards; SPMD materializes the implied
+    reduce-scatter/all-gather;
+  * all comms overlap is left to the XLA latency-hiding scheduler — the
+    structure (per-layer scan, accumulate-in-carry) is chosen so gradient
+    reductions of microbatch i can overlap compute of microbatch i+1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.sharding import context as shctx
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def f(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def premask_params(params):
+    """Apply the N:M straight-through masks ONCE per step.
+
+    Weights are constant within a step, so recomputing the top-k mask in
+    every microbatch × remat pass (up to 14×/layer) is pure waste — masking
+    here and running the model in ``dense`` mode cuts those top-k ops and
+    their gradient plumbing out of the hot loop while keeping identical
+    semantics (straight-through gradients still reach the dense weight
+    through this one masking site)."""
+    from repro.core.pruning import masked_weight
+    from repro.core.sparsity import SparsityConfig
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "_sparse_m" in node and "w" in node:
+                cfg = SparsityConfig(node["_sparse_n"].value,
+                                     node["_sparse_m"].value, 1)
+                w = node["w"]
+                # layer-stacked weights (L, ..., O, K): the N:M groups live
+                # along K, so masking is row-wise after flattening.
+                flat = w.reshape(-1, w.shape[-1])
+                return dict(node, w=masked_weight(flat, cfg).reshape(w.shape))
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig, *,
+                    num_microbatches: int = 1, mode: str = "masked",
+                    backend: str = "reference", donate: bool = True,
+                    premask: bool = True):
+    # With premasking, the per-microbatch model runs in dense mode.
+    inner_mode = "dense" if (premask and mode == "masked") else mode
+
+    def loss_fn(params, mb):
+        loss, metrics = model.train_loss(params, mb, mode=inner_mode,
+                                         backend=backend)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        del step  # schedule uses opt_state.step
+        use_premask = premask and mode == "masked"
+        if use_premask:
+            # mask once per step; the straight-through vjp of the mask is
+            # the identity, so gradients w.r.t. the masked params ARE the
+            # straight-through gradients for the dense params — no vjp
+            # plumbing needed.
+            fwd_params = premask_params(params)
+        else:
+            fwd_params = params
+
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(fwd_params, batch)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches)
+
+            def mb_step(acc, mb):
+                (loss, metrics), g = grad_fn(fwd_params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32)
+                    if gi is not None and hasattr(gi, "dtype") else a,
+                    acc, g)
+                return acc, (loss, metrics)
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32)
+                if hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating)
+                else None, fwd_params)
+            grads, (losses, metricses) = jax.lax.scan(mb_step, acc0, mbs)
+            grads = jax.tree.map(
+                lambda g: g / num_microbatches if g is not None else None,
+                grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metricses)
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model, *, mode: str = "masked", backend: str = "reference"):
+    def eval_step(params, batch):
+        loss, metrics = model.train_loss(params, batch, mode=mode,
+                                         backend=backend)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# make tests/helpers.py importable regardless of invocation directory
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

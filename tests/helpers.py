@@ -1,0 +1,23 @@
+"""Test helpers: run a python snippet in a subprocess with N host devices.
+
+Smoke tests must see 1 device (the brief), so multi-device tests spawn a
+fresh interpreter with XLA_FLAGS set before jax import.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(snippet: str, n_devices: int = 8, timeout: int = 480):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", snippet], env=env, capture_output=True,
+        text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout

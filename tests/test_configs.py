@@ -1,0 +1,134 @@
+"""Config system: all 10 archs load with exact assigned hyper-parameters,
+shape registry, skip rules, group alignment, window schedules."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    applicable_shapes,
+    choose_group,
+    get_arch,
+)
+from repro.models.transformer import FULL_WINDOW, layer_windows
+
+# the assignment table (arch -> L, d_model, H, kv, d_ff, vocab)
+ASSIGNED = {
+    "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+    "gemma3_1b": (26, 1152, 4, 1, 6912, 262144),
+    "internlm2_20b": (48, 6144, 48, 8, 16384, 92544),
+    "stablelm_3b": (32, 2560, 32, 32, 6912, 50304),
+    "h2o_danube_1_8b": (24, 2560, 32, 8, 6912, 32000),
+    "olmoe_1b_7b": (16, 2048, 16, 16, 0, 50304),
+    "llama4_scout_17b_a16e": (48, 5120, 40, 8, 0, 202048),
+    "internvl2_1b": (24, 896, 14, 2, 4864, 151655),
+    "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+    "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+}
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_assigned_hyperparameters(arch_id):
+    cfg = get_arch(arch_id)
+    l, d, h, kv, ff, v = ASSIGNED[arch_id]
+    assert cfg.num_layers == l
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_moe_configs():
+    o = get_arch("olmoe_1b_7b")
+    assert (o.moe.num_experts, o.moe.experts_per_token,
+            o.moe.d_ff_expert) == (64, 8, 1024)
+    l4 = get_arch("llama4_scout_17b_a16e")
+    assert (l4.moe.num_experts, l4.moe.experts_per_token,
+            l4.moe.d_ff_expert) == (16, 1, 8192)
+
+
+def test_ssm_configs():
+    z = get_arch("zamba2_7b")
+    assert z.ssm.kind == "mamba2" and z.ssm.state_dim == 64
+    assert z.shared_attn_every == 6
+    x = get_arch("xlstm_125m")
+    assert x.ssm.kind == "xlstm"
+
+
+def test_shape_registry():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_500k_skip_rules():
+    """Brief: long_500k only for sub-quadratic archs."""
+    runs = {a for a in ARCH_IDS
+            if "long_500k" in applicable_shapes(get_arch(a))}
+    assert runs == {"gemma3_1b", "h2o_danube_1_8b", "zamba2_7b",
+                    "xlstm_125m"}
+    # 34 applicable pairs total -> 68 dry-run cells over two meshes
+    total = sum(len(applicable_shapes(get_arch(a))) for a in ARCH_IDS)
+    assert total == 34
+
+
+def test_padded_vocab_tp_divisible():
+    for a in ARCH_IDS:
+        cfg = get_arch(a)
+        assert cfg.padded_vocab % 16 == 0
+        assert 0 <= cfg.padded_vocab - cfg.vocab_size < 256
+
+
+@pytest.mark.parametrize("k,expect_m", [(432, 48), (2048, 128), (160, 80),
+                                        (320, 80)])
+def test_choose_group_alignment(k, expect_m):
+    cfg = choose_group(k, 1.0 / 16.0, 128)
+    assert cfg.m == expect_m
+    assert k % cfg.m == 0
+    assert cfg.n / cfg.m == pytest.approx(1.0 / 16.0)
+
+
+def test_layer_windows_gemma_pattern():
+    cfg = get_arch("gemma3_1b")
+    w = np.asarray(layer_windows(cfg))
+    # 5 local : 1 global
+    for i, wi in enumerate(w):
+        if (i % 6) == 5:
+            assert wi == int(FULL_WINDOW)
+        else:
+            assert wi == cfg.local_window
+    assert (w == int(FULL_WINDOW)).sum() == 4
+
+
+def test_layer_windows_swa_and_full():
+    h2o = get_arch("h2o_danube_1_8b")
+    assert np.all(np.asarray(layer_windows(h2o)) == 4096)
+    st = get_arch("stablelm_3b")
+    assert np.all(np.asarray(layer_windows(st)) == int(FULL_WINDOW))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_counts_sane(arch_id):
+    """Order-of-magnitude sanity for MODEL_FLOPS accounting."""
+    cfg = get_arch(arch_id)
+    n = cfg.param_count()
+    expected = {
+        "seamless_m4t_medium": (0.3e9, 2e9),
+        "gemma3_1b": (0.7e9, 3e9),
+        "internlm2_20b": (15e9, 30e9),
+        "stablelm_3b": (2e9, 5e9),
+        "h2o_danube_1_8b": (1.2e9, 3e9),
+        "olmoe_1b_7b": (4e9, 10e9),
+        "llama4_scout_17b_a16e": (60e9, 140e9),
+        "internvl2_1b": (0.3e9, 1.5e9),
+        "zamba2_7b": (4e9, 12e9),
+        "xlstm_125m": (0.08e9, 0.4e9),
+    }[arch_id]
+    assert expected[0] < n < expected[1], n
+    assert cfg.active_param_count() <= n

@@ -1,0 +1,130 @@
+"""Unit + property tests for the relaxed N:M sparsity format."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsity import (
+    PATTERNS,
+    SparsityConfig,
+    group_nonzero_counts,
+    pack,
+    prune,
+    prune_mask,
+    random_sparse_dense,
+    reconfigure_k,
+    satisfies_pattern,
+    unpack_packed,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        SparsityConfig(n=0, m=4)
+    with pytest.raises(ValueError):
+        SparsityConfig(n=4, m=4, k=2)  # kN > M
+    cfg = SparsityConfig(8, 128, 1)
+    assert cfg.density == pytest.approx(8 / 128)
+    assert cfg.pattern_name() == "8:128"
+    assert SparsityConfig(8, 128, 8).pattern_name() == "64:128 (as 8x8:128)"
+
+
+def test_compression_ratio_8_128():
+    cfg = PATTERNS["8:128"]
+    # bf16 values + int8 indices: 128*2 / (8*3) ≈ 10.7x
+    assert cfg.compression_ratio(2, 1) == pytest.approx(256 / 24)
+    # with int32 indices it is 128*2/(8*6)
+    assert cfg.compression_ratio(2, 4) == pytest.approx(256 / 48)
+
+
+def test_prune_satisfies_pattern():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((16, 256)).astype(np.float32))
+    for name in ("1:2", "1:4", "1:8", "8:128", "4:64"):
+        cfg = PATTERNS[name]
+        pruned = prune(a, cfg)
+        assert satisfies_pattern(pruned, cfg), name
+        counts = group_nonzero_counts(pruned, cfg)
+        # dense random input -> pruning keeps exactly n_effective per group
+        assert int(counts.min()) == cfg.n_effective
+
+
+def test_prune_keeps_largest_magnitudes():
+    cfg = SparsityConfig(2, 4)
+    a = jnp.asarray([[1.0, -5.0, 0.25, 3.0, 0.1, 0.2, -0.3, 0.05]])
+    pruned = np.asarray(prune(a, cfg))
+    np.testing.assert_allclose(pruned, [[0.0, -5.0, 0.0, 3.0, 0.0, 0.2, -0.3, 0.0]])
+
+
+def test_pack_unpack_roundtrip_exact():
+    rng = np.random.default_rng(2)
+    cfg = SparsityConfig(4, 32)
+    a = random_sparse_dense(rng, 24, 128, cfg)
+    p = pack(jnp.asarray(a), cfg)
+    np.testing.assert_allclose(np.asarray(unpack_packed(p)), a, rtol=1e-6)
+
+
+def test_pack_prunes_nonconforming():
+    cfg = SparsityConfig(1, 4)
+    a = jnp.asarray([[1.0, -2.0, 0.0, 0.0]])  # 2 nonzeros in a 1:4 group
+    p = pack(a, cfg)
+    got = np.asarray(unpack_packed(p))
+    np.testing.assert_allclose(got, [[0.0, -2.0, 0.0, 0.0]])
+
+
+def test_reconfigure_k_views():
+    rng = np.random.default_rng(3)
+    cfg = SparsityConfig(8, 64)  # 8:64 packed
+    a = random_sparse_dense(rng, 8, 128, cfg)
+    p = pack(jnp.asarray(a), cfg)
+    split = reconfigure_k(p, k=4)  # view as 4 passes of 2:64
+    assert split.values.shape == (8, 2 * 4, 2)
+    assert split.cfg.n == 2 and split.cfg.k == 4
+    # the multiset of (value) entries is preserved
+    np.testing.assert_allclose(
+        np.sort(np.asarray(split.values).ravel()),
+        np.sort(np.asarray(p.values).ravel()),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 4, 8]),
+    m=st.sampled_from([8, 16, 32, 128]),
+    rows=st.sampled_from([1, 4, 16]),
+    groups=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_prune_pack_unpack(n, m, rows, groups, seed):
+    """For any dense matrix: prune->pack->unpack is idempotent and satisfies
+    the pattern; pack drops nothing that prune kept."""
+    if n > m:
+        return
+    cfg = SparsityConfig(n, m)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((rows, groups * m)).astype(np.float32))
+    pruned = prune(a, cfg)
+    assert satisfies_pattern(pruned, cfg)
+    roundtrip = unpack_packed(pack(pruned, cfg))
+    np.testing.assert_allclose(np.asarray(roundtrip), np.asarray(pruned), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_mask_is_topk(seed):
+    cfg = SparsityConfig(4, 16)
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((8, 64)).astype(np.float32)
+    mask = np.asarray(prune_mask(jnp.asarray(a), cfg))
+    grp = np.abs(a.reshape(8, 4, 16))
+    kept = np.where(mask.reshape(8, 4, 16), grp, -1.0)
+    dropped = np.where(mask.reshape(8, 4, 16), np.inf, grp)
+    # min kept magnitude >= max dropped magnitude, per group
+    assert np.all(
+        np.min(np.where(kept < 0, np.inf, kept), axis=-1)
+        >= np.max(np.where(np.isinf(dropped), -np.inf, dropped), axis=-1)
+    )
