@@ -8,7 +8,7 @@ Paper claims (average DeMM improvement, ResNet50+ConvNeXt):
   1:4 -> 19% vs S2TA, 12% vs VEGETA
   1:2 -> 14% vs S2TA,  5% vs VEGETA
 
-Reproduction note (DESIGN.md §7 / EXPERIMENTS.md §Paper-claims): the DeMM
+Reproduction note (DESIGN.md §7): the DeMM
 paper does not specify S2TA's DBB internals; our S2TA model is an idealized
 output-stationary tensor array that saturates its 512 MACs at exact N:M
 patterns, i.e. it is *stronger* than the silicon S2TA.  The DeMM-vs-S2TA

@@ -1,5 +1,5 @@
 """Roofline table aggregation: read the dry-run JSONL and emit the
-per-(arch × shape) three-term roofline table (EXPERIMENTS.md §Roofline).
+per-(arch × shape) three-term roofline table.
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [results/dryrun.jsonl]
 """

@@ -6,14 +6,25 @@ Prints ``name,value,derived`` CSV rows:
   * kernel_*   — DeMM kernel structural benchmarks (packed-byte roofline)
   * roofline_* — per-(arch×shape) roofline fractions from the dry-run JSONL
                  (requires results/dryrun.jsonl; skipped gracefully if absent)
+
+``--autotune`` additionally drives the ``repro.tune`` autotuner over the
+config-zoo matmul shapes and writes ``BENCH_kernels.json`` (tuned vs default
+vs dense; see benchmarks/kernel_bench.py).
 """
 
 from __future__ import annotations
+
+import argparse
 
 
 def main() -> None:
     from benchmarks import fig6_resnet50, fig8_finegrained, kernel_bench
     from benchmarks import roofline as roofline_mod
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
 
     rows = []
     print("== Fig. 6: relaxed 8:128 on ResNet50 (paper: 18/54/67%) ==")
@@ -41,6 +52,19 @@ def main() -> None:
         print(f"{name},{val:.2f},{derived}")
     if not rl:
         print("roofline_skipped,0,run results/run_dryrun.sh first")
+
+    if args.autotune:
+        print("== Autotune (repro.tune over the config zoo) ==")
+        out = ("BENCH_kernels_quick.json" if args.quick
+               else kernel_bench.DEFAULT_OUT)
+        blob = kernel_bench.run_autotune(quick=args.quick, out_path=out,
+                                         verbose=False)
+        for case in blob["cases"]:
+            name = f"autotune_{case['name']}_vs_default"
+            rows.append((name, case["tuned_vs_default"],
+                         f"tuned={case['tuned']['backend']}"))
+            print(f"{name},{case['tuned_vs_default']:.2f},"
+                  f"tuned={case['tuned']['backend']}{case['tuned']['params']}")
 
     print(f"== total: {len(rows)} benchmark rows ==")
 

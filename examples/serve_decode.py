@@ -50,7 +50,7 @@ def main():
     print(f"masked-dense serving: {len(done_m)} reqs, {tps_m:.1f} tok/s")
     print(f"packed-DeMM  serving: {len(done_p)} reqs, {tps_p:.1f} tok/s "
           f"(CPU interpret — on TPU the packed path cuts weight HBM reads "
-          f"~{sp.compression_ratio(2, 1):.0f}x; see EXPERIMENTS.md §Perf)")
+          f"~{sp.compression_ratio(2, 1):.0f}x; see DESIGN.md §6)")
 
     # generations agree modulo fp-tie argmax flips (the packed path
     # accumulates in fp32, the masked path in bf16)

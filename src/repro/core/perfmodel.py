@@ -42,7 +42,7 @@ schedule models, not RTL):
   zero groups exist.  Per tile: 32-cycle preload + compressed input stream +
   (32+4) skew, four unit tiles in flight (LPT-balanced).
 
-Calibration (EXPERIMENTS.md §Paper-claims): with these parameters the
+Calibration (DESIGN.md §7): with these parameters the
 ResNet50 @95%-unstructured (≈8:128) comparison lands at 17.1 / 56.1 / 65.2 %
 overall-latency improvement vs S2TA / VEGETA / SPOTS against the paper's
 claimed 18 / 54 / 67 % — every engine within ~2 points without per-layer
@@ -297,6 +297,31 @@ class SpotsEngine(Engine):
         for c in np.sort(tile_cycles)[::-1]:              # LPT balance
             per_unit[per_unit.argmin()] += c
         return int(per_unit.max())
+
+
+# ---------------------------------------------------------------------------
+# Tile-ranking estimate for the Pallas kernels (used by repro.tune)
+# ---------------------------------------------------------------------------
+
+def demm_tile_cycles(r: int, k: int, p: int, cfg: SparsityConfig,
+                     block_cols: int, seed: int = 0) -> int:
+    """First-order cycle estimate of the software DeMM schedule for one
+    GEMM ``C[r, p] = A_sparse[r, k] @ B[k, p]`` tiled at ``block_cols``
+    output columns per step.
+
+    This reuses :class:`DeMMEngine` with its column-tile width C set to the
+    Pallas kernel's output-column block (``block_c`` for spmm, ``block_b``
+    for the xwT orientation): the engine's pre-load + stream count then
+    mirrors the kernel's per-grid-step B-block residency and packed-row
+    streaming.  The mask is a representative exact N:M draw at the config's
+    density — the estimate ranks tile candidates, it does not predict wall
+    time.
+    """
+    rng = np.random.default_rng(seed)
+    mask = nm_mask(rng, r, k, cfg.n_effective, cfg.m)
+    eng = DeMMEngine(n=cfg.n_effective, m=cfg.m, c=max(1, block_cols),
+                     k=1)
+    return eng.gemm_cycles(GemmShape("tile_est", r, k, p), mask)
 
 
 # ---------------------------------------------------------------------------

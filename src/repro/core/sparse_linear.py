@@ -72,6 +72,10 @@ def apply_packed(params, x: jax.Array, cfg: SparsityConfig,
                                decompress, HBM sees only packed bytes).
       * ``pallas``           — the fused Pallas TPU kernel (real hardware).
       * ``pallas_interpret`` — the same kernel in interpret mode (CPU checks).
+      * ``auto``             — per-(shape, dtype, pattern, platform) choice
+                               from the ``repro.tune`` cache/heuristics;
+                               pre-measure with ``repro.tune.autotune_xwT``
+                               or ``benchmarks/kernel_bench.py --autotune``.
     """
     from repro.kernels import ops
 

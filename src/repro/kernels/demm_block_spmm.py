@@ -35,7 +35,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparsity import SparsityConfig
-from repro.kernels.demm_spmm import _scatter_matrix
+from repro.kernels.demm_spmm import _CompilerParams, _scatter_matrix
 
 DEFAULT_BLOCK_R = 128
 DEFAULT_BLOCK_C = 256
@@ -140,7 +140,7 @@ def demm_block_spmm_pallas(
             out_specs=pl.BlockSpec((block_r, cd_block), lambda i, c, j, ag: (i, c)),
         ),
         out_shape=jax.ShapeDtypeStruct((r, cd), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -36,10 +36,31 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparsity import SparsityConfig
 
-# MXU/VPU-aligned defaults.
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+# MXU/VPU-aligned defaults.  Production dispatch picks per-problem tiles via
+# repro.tune (backend="auto"); these remain the direct-call defaults.
 DEFAULT_BLOCK_R = 128   # rows of the sparse matrix per tile
 DEFAULT_BLOCK_C = 256   # dense output columns per tile
 DEFAULT_BLOCK_B = 128   # activation rows per tile (xwT orientation)
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple (no-op when aligned).
+
+    Zero rows of packed values scatter to zero contributions and padded
+    output rows/columns are sliced away by the caller, so ragged serving
+    shapes (batch not a tile multiple) stay exact.
+    """
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 def _scatter_matrix(values_blk, indices_blk, m: int, n: int, dtype):
@@ -104,11 +125,15 @@ def demm_spmm_pallas(
     assert n == cfg.n_effective, (n, cfg)
     block_r = min(block_r, r)
     block_c = min(block_c, cd)
-    assert r % block_r == 0 and cd % block_c == 0, (r, cd, block_r, block_c)
+    # Ragged shapes are zero-padded to the tile grid and sliced back after.
+    values = _pad_to(values, 0, block_r)
+    indices = _pad_to(indices, 0, block_r)
+    b = _pad_to(b, 1, block_c)
+    rp, cdp = values.shape[0], b.shape[1]
 
-    grid = (r // block_r, cd // block_c, g)
+    grid = (rp // block_r, cdp // block_c, g)
     kernel = functools.partial(_spmm_kernel, m=m, n=n, n_groups=g)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -117,13 +142,14 @@ def demm_spmm_pallas(
             pl.BlockSpec((m, block_c), lambda i, j, gg: (gg, j)),
         ],
         out_specs=pl.BlockSpec((block_r, block_c), lambda i, j, gg: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, cd), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=jax.ShapeDtypeStruct((rp, cdp), jnp.float32),
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
         name="demm_spmm",
     )(values, indices, b)
+    return out[:r, :cd]
 
 
 # ---------------------------------------------------------------------------
@@ -168,11 +194,16 @@ def demm_xwT_pallas(
     assert n == cfg.n_effective, (n, cfg)
     block_b = min(block_b, bx)
     block_o = min(block_o, o)
-    assert bx % block_b == 0 and o % block_o == 0, (bx, o, block_b, block_o)
+    # Ragged serving batches / output dims are zero-padded to the tile grid
+    # and sliced back after.
+    x = _pad_to(x, 0, block_b)
+    values = _pad_to(values, 0, block_o)
+    indices = _pad_to(indices, 0, block_o)
+    bxp, op = x.shape[0], values.shape[0]
 
-    grid = (bx // block_b, o // block_o, g)
+    grid = (bxp // block_b, op // block_o, g)
     kernel = functools.partial(_xwT_kernel, m=m, n=n)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -181,10 +212,11 @@ def demm_xwT_pallas(
             pl.BlockSpec((block_o, 1, n), lambda i, j, gg: (j, gg, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, gg: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((bx, o), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        out_shape=jax.ShapeDtypeStruct((bxp, op), jnp.float32),
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
         name="demm_xwT",
     )(x, values, indices)
+    return out[:bx, :o]

@@ -1,10 +1,20 @@
 """jit'd public ops over the DeMM kernels, with sparse-aware gradients.
 
-Backend dispatch:
+Backend dispatch routes through the ``repro.tune`` kernel registry:
+
   * ``reference``        — pure-jnp decompress+matmul (XLA path; used inside
                            distributed jit steps and on CPU).
   * ``pallas``           — the Pallas TPU kernel (real hardware).
   * ``pallas_interpret`` — the Pallas kernel in interpret mode (CPU checks).
+  * ``auto``             — resolve (backend, tile params) per problem from
+                           the tuning cache (populated by
+                           ``benchmarks/kernel_bench.py --autotune`` or
+                           ``repro.tune.autotune_*``), falling back to a
+                           platform heuristic.  Resolution is a static
+                           shape-keyed lookup, safe under jit tracing.
+
+New variants registered via ``repro.tune.register_variant`` become valid
+backend strings here with no further changes.
 
 Gradients (custom_vjp on the xwT op):
   dL/dx       = dy @ W_dense
@@ -23,20 +33,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparsity import SparsityConfig, unpack
-from repro.kernels import ref as kref
-from repro.kernels.demm_spmm import demm_spmm_pallas, demm_xwT_pallas
 
-BACKENDS = ("reference", "pallas", "pallas_interpret")
+# Baseline backends always registered; `repro.tune.backend_names("xwT")` has
+# the live list (plus "auto", resolved through the tuning cache).
+BACKENDS = ("reference", "pallas", "pallas_interpret", "auto")
 
 
 def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):
-    if backend == "reference":
-        return kref.xwT_ref(x, values, indices, cfg, w_shape)
-    if backend == "pallas":
-        return demm_xwT_pallas(x, values, indices, cfg, interpret=False)
-    if backend == "pallas_interpret":
-        return demm_xwT_pallas(x, values, indices, cfg, interpret=True)
-    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    from repro import tune
+
+    params = {}
+    if backend == "auto":
+        choice = tune.resolve_xwT(x.shape, w_shape, cfg, x.dtype)
+        backend, params = choice.backend, choice.params
+    variant = tune.get_variant("xwT", backend)
+    return variant.call(x, values, indices, cfg, tuple(w_shape), **params)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -74,10 +85,15 @@ demm_matmul_xwT.defvjp(_xwT_fwd, _xwT_bwd)
 def demm_spmm(values, indices, b, cfg: SparsityConfig, a_shape,
               backend: str = "reference"):
     """C = A_sparse @ B (paper orientation)."""
-    if backend == "reference":
-        return kref.spmm_ref(values, indices, b, cfg, a_shape)
-    if backend == "pallas":
-        return demm_spmm_pallas(values, indices, b, cfg, interpret=False)
-    if backend == "pallas_interpret":
-        return demm_spmm_pallas(values, indices, b, cfg, interpret=True)
-    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    from repro import tune
+
+    params = {}
+    if backend == "auto":
+        choice = tune.resolve_spmm(a_shape, b.shape, cfg, b.dtype)
+        backend, params = choice.backend, choice.params
+    variant = tune.get_variant("spmm", backend)
+    if variant.measure_only:
+        raise ValueError(
+            f"backend {backend!r} is measure-only (host repacking); use it "
+            "through repro.tune.autotune_spmm or call its kernel directly")
+    return variant.call(values, indices, b, cfg, tuple(a_shape), **params)

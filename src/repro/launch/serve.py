@@ -1,10 +1,13 @@
 """Batched serving driver (reduced configs on CPU; production via dry-run).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3_1b --requests 8 \
-        --packed
+        --packed --backend auto --autotune
 
 ``--packed`` converts every sparse weight to the paper's packed DeMM form
 before serving: the decode matmuls then stream only packed bytes.
+``--backend auto`` resolves every packed matmul through the ``repro.tune``
+registry + cache; ``--autotune`` pre-measures tile configs for the decode
+shapes first (results persist in the tuning cache for later runs).
 """
 
 from __future__ import annotations
@@ -29,7 +32,18 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--packed", action="store_true")
+    # valid backends come from the registry, so variants added via
+    # repro.tune.register_variant are immediately servable
+    from repro import tune
+    ap.add_argument("--backend", default="reference",
+                    choices=tuple(v.name for v in tune.variants_for("xwT"))
+                    + ("auto",))
+    ap.add_argument("--autotune", action="store_true",
+                    help="pre-measure tile configs for the packed decode "
+                         "shapes (implies --backend auto)")
     args = ap.parse_args()
+    if args.autotune:
+        args.backend = "auto"
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
@@ -41,7 +55,8 @@ def main():
     engine = ServeEngine(model, params,
                          ServeConfig(num_slots=args.slots,
                                      max_len=args.max_len),
-                         mode=mode)
+                         mode=mode, backend=args.backend,
+                         autotune=args.autotune and args.packed)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

@@ -77,7 +77,7 @@ def flash_attention(
     gemma3 local layers), the inner KV scan only visits the
     ``ceil((W + qc)/kvc) + 1`` chunks that can intersect the band, instead
     of all S/kvc — an ~S/W cut in attention FLOPs, bytes, and (when K/V are
-    head_dim-sharded) collectives (EXPERIMENTS.md §Perf iteration 3)."""
+    head_dim-sharded) collectives (DESIGN.md §5)."""
     b, t, hq, dh = q.shape
     s = k.shape[1]
     scale = dh ** -0.5
@@ -196,7 +196,7 @@ def _constrain_heads(x, *, seq_sharded=False):
     2. else, if the arch's *Q* head count divides TP, REPLICATE this (K/V)
        tensor — Q carries the sharding and the GQA einsums stay local (the
        per-chunk logits psum of head_dim sharding costs ~1000x more, see
-       EXPERIMENTS.md §Perf iteration 1);
+       DESIGN.md §5);
     3. else REPLICATE q/k/v: attention runs replicated over 'model' (one
        gather per projection instead of a psum per flash chunk — §Perf
        iteration 4; these are small-head archs where attention is a minor

@@ -3,7 +3,7 @@
 Dispatch is gather/scatter-based — NOT the one-hot dispatch-einsum — so the
 compiled FLOPs stay ≈ tokens × top_k × expert_FFN (the dispatch einsum is
 O(tokens² · top_k · d) and would destroy the MODEL_FLOPS/HLO ratio; see
-EXPERIMENTS.md §Perf).
+DESIGN.md §6).
 
 Expert parallelism: expert weight tensors are (E, ...) sharded over the
 'model' mesh axis.  Under jit/SPMD the gather into the (E, C, D) buffer and

@@ -214,7 +214,7 @@ class DecoderLM:
 
         if cfg.attention == "local_global":
             # cond-free superblocks with STATIC local windows: local layers
-            # run banded flash (EXPERIMENTS.md §Perf iteration 3).
+            # run banded flash (DESIGN.md §5).
             period, n_p, n_tail = self._lg_layout()
             stacked = jax.tree.map(
                 lambda a: a[:n_p * period].reshape(n_p, period,

@@ -8,7 +8,10 @@ then generation proceeds until EOS/max_tokens and the slot frees.
 
 The packed-DeMM serving path is selected with ``backend``/``mode`` — with
 ``mode='packed'`` all sparse weights are in the paper's packed form and every
-matmul in the decode step reads only packed bytes (see EXPERIMENTS.md §Perf).
+matmul in the decode step reads only packed bytes (see DESIGN.md §6).
+``backend='auto'`` resolves each packed matmul through the ``repro.tune``
+registry/cache; pass ``autotune=True`` to pre-measure tile configs for every
+packed weight shape before the decode step is compiled (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -41,10 +44,16 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, model, params, cfg: ServeConfig, *, mode="masked",
-                 backend="reference"):
+                 backend="reference", autotune=False):
         self.model = model
         self.params = params
         self.cfg = cfg
+        if autotune and mode == "packed":
+            # Measure tile configs for every packed weight at the decode
+            # batch shape so backend="auto" resolves from the cache when the
+            # step below is traced.
+            from repro import tune
+            tune.autotune_packed_tree(params, cfg.num_slots)
         self.state = model.init_decode_state(cfg.num_slots, cfg.max_len,
                                              dtype=jnp.float32)
         self._init_state = jax.tree.map(lambda x: x, self.state)

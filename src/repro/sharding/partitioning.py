@@ -110,7 +110,7 @@ def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
 
     ``attn_kv_replicated``: for archs whose KV head count does not divide
     TP (but whose Q heads do), K/V projection weights are replicated so the
-    projected K/V tensors need no gather (EXPERIMENTS.md §Perf iter 1).
+    projected K/V tensors need no gather (DESIGN.md §5).
     """
 
     def one(path, leaf):

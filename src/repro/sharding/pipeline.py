@@ -40,7 +40,9 @@ def pipeline_apply(
         # params_local: this rank's stage (leading axis 1) — squeeze it.
         params_local = jax.tree.map(lambda a: a[0], params_local)
         rank = jax.lax.axis_index(axis)
-        n = jax.lax.axis_size(axis)
+        # jax.lax.axis_size only exists on newer jax; psum(1) is equivalent.
+        n = (jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size")
+             else jax.lax.psum(1, axis))
         mb_shape = x_all.shape[1:]
 
         def tick(carry, t):

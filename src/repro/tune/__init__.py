@@ -1,0 +1,121 @@
+"""``repro.tune`` — kernel registry, autotuner, and dispatch cache.
+
+The software analogue of the paper's DeMM(N, M, C, k) reconfiguration: the
+engine wins by matching its datapath shape to the sparsity pattern, and the
+Pallas kernels win by matching their tile shapes (``block_r``/``block_c``/
+``block_b``) and backend to the (shape, dtype, N:M pattern, platform)
+instance.  This package owns that choice:
+
+  * :mod:`repro.tune.registry`  — registered kernel variants + param spaces.
+  * :mod:`repro.tune.autotune`  — enumerate → VMEM/perfmodel prune → measure.
+  * :mod:`repro.tune.cache`     — JSON-persistent (op, shapes, dtype,
+    pattern, platform) → (backend, tiles) cache with heuristic fallback.
+
+``kernels/ops.py`` resolves ``backend="auto"`` through
+:func:`resolve_xwT` / :func:`resolve_spmm`: a pure cache/heuristic lookup on
+static shapes, safe at jit-trace time.  Measurement happens only in explicit
+:func:`autotune_xwT` / :func:`autotune_spmm` calls (see
+``benchmarks/kernel_bench.py --autotune`` and ``launch/serve.py
+--autotune``), whose results persist for later processes.
+"""
+
+from __future__ import annotations
+
+from repro.core.sparsity import SparsityConfig
+from repro.tune.autotune import (
+    DEFAULT_VMEM_BUDGET,
+    TuneResult,
+    autotune_spmm,
+    autotune_xwT,
+    enumerate_candidates,
+    estimate_cycles,
+    measure,
+    prune_candidates,
+    vmem_bytes,
+)
+from repro.tune.cache import (
+    TuneCache,
+    TunedConfig,
+    default_cache,
+    heuristic_default,
+    problem_key,
+    set_default_cache,
+)
+from repro.tune.registry import (
+    KernelVariant,
+    Problem,
+    backend_names,
+    current_platform,
+    get_variant,
+    register_variant,
+    variants_for,
+)
+
+__all__ = [
+    "DEFAULT_VMEM_BUDGET", "KernelVariant", "Problem", "TuneCache",
+    "TuneResult", "TunedConfig", "autotune_spmm", "autotune_xwT",
+    "backend_names", "current_platform", "default_cache",
+    "enumerate_candidates", "estimate_cycles", "get_variant",
+    "heuristic_default", "measure", "problem_key", "prune_candidates",
+    "register_variant", "resolve_spmm", "resolve_xwT", "set_default_cache",
+    "variants_for", "vmem_bytes",
+]
+
+
+def resolve_xwT(x_shape, w_shape, cfg: SparsityConfig, dtype) -> TunedConfig:
+    """Static (backend, params) choice for ``backend="auto"`` xwT dispatch.
+
+    Never measures: tuning-cache hit or heuristic default.  Shapes may come
+    from tracers — only static metadata is consulted.
+    """
+    p = Problem.for_xwT(x_shape, w_shape, cfg, dtype)
+    return default_cache().resolve(p)
+
+
+def resolve_spmm(a_shape, b_shape, cfg: SparsityConfig, dtype) -> TunedConfig:
+    """Static (backend, params) choice for ``backend="auto"`` spmm dispatch."""
+    p = Problem.for_spmm(a_shape, b_shape, cfg, dtype)
+    return default_cache().resolve(p)
+
+
+def autotune_packed_tree(params, batch: int, dtype=None, *,
+                         persist: bool = True, **tune_kw) -> dict:
+    """Pre-tune every distinct packed-weight matmul shape in a param pytree.
+
+    Walks ``params`` for packed sparse-linear nodes (``{values, indices,
+    shape, _sparse_n, _sparse_m}``, as produced by ``launch.pack_tree``) and
+    runs :func:`autotune_xwT` once per distinct (O, K, pattern) with a dummy
+    activation batch of ``batch`` rows, so a subsequent jit trace with
+    ``backend="auto"`` resolves every layer from measured entries instead of
+    heuristics.  Returns {problem_key: TuneResult}.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    dtype = dtype or jnp.float32
+    seen = {}
+
+    def visit(node):
+        if isinstance(node, dict) and "values" in node and "shape" in node:
+            shape = node["shape"]
+            o, k = shape.value if hasattr(shape, "value") else shape
+            cfg = SparsityConfig(node["_sparse_n"].value,
+                                 node["_sparse_m"].value, 1)
+            vals, idxs = node["values"], node["indices"]
+            if vals.ndim > 3:   # layer-stacked: tune one slice
+                vals = vals.reshape(-1, *vals.shape[-2:])[:o]
+                idxs = idxs.reshape(-1, *idxs.shape[-2:])[:o]
+            p = Problem.for_xwT((batch, k), (o, k), cfg, dtype)
+            key = problem_key(p)
+            if key in seen:
+                return
+            x = jnp.asarray(
+                np.random.default_rng(0).standard_normal((batch, k)), dtype)
+            seen[key] = autotune_xwT(x, vals, idxs, cfg, (o, k),
+                                     persist=persist, **tune_kw)
+        elif isinstance(node, dict):
+            for v in node.values():
+                visit(v)
+
+    visit(params)
+    return seen

@@ -1,0 +1,286 @@
+"""Measured autotuning of DeMM kernel variants.
+
+Pipeline (per problem):
+
+  1. **Enumerate** — every supported registered variant × the cartesian grid
+     of its declared tile-candidate values (plus its heuristic default).
+  2. **Prune** — drop candidates whose per-grid-step VMEM working set
+     exceeds the budget (the TPU has ~16 MiB/core and the Pallas pipeline
+     double-buffers every block), then rank the survivors with the
+     first-order DeMM schedule model (:func:`repro.core.perfmodel
+     .demm_tile_cycles`) and keep the ``max_measure`` most promising.
+  3. **Measure** — run each survivor with ``warmup`` untimed iterations
+     (compile + cache warm) followed by ``iters`` timed calls, each fenced
+     with ``block_until_ready``; the score is the minimum (least-noise
+     estimator for a deterministic kernel).  Every dispatchable candidate is
+     measured under ``jax.jit`` — the regime production dispatch runs in —
+     so eager-dispatch overhead never mis-ranks variants.
+  4. **Select & persist** — the fastest *dispatchable* candidate is written
+     to the tuning cache keyed by the full problem description.  The
+     heuristic default is always measured, so the tuned choice is never
+     slower than the default on the measured host.
+
+``measure_only`` variants (block_spmm's host-repacked two-level format) are
+measured and reported in the result table but never selected for dispatch —
+they cannot be invoked from inside a jit trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perfmodel import demm_tile_cycles
+from repro.core.sparsity import SparsityConfig
+from repro.tune.cache import TuneCache, TunedConfig, default_cache
+from repro.tune.registry import KernelVariant, Problem, variants_for
+
+# ~16 MiB/core on current TPUs; leave headroom for semaphores/scalars.
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+_DOUBLE_BUFFER = 2
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def vmem_bytes(problem: Problem, variant: str, params: Dict[str, int]) -> int:
+    """Per-grid-step VMEM working set of a Pallas candidate (bytes).
+
+    Counts the double-buffered input/output blocks plus the materialized
+    (rows, M) scatter matrix S.  Non-Pallas variants (no tile params) have
+    no VMEM footprint to check — returns 0.
+    """
+    if not params:
+        return 0
+    eb = _dtype_bytes(problem.dtype)
+    n, m, _ = problem.sparsity
+    ne = problem.cfg.n_effective
+    if problem.op == "xwT":
+        bb = params.get("block_b", 128)
+        bo = params.get("block_o", 128)
+        x_blk = bb * m * eb
+        w_blk = bo * ne * (eb + 4)          # values + int32 indices
+        out_blk = bb * bo * 4               # fp32 accumulator
+        scatter = bo * m * eb
+    else:  # spmm / block_spmm
+        br = params.get("block_r", 128)
+        bc = params.get("block_c", params.get("cd_block", 256))
+        x_blk = m * bc * eb                 # resident B block
+        w_blk = br * ne * (eb + 4)
+        out_blk = br * bc * 4
+        scatter = br * m * eb
+    return _DOUBLE_BUFFER * (x_blk + w_blk + out_blk) + scatter
+
+
+@functools.lru_cache(maxsize=512)
+def _schedule_cycles(problem: Problem, block_cols: int) -> int:
+    # The perfmodel schedule depends only on (problem, block_cols); dozens of
+    # tile candidates share a block_cols, and the representative mask draw is
+    # expensive for big shapes — memoize.
+    return demm_tile_cycles(problem.out, problem.k, problem.rows,
+                            problem.cfg, block_cols)
+
+
+def estimate_cycles(problem: Problem, params: Dict[str, int]) -> int:
+    """Rank a tile candidate with the perfmodel DeMM schedule + a per-grid-
+    step dispatch overhead (favors fewer, fatter tiles at equal schedule)."""
+    if problem.op == "xwT":
+        block_cols = params.get("block_b", 128)
+        row_tiles = -(-problem.out // max(1, params.get("block_o", 128)))
+        col_tiles = -(-problem.rows // max(1, block_cols))
+    else:
+        block_cols = params.get("block_c", params.get("cd_block", 256))
+        row_tiles = -(-problem.out // max(1, params.get("block_r", 128)))
+        col_tiles = -(-problem.rows // max(1, block_cols))
+    base = _schedule_cycles(problem, block_cols)
+    grid_steps = row_tiles * col_tiles * problem.groups
+    return int(base + 50 * grid_steps)
+
+
+def measure(thunk: Callable[[], jax.Array], *, warmup: int = 2,
+            iters: int = 5) -> float:
+    """Wall-time a jax thunk: ``warmup`` untimed calls (compile), then the
+    min over ``iters`` fenced timings, in seconds."""
+    for _ in range(max(1, warmup)):
+        thunk().block_until_ready()
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        thunk().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@dataclasses.dataclass
+class Candidate:
+    backend: str
+    params: Dict[str, int]
+    vmem: int = 0
+    est_cycles: Optional[int] = None
+    measured_s: Optional[float] = None
+    status: str = "enumerated"   # pruned_vmem | pruned_rank | measured | error
+    note: str = ""
+
+    def row(self) -> dict:
+        return {"backend": self.backend, "params": dict(self.params),
+                "vmem_bytes": self.vmem, "est_cycles": self.est_cycles,
+                "measured_us": (None if self.measured_s is None
+                                else self.measured_s * 1e6),
+                "status": self.status, "note": self.note}
+
+
+@dataclasses.dataclass
+class TuneResult:
+    problem: Problem
+    best: TunedConfig
+    candidates: List[Candidate]
+
+    @property
+    def best_us(self) -> float:
+        return self.best.measured_us
+
+    def table(self) -> List[dict]:
+        return [c.row() for c in self.candidates]
+
+
+def _param_grid(variant: KernelVariant, problem: Problem) -> List[Dict[str, int]]:
+    space = variant.param_space(problem)
+    if not space:
+        return [{}]
+    names = sorted(space)
+    grids = [space[n] for n in names]
+    out = [dict(zip(names, vals)) for vals in itertools.product(*grids)]
+    default = variant.default_params(problem)
+    if default not in out:
+        out.append(default)
+    return out
+
+
+def enumerate_candidates(problem: Problem,
+                         include_measure_only: bool = True) -> List[Candidate]:
+    cands = []
+    for v in variants_for(problem.op, problem,
+                          include_measure_only=include_measure_only):
+        for params in _param_grid(v, problem):
+            cands.append(Candidate(backend=v.name, params=params))
+    return cands
+
+
+def prune_candidates(problem: Problem, cands: List[Candidate], *,
+                     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                     max_measure: int = 8) -> List[Candidate]:
+    """VMEM-budget check, then perfmodel ranking; keeps the defaults of each
+    variant unconditionally so tuned-vs-default is always a measured pair."""
+    defaults = {v.name: v.default_params(problem)
+                for v in variants_for(problem.op, problem,
+                                      include_measure_only=True)}
+    survivors = []
+    for c in cands:
+        c.vmem = vmem_bytes(problem, c.backend, c.params)
+        if c.vmem > vmem_budget:
+            c.status = "pruned_vmem"
+            continue
+        c.est_cycles = (estimate_cycles(problem, c.params)
+                        if c.params else None)
+        survivors.append(c)
+    keep = [c for c in survivors if defaults.get(c.backend) == c.params]
+    rest = sorted((c for c in survivors if c not in keep),
+                  key=lambda c: (c.est_cycles is None, c.est_cycles or 0))
+    limit = max(max_measure, len(keep))
+    for c in rest:
+        if len(keep) < limit:
+            keep.append(c)
+        else:
+            c.status = "pruned_rank"
+    return keep
+
+
+def _autotune(problem: Problem,
+              make_thunk: Callable[[Candidate], Callable[[], jax.Array]],
+              *, vmem_budget: int, max_measure: int, warmup: int, iters: int,
+              cache: Optional[TuneCache], persist: bool) -> TuneResult:
+    cands = enumerate_candidates(problem)
+    keep = prune_candidates(problem, cands, vmem_budget=vmem_budget,
+                            max_measure=max_measure)
+    measure_only = {v.name for v in variants_for(
+        problem.op, problem, include_measure_only=True) if v.measure_only}
+    for c in keep:
+        try:
+            c.measured_s = measure(make_thunk(c), warmup=warmup, iters=iters)
+            c.status = "measured"
+        except Exception as e:  # noqa: BLE001 — an unmeasurable candidate
+            c.status = "error"  # (e.g. unsupported tiling) is skipped, not fatal
+            c.note = f"{type(e).__name__}: {e}"[:200]
+    measured = [c for c in keep if c.status == "measured"
+                and c.backend not in measure_only]
+    if not measured:
+        raise RuntimeError(
+            f"autotune: no dispatchable candidate measured for {problem}; "
+            f"statuses: {[(c.backend, c.status, c.note) for c in keep]}")
+    best_c = min(measured, key=lambda c: c.measured_s)
+    best = TunedConfig(backend=best_c.backend, params=dict(best_c.params),
+                       measured_us=best_c.measured_s * 1e6, source="tuned")
+    cache = cache or default_cache()
+    cache.put(problem, best, persist=persist)
+    return TuneResult(problem=problem, best=best, candidates=cands)
+
+
+def autotune_xwT(x: jax.Array, values: jax.Array, indices: jax.Array,
+                 cfg: SparsityConfig, w_shape: Tuple[int, int], *,
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET, max_measure: int = 8,
+                 warmup: int = 2, iters: int = 5,
+                 cache: Optional[TuneCache] = None,
+                 persist: bool = True) -> TuneResult:
+    """Tune ``y = x @ W_sparseᵀ`` for the concrete operands given."""
+    from repro.tune.registry import get_variant
+
+    problem = Problem.for_xwT(x.shape, w_shape, cfg, x.dtype)
+
+    def make_thunk(c: Candidate):
+        v = get_variant("xwT", c.backend)
+        # Production dispatch runs inside jit-compiled steps: measure every
+        # candidate in that regime (the Pallas entry points are themselves
+        # jitted; timing the reference eagerly would compare eager-dispatch
+        # XLA against compiled Pallas and mis-rank them).
+        if v.measure_only:
+            return lambda: v.call(x, values, indices, cfg, tuple(w_shape),
+                                  **c.params)
+        jf = jax.jit(lambda xx, vv, ii: v.call(
+            xx, vv, ii, cfg, tuple(w_shape), **c.params))
+        return lambda: jf(x, values, indices)
+
+    return _autotune(problem, make_thunk, vmem_budget=vmem_budget,
+                     max_measure=max_measure, warmup=warmup, iters=iters,
+                     cache=cache, persist=persist)
+
+
+def autotune_spmm(values: jax.Array, indices: jax.Array, b: jax.Array,
+                  cfg: SparsityConfig, a_shape: Tuple[int, int], *,
+                  vmem_budget: int = DEFAULT_VMEM_BUDGET, max_measure: int = 8,
+                  warmup: int = 2, iters: int = 5,
+                  cache: Optional[TuneCache] = None,
+                  persist: bool = True) -> TuneResult:
+    """Tune ``C = A_sparse @ B`` for the concrete operands given."""
+    from repro.tune.registry import get_variant
+
+    problem = Problem.for_spmm(a_shape, b.shape, cfg, b.dtype)
+
+    def make_thunk(c: Candidate):
+        v = get_variant("spmm", c.backend)
+        if v.measure_only:   # host-side repacking cannot trace under jit
+            return lambda: v.call(values, indices, b, cfg, tuple(a_shape),
+                                  **c.params)
+        jf = jax.jit(lambda vv, ii, bb: v.call(
+            vv, ii, bb, cfg, tuple(a_shape), **c.params))
+        return lambda: jf(values, indices, b)
+
+    return _autotune(problem, make_thunk, vmem_budget=vmem_budget,
+                     max_measure=max_measure, warmup=warmup, iters=iters,
+                     cache=cache, persist=persist)

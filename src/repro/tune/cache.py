@@ -1,0 +1,182 @@
+"""Persistent tuning cache + heuristic defaults.
+
+Tuning results are keyed by the full static problem description —
+``(op, rows, out, k, dtype, n:m:k_reconfig, platform)`` — and stored
+
+  * in-memory (process-lifetime memoization, zero-cost on the dispatch path),
+  * on disk as JSON (survives processes; a serving job starts with the tile
+    configs its benchmark run measured).
+
+When no measurement exists for a key the cache answers with the registry's
+heuristic default for the best-supported variant, so ``backend="auto"`` is
+always resolvable — tuning only ever *improves* the choice.
+
+The JSON file carries a schema version; a version bump (or any key-scheme
+change) invalidates stale entries instead of misreading them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.tune.registry import Problem, variants_for
+
+SCHEMA_VERSION = 1
+
+_ENV_PATH = "REPRO_TUNE_CACHE"
+_DEFAULT_PATH = os.path.join("results", "tune_cache.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One resolved dispatch decision for a Problem."""
+
+    backend: str
+    params: Dict[str, int]
+    measured_us: Optional[float] = None   # None => heuristic, not measured
+    source: str = "heuristic"             # "heuristic" | "tuned" | "cache"
+
+    def to_json(self) -> dict:
+        return {"backend": self.backend, "params": dict(self.params),
+                "measured_us": self.measured_us, "source": self.source}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TunedConfig":
+        return cls(backend=d["backend"], params=dict(d.get("params", {})),
+                   measured_us=d.get("measured_us"),
+                   source=d.get("source", "cache"))
+
+
+def problem_key(p: Problem) -> str:
+    n, m, kr = p.sparsity
+    return (f"{p.op}|r{p.rows}|o{p.out}|k{p.k}|{p.dtype}"
+            f"|{n}:{m}:{kr}|{p.platform}")
+
+
+def heuristic_default(p: Problem) -> TunedConfig:
+    """Best unmeasured guess: the fused Pallas kernel with MXU-aligned tiles
+    on TPU, the XLA reference path everywhere else (interpret mode is a
+    debug backend and never a heuristic winner)."""
+    for v in variants_for(p.op, p):
+        if v.name == "pallas":
+            return TunedConfig("pallas", v.default_params(p))
+    for v in variants_for(p.op, p):
+        if v.name == "reference":
+            return TunedConfig("reference", v.default_params(p))
+    raise RuntimeError(f"no supported variant for {p}")
+
+
+class TuneCache:
+    """Two-level (memory + JSON file) cache of :class:`TunedConfig`."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path if path is not None else os.environ.get(
+            _ENV_PATH, _DEFAULT_PATH)
+        self._mem: Dict[str, TunedConfig] = {}
+        self._lock = threading.Lock()
+        self._loaded = False
+
+    # -- persistence --------------------------------------------------------
+
+    def load(self) -> int:
+        """Merge on-disk entries into memory; returns #entries loaded."""
+        with self._lock:
+            self._loaded = True
+            if not self.path or not os.path.exists(self.path):
+                return 0
+            try:
+                with open(self.path) as f:
+                    blob = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                return 0
+            if blob.get("version") != SCHEMA_VERSION:
+                return 0
+            n = 0
+            for key, entry in blob.get("entries", {}).items():
+                try:
+                    self._mem.setdefault(key, TunedConfig.from_json(entry))
+                    n += 1
+                except (KeyError, TypeError):
+                    continue
+            return n
+
+    def save(self):
+        with self._lock:
+            if not self.path:
+                return
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            blob = {"version": SCHEMA_VERSION,
+                    "entries": {k: v.to_json() for k, v in self._mem.items()}}
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(blob, f, indent=2, sort_keys=True)
+            os.replace(tmp, self.path)
+
+    # -- lookup / update ----------------------------------------------------
+
+    def _ensure_loaded(self):
+        if not self._loaded:
+            self.load()
+
+    def get(self, p: Problem) -> Optional[TunedConfig]:
+        self._ensure_loaded()
+        with self._lock:
+            return self._mem.get(problem_key(p))
+
+    def put(self, p: Problem, cfg: TunedConfig, *, persist: bool = False):
+        self._ensure_loaded()
+        with self._lock:
+            self._mem[problem_key(p)] = cfg
+        if persist:
+            self.save()
+
+    def invalidate(self, p: Problem):
+        self._ensure_loaded()
+        with self._lock:
+            self._mem.pop(problem_key(p), None)
+
+    def clear(self):
+        with self._lock:
+            self._mem.clear()
+
+    def resolve(self, p: Problem) -> TunedConfig:
+        """Cache hit or heuristic default — never measures, safe to call at
+        jit-trace time (only static shape information is consulted)."""
+        hit = self.get(p)
+        if hit is not None:
+            return hit
+        cfg = heuristic_default(p)
+        # memoize the heuristic so repeated traces skip the registry walk,
+        # but never persist it: a later autotune run should win.
+        with self._lock:
+            self._mem.setdefault(problem_key(p), cfg)
+        return cfg
+
+    def __len__(self):
+        with self._lock:
+            return len(self._mem)
+
+
+_default_cache: Optional[TuneCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> TuneCache:
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            _default_cache = TuneCache()
+        return _default_cache
+
+
+def set_default_cache(cache: Optional[TuneCache]):
+    """Swap the process-wide cache (tests; custom cache paths)."""
+    global _default_cache
+    with _default_lock:
+        _default_cache = cache

@@ -1,0 +1,73 @@
+"""Minimal deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must collect and run in bare environments (the container
+ships only jax + pytest).  When the real ``hypothesis`` is available the test
+modules import it directly; otherwise they fall back to this shim, which
+replays each ``@given`` test over a small deterministic sample of the
+declared strategies — property tests degrade to seeded example tests instead
+of breaking collection.
+
+Only the strategy combinators the suite actually uses are implemented
+(``sampled_from``, ``integers``, ``booleans``).  Install the real package
+(``pip install -r requirements-dev.txt``) for true property-based runs.
+"""
+
+from __future__ import annotations
+
+import random
+
+_FALLBACK_EXAMPLES = 5   # examples per test when replaying without hypothesis
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def settings(max_examples: int = _FALLBACK_EXAMPLES, **_ignored):
+    """Records max_examples on the wrapped test; other knobs are no-ops."""
+
+    def deco(fn):
+        fn._max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Replay the test over a deterministic sample of the strategies."""
+
+    def deco(fn):
+        # Deliberately NOT functools.wraps: pytest would follow __wrapped__
+        # to the original signature and treat strategy params as fixtures.
+        def wrapper():
+            rng = random.Random(0xDE77)
+            n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

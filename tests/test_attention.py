@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env: deterministic example replay
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models.attention import decode_attention, flash_attention
 

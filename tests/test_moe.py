@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env: deterministic example replay
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.models import moe as moe_mod
