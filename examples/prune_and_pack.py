@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.core.pruning import PruneSchedule, init_mask, maybe_update_mask
-from repro.core.sparsity import SparsityConfig, pack, prune, satisfies_pattern
+from repro.core.sparsity import (PackedWeight, SparsityConfig, pack, prune,
+                                 satisfies_pattern)
 from repro.launch.pack_tree import pack_tree
 from repro.models.families import build_model
 from repro.optim import adamw
@@ -59,25 +60,28 @@ def main():
     print(f"fine-tuned 4 steps (loss {float(m['loss']):.3f})")
 
     packed = pack_tree(params)
-    n_sparse = sum(1 for _ in _walk_packed(packed))
+    pws = list(_walk_packed(packed))
     total_dense, total_packed = 0, 0
-    for node in _walk_packed(packed):
-        o, k = node["shape"].value
-        m_, n_ = node["_sparse_m"].value, node["_sparse_n"].value
-        total_dense += o * k * 2
-        total_packed += node["values"].size * 3  # bf16 value + int8 index
-    print(f"packed {n_sparse} sparse layers: {total_dense/1e6:.1f}MB dense "
+    for pw in pws:
+        o, k = pw.dense_shape
+        stack = 1
+        for s in pw.stack_dims:
+            stack *= s
+        total_dense += stack * o * k * 2
+        total_packed += pw.values.size * 3  # bf16 value + int8 index
+    print(f"packed {len(pws)} sparse layers (pattern "
+          f"{pws[0].cfg.pattern_name()}): {total_dense/1e6:.1f}MB dense "
           f"-> {total_packed/1e6:.1f}MB packed "
           f"({total_dense/total_packed:.1f}x smaller weight stream)")
 
 
 def _walk_packed(tree):
-    if isinstance(tree, dict):
-        if "values" in tree and "_sparse_m" in tree:
-            yield tree
-        else:
-            for v in tree.values():
-                yield from _walk_packed(v)
+    """Yield every PackedWeight node (isinstance, no key-sniffing)."""
+    if isinstance(tree, PackedWeight):
+        yield tree
+    elif isinstance(tree, dict):
+        for v in tree.values():
+            yield from _walk_packed(v)
 
 
 if __name__ == "__main__":

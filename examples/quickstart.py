@@ -63,6 +63,8 @@ print("=" * 70)
 print("3. Sparse LM: train (masked) -> pack -> serve (DeMM)")
 print("=" * 70)
 from repro.configs.base import get_arch
+from repro.core.sparse_linear import ExecPolicy
+from repro.core.sparsity import PackedWeight
 from repro.launch.pack_tree import pack_tree
 from repro.models.families import build_model
 from repro.optim import adamw
@@ -85,9 +87,14 @@ for i in range(8):
     losses.append(float(m["loss"]))
 print(f"masked-sparse training: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
 
-packed_params = pack_tree(params)
+packed_params = pack_tree(params)   # sparse linears -> PackedWeight pytrees
+pws = [l for l in jax.tree_util.tree_leaves(
+    packed_params, is_leaf=lambda n: isinstance(n, PackedWeight))
+    if isinstance(l, PackedWeight)]
+print(f"packed weights are first-class pytrees ({len(pws)} nodes), e.g. "
+      f"{pws[0]}")
 eng = ServeEngine(model, packed_params, ServeConfig(num_slots=2, max_len=48),
-                  mode="packed")
+                  policy=ExecPolicy(mode="packed", backend="reference"))
 eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
                    max_new_tokens=8))
 eng.run_until_drained()

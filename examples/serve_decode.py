@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_arch
+from repro.core.sparse_linear import ExecPolicy
 from repro.core.sparsity import SparsityConfig
 from repro.launch.pack_tree import pack_tree
 from repro.models.families import build_model
@@ -18,7 +19,7 @@ from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
 
 def run_engine(model, params, cfg, mode, requests):
     eng = ServeEngine(model, params, ServeConfig(num_slots=4, max_len=64),
-                      mode=mode)
+                      policy=ExecPolicy(mode=mode))
     for r in requests:
         eng.submit(Request(uid=r.uid, prompt=r.prompt,
                            max_new_tokens=r.max_new_tokens))

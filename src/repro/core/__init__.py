@@ -2,12 +2,19 @@
 from repro.core.sparsity import (  # noqa: F401
     PATTERNS,
     PackedSparse,
+    PackedWeight,
     SparsityConfig,
+    Static,
     pack,
     prune,
     prune_mask,
     satisfies_pattern,
     unpack,
     unpack_packed,
+)
+from repro.core.sparse_linear import (  # noqa: F401
+    DEFAULT_POLICY,
+    ExecPolicy,
+    resolve_policy,
 )
 from repro.core.demm import DeMMConfig, demm_spmm, demm_spmm_k_passes  # noqa: F401

@@ -1,31 +1,124 @@
 """SparseLinear — the paper's technique as a first-class layer.
 
-Pure-functional (pytree params) linear layer with three execution modes:
+Pure-functional (pytree params) linear layer with one entry point,
 
-* ``dense``  — ordinary dense matmul (baseline / non-sparse layers).
-* ``masked`` — dense weight projected to N:M with straight-through gradients
-               (the training path; XLA sees a dense matmul so TP sharding and
-               remat behave exactly as for dense weights).
-* ``packed`` — weight stored as DeMM packed {values, indices}; the forward
-               pass is a DeMM spmm (the serving path).  HBM traffic for the
-               weight drops by ``cfg.compression_ratio()``.
+    y = apply(params, x, policy)
 
-``pack_params`` converts a trained masked layer to the packed serving form.
-The matmul convention is ``y = x @ W^T`` with W of shape (out, in): W is the
+where ``params`` is either
+
+* a dense/masked node ``{"w": (O, K) array[, "sparsity": Static(cfg)]}`` —
+  the training form (XLA sees a dense matmul, so TP sharding and remat
+  behave exactly as for dense weights), or
+* a :class:`~repro.core.sparsity.PackedWeight` — the DeMM packed serving
+  form, whose forward pass is a DeMM spmm streaming only packed bytes
+  (weight HBM traffic drops by ``cfg.compression_ratio()``),
+
+and :class:`ExecPolicy` carries the execution choice (``mode`` for
+dense-weight nodes, kernel ``backend``, optional sparsity-config overrides)
+that used to be threaded through the model stack as loose ``mode=``/
+``backend=`` string pairs.
+
+``pack_params`` converts a trained masked layer to a ``PackedWeight``.  The
+matmul convention is ``y = x @ W^T`` with W of shape (out, in): W is the
 sparse matrix A of the paper (row-sparse along the contraction dim) and the
 activations are the dense matrix B.
+
+The pre-PackedWeight dict conventions (``{values, indices, shape,
+_sparse_m, _sparse_n}`` packed nodes; ``_sparse_m``/``_sparse_n`` masked
+metadata) are still accepted through deprecation shims that warn and
+convert; they will be removed after one release.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+import warnings
+from typing import Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.pruning import masked_weight
-from repro.core.sparsity import PackedSparse, SparsityConfig, pack, prune
+from repro.core.sparsity import (
+    LAYOUT_XWT,
+    PackedWeight,
+    SparsityConfig,
+    Static,
+    pack,
+    prune,
+)
 
+MODES = ("dense", "masked", "packed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPolicy:
+    """How a (sparse) linear is executed.
+
+    * ``mode``    — ``dense`` | ``masked`` | ``packed``.  Only meaningful for
+      dense-weight nodes (``dense`` skips the N:M mask, ``masked``/``packed``
+      apply it); a :class:`PackedWeight` node always executes the packed
+      DeMM path regardless of mode.
+    * ``backend`` — kernel backend for packed matmuls: any name registered
+      in ``repro.tune`` (``reference``, ``pallas``, ``pallas_interpret``,
+      ...) or ``auto`` (per-(shape, dtype, pattern, platform) resolution
+      through the tuning cache).
+    * ``cfg_overrides`` — optional :class:`SparsityConfig` field overrides
+      (e.g. ``{"k": 2}``) applied to the node's stored config before the
+      mask/kernel runs.  For packed nodes the override must preserve
+      ``n_effective`` (the packed array layout is fixed at pack time).
+
+    Hashable (static-safe under jit); ``cfg_overrides`` dicts are
+    normalized to sorted item tuples.
+    """
+
+    mode: str = "masked"
+    backend: str = "reference"
+    cfg_overrides: Union[tuple, Mapping[str, int]] = ()
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; expected {MODES}")
+        if isinstance(self.cfg_overrides, Mapping):
+            object.__setattr__(self, "cfg_overrides",
+                               tuple(sorted(self.cfg_overrides.items())))
+        else:
+            object.__setattr__(self, "cfg_overrides",
+                               tuple(self.cfg_overrides))
+
+    def replace(self, **kw) -> "ExecPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def resolve_cfg(self, cfg: SparsityConfig) -> SparsityConfig:
+        if not self.cfg_overrides:
+            return cfg
+        return dataclasses.replace(cfg, **dict(self.cfg_overrides))
+
+
+DEFAULT_POLICY = ExecPolicy()
+DENSE_POLICY = ExecPolicy(mode="dense")
+
+
+def resolve_policy(policy: Optional[ExecPolicy] = None,
+                   mode: Optional[str] = None,
+                   backend: Optional[str] = None) -> ExecPolicy:
+    """Normalize the (policy | legacy mode/backend kwargs) calling
+    conventions into one :class:`ExecPolicy`."""
+    if policy is not None:
+        if mode is not None or backend is not None:
+            raise ValueError(
+                "pass either policy= or the legacy mode=/backend= kwargs, "
+                "not both")
+        return policy
+    if mode is None and backend is None:
+        return DEFAULT_POLICY
+    return ExecPolicy(mode=mode or DEFAULT_POLICY.mode,
+                      backend=backend or DEFAULT_POLICY.backend)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
 
 def init_dense(key, in_features: int, out_features: int, dtype=jnp.float32,
                scale: Optional[float] = None):
@@ -42,6 +135,66 @@ def init_sparse(key, in_features: int, out_features: int, cfg: SparsityConfig,
     return {"w": prune(p["w"], cfg)}
 
 
+# ---------------------------------------------------------------------------
+# Node introspection (+ legacy-format shims)
+# ---------------------------------------------------------------------------
+
+def node_sparsity(params) -> Optional[SparsityConfig]:
+    """The SparsityConfig of a dense-weight linear node, or None for a plain
+    dense linear.  Accepts the legacy ``_sparse_m``/``_sparse_n`` metadata
+    with a DeprecationWarning (``k`` is lost in that form — it predates
+    k-reconfiguration support)."""
+    if isinstance(params, PackedWeight):
+        return params.cfg
+    if not isinstance(params, dict):
+        return None
+    sp = params.get("sparsity")
+    if sp is not None:
+        return sp.value if isinstance(sp, Static) else sp
+    if "_sparse_m" in params:
+        warnings.warn(
+            "the _sparse_m/_sparse_n metadata keys are deprecated; "
+            "re-init the layer (init_linear stores a single "
+            "sparsity=Static(SparsityConfig) entry carrying k)",
+            DeprecationWarning, stacklevel=3)
+        return SparsityConfig(params["_sparse_n"].value,
+                              params["_sparse_m"].value, 1)
+    return None
+
+
+def _coerce_packed(params, cfg: Optional[SparsityConfig] = None
+                   ) -> Optional[PackedWeight]:
+    """PackedWeight passthrough, plus the deprecated packed-dict shim."""
+    if isinstance(params, PackedWeight):
+        return params
+    if isinstance(params, dict) and "values" in params:
+        warnings.warn(
+            "packed {values, indices, shape, _sparse_*} dicts are "
+            "deprecated; pack with pack_params/pack_tree to get a "
+            "PackedWeight",
+            DeprecationWarning, stacklevel=3)
+        return PackedWeight.from_legacy(params, cfg)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def apply(params, x: jax.Array,
+          policy: Optional[ExecPolicy] = None) -> jax.Array:
+    """Unified linear application: dense, masked, or packed-DeMM, chosen by
+    the node's type and the :class:`ExecPolicy`."""
+    policy = policy or DEFAULT_POLICY
+    pw = _coerce_packed(params)
+    if pw is not None:
+        return _apply_packed(pw, x, policy)
+    cfg = node_sparsity(params)
+    if cfg is None or policy.mode == "dense":
+        return apply_dense(params, x)
+    return apply_masked(params, x, policy.resolve_cfg(cfg))
+
+
 def apply_dense(params, x: jax.Array) -> jax.Array:
     w = params["w"]
     return jnp.einsum("...k,ok->...o", x, w.astype(x.dtype))
@@ -52,39 +205,55 @@ def apply_masked(params, x: jax.Array, cfg: SparsityConfig) -> jax.Array:
     return jnp.einsum("...k,ok->...o", x, w.astype(x.dtype))
 
 
-def pack_params(params, cfg: SparsityConfig) -> dict:
-    """Convert a trained masked layer to the packed DeMM serving form."""
-    from repro.models.layers import Static
+def _reconfigure(pw: PackedWeight, cfg: SparsityConfig) -> PackedWeight:
+    """Re-tag a packed weight with ``cfg``, allowing only layout-preserving
+    (same n_effective, same m) reconfigurations — the packed array shape is
+    fixed at pack time."""
+    if cfg == pw.cfg:
+        return pw
+    if cfg.n_effective != pw.cfg.n_effective or cfg.m != pw.cfg.m:
+        raise ValueError(
+            f"config {cfg.pattern_name()} changes the packed layout of a "
+            f"{pw.cfg.pattern_name()} weight; only n_effective-preserving "
+            "reconfigurations apply to an already-packed weight")
+    return pw.replace(cfg=cfg)
 
-    w = prune(params["w"], cfg)
-    packed = pack(w, cfg)
-    return {"values": packed.values, "indices": packed.indices,
-            "shape": Static(tuple(w.shape))}
 
-
-def apply_packed(params, x: jax.Array, cfg: SparsityConfig,
-                 backend: str = "reference") -> jax.Array:
-    """y = x @ W^T with W packed.
-
-    backend:
-      * ``reference``        — jnp one-hot decompress + matmul (used inside
-                               jit-compiled distributed steps; XLA fuses the
-                               decompress, HBM sees only packed bytes).
-      * ``pallas``           — the fused Pallas TPU kernel (real hardware).
-      * ``pallas_interpret`` — the same kernel in interpret mode (CPU checks).
-      * ``auto``             — per-(shape, dtype, pattern, platform) choice
-                               from the ``repro.tune`` cache/heuristics;
-                               pre-measure with ``repro.tune.autotune_xwT``
-                               or ``benchmarks/kernel_bench.py --autotune``.
-    """
+def _apply_packed(pw: PackedWeight, x: jax.Array,
+                  policy: ExecPolicy) -> jax.Array:
     from repro.kernels import ops
 
-    values, indices = params["values"], params["indices"]
-    shape = params["shape"]
-    out_features, in_features = (shape.value if hasattr(shape, "value")
-                                 else shape)
+    pw = _reconfigure(pw, policy.resolve_cfg(pw.cfg))
     xs = x.reshape(-1, x.shape[-1])
-    y = ops.demm_matmul_xwT(
-        xs, values, indices, cfg, (out_features, in_features), backend=backend
-    )
-    return y.reshape(*x.shape[:-1], out_features).astype(x.dtype)
+    y = ops.demm_matmul_packed(xs, pw, backend=policy.backend)
+    return y.reshape(*x.shape[:-1], pw.out_features).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+def pack_params(params, cfg: Optional[SparsityConfig] = None) -> PackedWeight:
+    """Convert a trained masked layer to the packed DeMM serving form."""
+    cfg = cfg or node_sparsity(params)
+    if cfg is None:
+        raise ValueError("pack_params needs a SparsityConfig (node carries "
+                         "no sparsity metadata and none was passed)")
+    w = prune(params["w"], cfg)
+    packed = pack(w, cfg)
+    return PackedWeight(packed.values, packed.indices, cfg=cfg,
+                        dense_shape=w.shape, layout=LAYOUT_XWT)
+
+
+def apply_packed(params, x: jax.Array, cfg: Optional[SparsityConfig] = None,
+                 backend: str = "reference") -> jax.Array:
+    """Deprecated-compat wrapper: packed application of a PackedWeight or a
+    legacy packed dict (which warns and converts).  New code should call
+    :func:`apply` with ``ExecPolicy(backend=...)``."""
+    pw = _coerce_packed(params, cfg)
+    if pw is None:
+        raise TypeError(f"apply_packed expects a PackedWeight or a legacy "
+                        f"packed dict, got {type(params)}")
+    if cfg is not None:
+        pw = _reconfigure(pw, cfg)
+    return _apply_packed(pw, x, ExecPolicy(mode="packed", backend=backend))

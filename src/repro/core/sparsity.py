@@ -32,6 +32,28 @@ import jax.numpy as jnp
 import numpy as np
 
 
+@jax.tree_util.register_static
+class Static:
+    """Hashable static metadata stored inside a params pytree (not traced).
+
+    Lives here (not in ``models.layers``) so core/serialization code never
+    has to import the model layer package; ``models.layers.Static`` re-exports
+    this class for backward compatibility.
+    """
+
+    def __init__(self, value):
+        self.value = value
+
+    def __eq__(self, other):
+        return isinstance(other, Static) and self.value == other.value
+
+    def __hash__(self):
+        return hash(("Static", self.value))
+
+    def __repr__(self):
+        return f"Static({self.value!r})"
+
+
 @dataclasses.dataclass(frozen=True)
 class SparsityConfig:
     """Relaxed structured sparsity pattern N:M with k-reconfiguration.
@@ -229,6 +251,156 @@ def unpack(values: jax.Array, indices: jax.Array, cfg: SparsityConfig,
 
 def unpack_packed(p: PackedSparse) -> jax.Array:
     return unpack(p.values, p.indices, p.cfg, p.shape)
+
+
+# ---------------------------------------------------------------------------
+# PackedWeight — the first-class packed-weight pytree
+# ---------------------------------------------------------------------------
+
+# Known packed layouts.  ``xwT`` is the serving orientation (y = x @ W^T with
+# W row-sparse along the contraction dim); ``block`` is reserved for the
+# two-level block-sparse format of kernels/demm_block_spmm.py once it gains
+# an ahead-of-time conversion pass.
+LAYOUT_XWT = "xwT"
+LAYOUT_BLOCK = "block"
+LAYOUTS = (LAYOUT_XWT, LAYOUT_BLOCK)
+
+
+class PackedWeight:
+    """A packed relaxed-N:M sparse weight as a registered JAX pytree.
+
+    This is the paper's ``{value, col_idx}`` stream as a first-class object:
+    ``values``/``indices`` are traced children (so ``jax.tree.map``, scan
+    stacking, optimizers, and shardings all see them), while the
+    :class:`SparsityConfig` (including k-reconfiguration), the per-layer
+    dense ``(out, in)`` shape, and the ``layout`` tag ride along as static
+    aux data — available at trace time for kernel dispatch and autotuning.
+
+    Shapes: ``values``/``indices`` are ``(*stack, O, G, Ne)`` with
+    ``G = in_features // cfg.m`` and ``Ne = cfg.n_effective``; ``dense_shape``
+    is always the per-layer 2-D ``(O, K)`` (leading stack dims — e.g. the
+    scan-stacked layer axis — do not change it).
+    """
+
+    __slots__ = ("values", "indices", "cfg", "dense_shape", "layout")
+
+    def __init__(self, values, indices, *, cfg: SparsityConfig, dense_shape,
+                 layout: str = LAYOUT_XWT):
+        if not isinstance(cfg, SparsityConfig):
+            raise TypeError(f"cfg must be a SparsityConfig, got {type(cfg)}")
+        if layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; expected {LAYOUTS}")
+        dense_shape = tuple(int(d) for d in dense_shape)
+        if len(dense_shape) != 2:
+            raise ValueError(f"dense_shape must be 2-D (out, in), got "
+                             f"{dense_shape}")
+        vshape = getattr(values, "shape", None)
+        if vshape is not None and len(vshape) >= 3:
+            g, ne = int(vshape[-2]), int(vshape[-1])
+            if ne != cfg.n_effective or g * cfg.m != dense_shape[1]:
+                raise ValueError(
+                    f"values shape {tuple(vshape)} is inconsistent with the "
+                    f"packed layout of cfg={cfg.pattern_name()} over dense "
+                    f"{dense_shape}: expected (*, {dense_shape[1] // cfg.m}, "
+                    f"{cfg.n_effective})")
+        self.values = values
+        self.indices = indices
+        self.cfg = cfg
+        self.dense_shape = dense_shape
+        self.layout = layout
+
+    # ---- static geometry -------------------------------------------------
+    @property
+    def out_features(self) -> int:
+        return self.dense_shape[0]
+
+    @property
+    def in_features(self) -> int:
+        return self.dense_shape[1]
+
+    @property
+    def groups(self) -> int:
+        return self.in_features // self.cfg.m
+
+    @property
+    def stack_dims(self) -> tuple:
+        """Leading (scan/vmap) stack dims in front of the (O, G, Ne) core."""
+        shape = getattr(self.values, "shape", None)
+        return tuple(shape[:-3]) if shape is not None else ()
+
+    def replace(self, **kw) -> "PackedWeight":
+        out = {"values": self.values, "indices": self.indices,
+               "cfg": self.cfg, "dense_shape": self.dense_shape,
+               "layout": self.layout}
+        out.update(kw)
+        return PackedWeight(out.pop("values"), out.pop("indices"), **out)
+
+    def __repr__(self):
+        vs = getattr(self.values, "shape", "?")
+        return (f"PackedWeight(values={vs}, cfg={self.cfg.pattern_name()!r}, "
+                f"dense_shape={self.dense_shape}, layout={self.layout!r})")
+
+    # ---- conversions -----------------------------------------------------
+    @classmethod
+    def from_dense(cls, w: jax.Array, cfg: SparsityConfig,
+                   layout: str = LAYOUT_XWT) -> "PackedWeight":
+        """Prune (if needed) and pack a dense 2-D weight."""
+        p = pack(prune(w, cfg), cfg)
+        return cls(p.values, p.indices, cfg=cfg, dense_shape=w.shape,
+                   layout=layout)
+
+    @classmethod
+    def from_legacy(cls, node: dict,
+                    cfg: "SparsityConfig | None" = None) -> "PackedWeight":
+        """Convert the pre-PackedWeight packed dict convention
+        ``{values, indices, shape[, _sparse_m, _sparse_n]}`` (``shape``
+        either a Static or a plain tuple).  The legacy format never carried
+        ``k``, so an embedded config is reconstructed with ``k=1``; the
+        oldest form (bare ``pack_params`` output) had no pattern metadata at
+        all and needs ``cfg`` passed explicitly."""
+        shape = node["shape"]
+        shape = shape.value if isinstance(shape, Static) else shape
+        if cfg is None:
+            if "_sparse_n" not in node:
+                raise ValueError(
+                    "legacy packed dict carries no _sparse_n/_sparse_m "
+                    "metadata; pass its SparsityConfig explicitly")
+            cfg = SparsityConfig(node["_sparse_n"].value,
+                                 node["_sparse_m"].value, 1)
+        return cls(node["values"], node["indices"], cfg=cfg,
+                   dense_shape=shape, layout=LAYOUT_XWT)
+
+    def to_dense(self) -> jax.Array:
+        """Scatter back to the dense weight, restoring any stack dims."""
+        o, k = self.dense_shape
+        vals, idxs = self.values, self.indices
+        stack = self.stack_dims
+        if stack:
+            vals = vals.reshape(-1, *vals.shape[-2:])
+            idxs = idxs.reshape(-1, *idxs.shape[-2:])
+        dense = unpack(vals, idxs, self.cfg, (vals.shape[0], k))
+        return dense.reshape(*stack, o, k) if stack else dense
+
+
+def _pw_flatten(pw: PackedWeight):
+    return (pw.values, pw.indices), (pw.cfg, pw.dense_shape, pw.layout)
+
+
+def _pw_flatten_with_keys(pw: PackedWeight):
+    return ((jax.tree_util.GetAttrKey("values"), pw.values),
+            (jax.tree_util.GetAttrKey("indices"), pw.indices)), \
+        (pw.cfg, pw.dense_shape, pw.layout)
+
+
+def _pw_unflatten(aux, children) -> PackedWeight:
+    values, indices = children
+    cfg, dense_shape, layout = aux
+    return PackedWeight(values, indices, cfg=cfg, dense_shape=dense_shape,
+                        layout=layout)
+
+
+jax.tree_util.register_pytree_with_keys(
+    PackedWeight, _pw_flatten_with_keys, _pw_unflatten, _pw_flatten)
 
 
 def reconfigure_k(p: PackedSparse, k: int) -> PackedSparse:

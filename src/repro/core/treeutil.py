@@ -1,0 +1,25 @@
+"""Small shared pytree utilities."""
+
+from __future__ import annotations
+
+
+def key_path_str(path) -> str:
+    """'/'-joined string form of a jax key path.
+
+    Handles DictKey (``.key``), SequenceKey (``.idx``), and GetAttrKey
+    (``.name`` — e.g. PackedWeight's values/indices children); anything else
+    falls back to ``str``.  The single source of truth for path naming, used
+    by both checkpoint leaf files and partitioning rules so the two can
+    never silently diverge.
+    """
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)

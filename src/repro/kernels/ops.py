@@ -32,11 +32,33 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import SparsityConfig, unpack
+from repro.core.sparsity import LAYOUT_XWT, PackedWeight, SparsityConfig, unpack
 
 # Baseline backends always registered; `repro.tune.backend_names("xwT")` has
 # the live list (plus "auto", resolved through the tuning cache).
 BACKENDS = ("reference", "pallas", "pallas_interpret", "auto")
+
+
+def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
+                       backend: str = "reference") -> jax.Array:
+    """y = x @ W^T for a first-class :class:`PackedWeight`.
+
+    The sparsity config (including k-reconfiguration) and dense shape come
+    from the type's static aux data, so call sites never re-derive them from
+    loose dict keys.  ``pw`` must be an unstacked (O, G, Ne) weight — scan
+    bodies slice the layer axis off stacked weights before applying.
+    """
+    if pw.layout != LAYOUT_XWT:
+        raise NotImplementedError(
+            f"layout {pw.layout!r} has no registered matmul op yet "
+            f"(only {LAYOUT_XWT!r}; 'block' lands with the block_spmm "
+            "ahead-of-time conversion pass)")
+    if getattr(pw.values, "ndim", 3) != 3:
+        raise ValueError(
+            f"demm_matmul_packed needs an unstacked (O, G, Ne) weight, got "
+            f"values of shape {pw.values.shape}; slice the stack axis first")
+    return demm_matmul_xwT(x, pw.values, pw.indices, pw.cfg, pw.dense_shape,
+                           backend)
 
 
 def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):

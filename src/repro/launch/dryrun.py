@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.sparse_linear import ExecPolicy
 from repro.configs.base import (
     ARCH_IDS,
     SHAPES,
@@ -212,7 +213,7 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
             from repro.train.train_loop import make_train_step
             nmb = num_microbatches
             step_fn = make_train_step(model, opt_cfg, num_microbatches=nmb,
-                                      mode="masked")
+                                      policy=ExecPolicy(mode="masked"))
             lowered = jax.jit(
                 step_fn,
                 in_shardings=(pshard, oshard, bshard, None),
@@ -226,7 +227,8 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                     mesh, P(dp_axes, *([None] * (len(s.shape) - 1)))), batch)
 
             def prefill_fn(params, batch):
-                logits, _ = model.prefill(params, batch, mode="masked")
+                logits, _ = model.prefill(params, batch,
+                                          policy=ExecPolicy(mode="masked"))
                 return logits
 
             lowered = jax.jit(
@@ -248,10 +250,11 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                         else None, None))
             # serving baseline: dense weights (masks baked offline); packed =
             # the paper's DeMM serving form
-            mode = "packed" if packed else "dense"
+            policy = ExecPolicy(mode="packed" if packed else "dense")
 
             def decode_fn(params, state, tokens):
-                return model.decode_step(params, state, tokens, mode=mode)
+                return model.decode_step(params, state, tokens,
+                                         policy=policy)
 
             lowered = jax.jit(
                 decode_fn,

@@ -1,38 +1,56 @@
 """Whole-model conversion to the DeMM packed serving form.
 
 ``pack_tree(params)`` walks the param pytree and converts every sparse
-linear ({w, _sparse_m, _sparse_n}) to its packed {values, indices, shape}
-form; ``pack_tree_shapes`` is the eval_shape twin used by the dry-run."""
+linear (``{"w": ..., "sparsity": Static(cfg)}``) to a first-class
+:class:`~repro.core.sparsity.PackedWeight` node, including the layer-stacked
+scan case (leading stack dims are preserved on values/indices while
+``dense_shape`` stays the per-layer 2-D shape).  ``pack_tree_shapes`` is the
+eval_shape twin used by the dry-run."""
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 
-from repro.models.layers import Static, pack_linear
+from repro.core import sparse_linear as sl
+from repro.core.sparsity import PackedWeight
 
 
 def _is_sparse_linear(node) -> bool:
-    return isinstance(node, dict) and "_sparse_m" in node and "w" in node
+    """Deprecated: the pre-PackedWeight key-sniffing predicate.  Kept for one
+    release so external tree-walkers keep working; new code should test
+    ``sl.node_sparsity(node) is not None``."""
+    warnings.warn(
+        "_is_sparse_linear is deprecated; use "
+        "repro.core.sparse_linear.node_sparsity(node) is not None",
+        DeprecationWarning, stacklevel=2)
+    return isinstance(node, dict) and "w" in node and (
+        "sparsity" in node or "_sparse_m" in node)
 
 
-def _pack_sparse_linear(node):
+def _pack_sparse_linear(node, cfg) -> PackedWeight:
     w = node["w"]
     if w.ndim == 2:
-        return pack_linear(node)
+        return sl.pack_params(node, cfg)
     # layer-stacked (L, ..., O, K): pack rows flat, restore the stack dims
     lead = w.shape[:-2]
     o, k = w.shape[-2], w.shape[-1]
-    out = pack_linear(dict(node, w=w.reshape(-1, k)))
-    out["values"] = out["values"].reshape(*lead, o, *out["values"].shape[1:])
-    out["indices"] = out["indices"].reshape(*lead, o, *out["indices"].shape[1:])
-    out["shape"] = Static((o, k))  # per-layer dense shape (post scan-slice)
-    return out
+    pw = sl.pack_params({"w": w.reshape(-1, k)}, cfg)
+    return PackedWeight(
+        pw.values.reshape(*lead, o, *pw.values.shape[1:]),
+        pw.indices.reshape(*lead, o, *pw.indices.shape[1:]),
+        cfg=cfg, dense_shape=(o, k), layout=pw.layout)
 
 
 def pack_tree(params):
-    if _is_sparse_linear(params):
-        return _pack_sparse_linear(params)
+    if isinstance(params, PackedWeight):
+        return params
     if isinstance(params, dict):
+        if "w" in params:
+            cfg = sl.node_sparsity(params)
+            if cfg is not None:
+                return _pack_sparse_linear(params, cfg)
         return {k: pack_tree(v) for k, v in params.items()}
     return params
 

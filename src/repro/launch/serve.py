@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_arch
+from repro.core.sparse_linear import ExecPolicy
 from repro.launch.pack_tree import pack_tree
 from repro.models.families import build_model
 from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
@@ -52,10 +53,11 @@ def main():
     if args.packed:
         params = pack_tree(params)
         mode = "packed"
+    policy = ExecPolicy(mode=mode, backend=args.backend)
     engine = ServeEngine(model, params,
                          ServeConfig(num_slots=args.slots,
                                      max_len=args.max_len),
-                         mode=mode, backend=args.backend,
+                         policy=policy,
                          autotune=args.autotune and args.packed)
 
     rng = np.random.default_rng(0)

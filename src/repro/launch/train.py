@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_arch
 from repro.data.pipeline import DataConfig, global_batch
+from repro.core.sparse_linear import ExecPolicy
 from repro.models.families import build_model
 from repro.optim import adamw
 from repro.train.fault_tolerance import SupervisorConfig, TrainingSupervisor
@@ -68,7 +69,8 @@ def main():
                                 compression=args.compression)
     opt_state = adamw.init(opt_cfg, params)
     step_fn = jax.jit(make_train_step(
-        model, opt_cfg, num_microbatches=args.microbatches, mode="masked"))
+        model, opt_cfg, num_microbatches=args.microbatches,
+        policy=ExecPolicy(mode="masked")))
 
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch)

@@ -223,12 +223,12 @@ def _constrain_heads(x, *, seq_sharded=False):
 
 
 def _project_qkv(params, x, kv_x, num_heads, num_kv_heads, head_dim,
-                 mode, backend):
+                 policy):
     b, t, _ = x.shape
     skv = kv_x.shape[1]
-    q = apply_linear(params["wq"], x, mode=mode, backend=backend)
-    k = apply_linear(params["wk"], kv_x, mode=mode, backend=backend)
-    v = apply_linear(params["wv"], kv_x, mode=mode, backend=backend)
+    q = apply_linear(params["wq"], x, policy=policy)
+    k = apply_linear(params["wk"], kv_x, policy=policy)
+    v = apply_linear(params["wv"], kv_x, policy=policy)
     return (_constrain_heads(q.reshape(b, t, num_heads, head_dim)),
             _constrain_heads(k.reshape(b, skv, num_kv_heads, head_dim)),
             _constrain_heads(v.reshape(b, skv, num_kv_heads, head_dim)))
@@ -237,14 +237,14 @@ def _project_qkv(params, x, kv_x, num_heads, num_kv_heads, head_dim,
 def apply_attention(
     params, x, *, num_heads, num_kv_heads, head_dim, rope_theta,
     positions=None, causal=True, window=-1, static_window=None, kv_x=None,
-    mode="masked", backend="reference", q_chunk=512, kv_chunk=1024,
+    policy=None, q_chunk=512, kv_chunk=1024,
 ):
     """Self- (kv_x=None) or cross- (kv_x=encoder out, causal=False) attention."""
     b, t, _ = x.shape
     cross = kv_x is not None
     kv_src = kv_x if cross else x
     q, k, v = _project_qkv(params, x, kv_src, num_heads, num_kv_heads,
-                           head_dim, mode, backend)
+                           head_dim, policy)
     if positions is None:
         positions = jnp.arange(t)
     if not cross:
@@ -254,19 +254,19 @@ def apply_attention(
                           static_window=static_window,
                           q_chunk=q_chunk, kv_chunk=kv_chunk)
     out = out.reshape(b, t, num_heads * head_dim)
-    return apply_linear(params["wo"], out, mode=mode, backend=backend)
+    return apply_linear(params["wo"], out, policy=policy)
 
 
 def apply_attention_decode(
     params, x, cache, pos, *, num_heads, num_kv_heads, head_dim, rope_theta,
-    window=-1, mode="masked", backend="reference",
+    window=-1, policy=None,
 ):
     """One-token decode.  cache: {"k": (B,S,Hkv,Dh), "v": ...}; pos: (B,)
     index at which to write the new KV (== current length).  Returns
     (out (B,1,D), new_cache)."""
     b = x.shape[0]
     q, k_new, v_new = _project_qkv(params, x, x, num_heads, num_kv_heads,
-                                   head_dim, mode, backend)
+                                   head_dim, policy)
     q = apply_rope(q, pos[:, None], rope_theta)
     k_new = apply_rope(k_new, pos[:, None], rope_theta)
     onehot = jax.nn.one_hot(pos, cache["k"].shape[1],
@@ -275,7 +275,7 @@ def apply_attention_decode(
     v_cache = cache["v"] + onehot[:, :, None, None] * v_new.astype(cache["v"].dtype)
     out = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
     out = out.reshape(b, 1, num_heads * head_dim)
-    out = apply_linear(params["wo"], out, mode=mode, backend=backend)
+    out = apply_linear(params["wo"], out, policy=policy)
     return out, {"k": k_cache, "v": v_cache}
 
 

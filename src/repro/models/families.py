@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.sparse_linear import resolve_policy
 from repro.models import attention as attn
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
@@ -64,7 +65,7 @@ class EncDecLM:
             "final_norm": init_rmsnorm(cfg.d_model, dtype),
         }
 
-    def encode(self, params, frames, *, mode="masked", backend="reference"):
+    def encode(self, params, frames, *, policy=None):
         """frames: (B, S_src, D) stub audio embeddings."""
         cfg = self.cfg
         x = apply_linear(params["frame_proj"],
@@ -74,13 +75,13 @@ class EncDecLM:
         def body(x, blk):
             x, _ = apply_tblock_seq(blk, x, cfg, window=FULL_WINDOW,
                                     positions=jnp.arange(t), causal=False,
-                                    mode=mode, backend=backend)
+                                    policy=policy)
             return x, None
 
         x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
         return apply_rmsnorm(params["enc_norm"], x)
 
-    def _decode_seq(self, params, tokens, enc_out, *, mode, backend):
+    def _decode_seq(self, params, tokens, enc_out, *, policy):
         cfg = self.cfg
         x = apply_embedding(params["embed"], tokens).astype(enc_out.dtype)
         t = x.shape[1]
@@ -88,27 +89,26 @@ class EncDecLM:
         def body(x, blk):
             x, _ = apply_tblock_seq(blk, x, cfg, window=FULL_WINDOW,
                                     positions=jnp.arange(t), enc_out=enc_out,
-                                    mode=mode, backend=backend)
+                                    policy=policy)
             return x, None
 
         x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
         return apply_rmsnorm(params["final_norm"], x)
 
-    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
-        enc_out = self.encode(params, batch["frames"], mode=mode,
-                              backend=backend)
-        x = self._decode_seq(params, batch["tokens"], enc_out, mode=mode,
-                             backend=backend)
+    def train_loss(self, params, batch, *, policy=None,
+                         mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
+        enc_out = self.encode(params, batch["frames"], policy=policy)
+        x = self._decode_seq(params, batch["tokens"], enc_out, policy=policy)
         logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
         loss = softmax_xent(logits, batch["targets"])
         return loss, {"xent": loss}
 
-    def prefill(self, params, batch, *, max_len=None, mode="masked",
-                backend="reference"):
-        enc_out = self.encode(params, batch["frames"], mode=mode,
-                              backend=backend)
-        x = self._decode_seq(params, batch["tokens"], enc_out, mode=mode,
-                             backend=backend)
+    def prefill(self, params, batch, *, max_len=None, policy=None,
+                      mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
+        enc_out = self.encode(params, batch["frames"], policy=policy)
+        x = self._decode_seq(params, batch["tokens"], enc_out, policy=policy)
         logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
         b = x.shape[0]
         state = self.init_decode_state(b, max_len or x.shape[1] + 1,
@@ -132,8 +132,9 @@ class EncDecLM:
             "pos": jnp.zeros((batch,), jnp.int32),
         }
 
-    def decode_step(self, params, state, tokens, *, mode="masked",
-                    backend="reference"):
+    def decode_step(self, params, state, tokens, *, policy=None,
+                          mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = apply_embedding(params["embed"], tokens).astype(dtype)
@@ -148,18 +149,17 @@ class EncDecLM:
                 blk["attn"], h, {"k": kc, "v": vc}, pos,
                 num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
                 head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-                window=FULL_WINDOW, mode=mode, backend=backend)
+                window=FULL_WINDOW, policy=policy)
             x = x + h
             h = apply_rmsnorm(blk["ln_x"], x)
             h = attn.apply_attention(
                 blk["xattn"], h,
                 num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
                 head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-                causal=False, window=-1, kv_x=enc_out, mode=mode,
-                backend=backend)
+                causal=False, window=-1, kv_x=enc_out, policy=policy)
             x = x + h
             h = apply_rmsnorm(blk["ln2"], x)
-            h = apply_mlp(blk["mlp"], h, mode=mode, backend=backend)
+            h = apply_mlp(blk["mlp"], h, policy=policy)
             return x + h, (nc["k"], nc["v"])
 
         x, (ks, vs) = jax.lax.scan(body, x,
@@ -223,15 +223,14 @@ class HybridLM:
         tail = jax.tree.map(lambda a: a[n_p * period:], params["layers"])
         return stacked, tail
 
-    def _mamba_layer(self, blk, x, *, mode, backend):
+    def _mamba_layer(self, blk, x, *, policy):
         cfg = self.cfg
         h = apply_rmsnorm(blk["ln"], x)
         h = ssm_mod.apply_mamba2_seq(
-            blk["mamba"], h, chunk=cfg.ssm.chunk, mode=mode,
-            backend=backend, **self._ssm_kwargs())
+            blk["mamba"], h, chunk=cfg.ssm.chunk, policy=policy, **self._ssm_kwargs())
         return x + h
 
-    def _seq(self, params, tokens, *, mode, backend):
+    def _seq(self, params, tokens, *, policy):
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = apply_embedding(params["embed"], tokens).astype(dtype)
@@ -243,27 +242,29 @@ class HybridLM:
         def body(x, blks):
             for i in range(period):
                 blk = jax.tree.map(lambda a: a[i], blks)
-                x = self._mamba_layer(blk, x, mode=mode, backend=backend)
+                x = self._mamba_layer(blk, x, policy=policy)
             x, _ = apply_tblock_seq(shared, x, cfg, window=FULL_WINDOW,
-                                    positions=jnp.arange(t), mode=mode,
-                                    backend=backend)
+                                    positions=jnp.arange(t), policy=policy)
             return x, None
 
         x, _ = jax.lax.scan(_remat(body, cfg), x, stacked)
         for i in range(n_tail):
             blk = jax.tree.map(lambda a: a[i], tail)
-            x = self._mamba_layer(blk, x, mode=mode, backend=backend)
+            x = self._mamba_layer(blk, x, policy=policy)
         return apply_rmsnorm(params["final_norm"], x)
 
-    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
-        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+    def train_loss(self, params, batch, *, policy=None,
+                         mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
+        x = self._seq(params, batch["tokens"], policy=policy)
         logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
         loss = softmax_xent(logits, batch["targets"])
         return loss, {"xent": loss}
 
-    def prefill(self, params, batch, *, max_len=None, mode="masked",
-                backend="reference"):
-        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+    def prefill(self, params, batch, *, max_len=None, policy=None,
+                      mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
+        x = self._seq(params, batch["tokens"], policy=policy)
         logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
         return logits, self.init_decode_state(
             x.shape[0], max_len or x.shape[1] + 1)
@@ -294,15 +295,16 @@ class HybridLM:
             "pos": jnp.zeros((batch,), jnp.int32),
         }
 
-    def _mamba_step(self, blk, x, st, *, mode, backend):
+    def _mamba_step(self, blk, x, st, *, policy):
         h = apply_rmsnorm(blk["ln"], x)
         h, st2 = ssm_mod.apply_mamba2_step(
-            blk["mamba"], h, st, mode=mode, backend=backend,
+            blk["mamba"], h, st, policy=policy,
             **self._ssm_kwargs())
         return x + h, st2
 
-    def decode_step(self, params, state, tokens, *, mode="masked",
-                    backend="reference"):
+    def decode_step(self, params, state, tokens, *, policy=None,
+                          mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = apply_embedding(params["embed"], tokens).astype(dtype)
@@ -317,18 +319,17 @@ class HybridLM:
             for i in range(period):
                 blk = jax.tree.map(lambda a: a[i], blks)
                 sti = jax.tree.map(lambda a: a[i], sst)
-                x, st2 = self._mamba_step(blk, x, sti, mode=mode,
-                                          backend=backend)
+                x, st2 = self._mamba_step(blk, x, sti, policy=policy)
                 new_s.append(st2)
             h = apply_rmsnorm(shared["ln1"], x)
             h, nc = attn.apply_attention_decode(
                 shared["attn"], h, {"k": kc, "v": vc}, pos,
                 num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
                 head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-                window=FULL_WINDOW, mode=mode, backend=backend)
+                window=FULL_WINDOW, policy=policy)
             x = x + h
             h = apply_rmsnorm(shared["ln2"], x)
-            h = apply_mlp(shared["mlp"], h, mode=mode, backend=backend)
+            h = apply_mlp(shared["mlp"], h, policy=policy)
             x = x + h
             stacked_s = jax.tree.map(lambda *a: jnp.stack(a), *new_s)
             return x, (stacked_s, nc["k"], nc["v"])
@@ -341,7 +342,7 @@ class HybridLM:
         for i in range(n_tail):
             blk = jax.tree.map(lambda a: a[i], tail)
             sti = jax.tree.map(lambda a: a[i], state["ssm_tail"])
-            x, st2 = self._mamba_step(blk, x, sti, mode=mode, backend=backend)
+            x, st2 = self._mamba_step(blk, x, sti, policy=policy)
             new_tail.append(st2)
         tail_s = (jax.tree.map(lambda *a: jnp.stack(a), *new_tail)
                   if new_tail else state["ssm_tail"])
@@ -403,7 +404,7 @@ class XLSTMLM:
             "final_norm": init_rmsnorm(cfg.d_model, dtype),
         }
 
-    def _seq(self, params, tokens, *, mode, backend):
+    def _seq(self, params, tokens, *, policy):
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = apply_embedding(params["embed"], tokens).astype(dtype)
@@ -415,25 +416,27 @@ class XLSTMLM:
                 h = apply_rmsnorm(sub["ln"], x)
                 x = x + ssm_mod.apply_mlstm_seq(
                     sub["blk"], h, heads=cfg.num_heads, chunk=cfg.ssm.chunk,
-                    mode=mode, backend=backend)
+                    policy=policy)
             h = apply_rmsnorm(period["slstm"]["ln"], x)
             x = x + ssm_mod.apply_slstm_seq(
-                period["slstm"]["blk"], h, heads=cfg.num_heads, mode=mode,
-                backend=backend)
+                period["slstm"]["blk"], h, heads=cfg.num_heads, policy=policy)
             return x, None
 
         x, _ = jax.lax.scan(_remat(body, cfg), x, params["periods"])
         return apply_rmsnorm(params["final_norm"], x)
 
-    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
-        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+    def train_loss(self, params, batch, *, policy=None,
+                         mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
+        x = self._seq(params, batch["tokens"], policy=policy)
         logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
         loss = softmax_xent(logits, batch["targets"])
         return loss, {"xent": loss}
 
-    def prefill(self, params, batch, *, max_len=None, mode="masked",
-                backend="reference"):
-        x = self._seq(params, batch["tokens"], mode=mode, backend=backend)
+    def prefill(self, params, batch, *, max_len=None, policy=None,
+                      mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
+        x = self._seq(params, batch["tokens"], policy=policy)
         logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
         return logits, self.init_decode_state(x.shape[0], max_len or 1)
 
@@ -463,8 +466,9 @@ class XLSTMLM:
             "pos": jnp.zeros((batch,), jnp.int32),
         }
 
-    def decode_step(self, params, state, tokens, *, mode="masked",
-                    backend="reference"):
+    def decode_step(self, params, state, tokens, *, policy=None,
+                          mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = apply_embedding(params["embed"], tokens).astype(dtype)
@@ -478,14 +482,13 @@ class XLSTMLM:
                 sti = jax.tree.map(lambda a: a[i], mst)
                 h = apply_rmsnorm(sub["ln"], x)
                 out, st2 = ssm_mod.apply_mlstm_step(
-                    sub["blk"], h, sti, heads=cfg.num_heads, mode=mode,
-                    backend=backend)
+                    sub["blk"], h, sti, heads=cfg.num_heads, policy=policy)
                 x = x + out
                 new_m.append(st2)
             h = apply_rmsnorm(period["slstm"]["ln"], x)
             out, sst2 = ssm_mod.apply_slstm_step(
                 period["slstm"]["blk"], h, sst, heads=cfg.num_heads,
-                mode=mode, backend=backend)
+                policy=policy)
             x = x + out
             stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
             return x, (stacked_m, sst2)

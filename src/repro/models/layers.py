@@ -8,6 +8,7 @@ dense for training, packed for serving (repro.core.sparse_linear).
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -15,30 +16,14 @@ import jax.numpy as jnp
 
 from repro.core import sparse_linear as sl
 from repro.core.pruning import masked_weight
-from repro.core.sparsity import SparsityConfig
+from repro.core.sparse_linear import ExecPolicy, resolve_policy
+from repro.core.sparsity import PackedWeight, SparsityConfig, Static
 from repro.configs.base import choose_group
 
 
 def dtype_of(name: str):
     return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
             "float16": jnp.float16}[name]
-
-
-@jax.tree_util.register_static
-class Static:
-    """Hashable static metadata stored inside a params pytree (not traced)."""
-
-    def __init__(self, value):
-        self.value = value
-
-    def __eq__(self, other):
-        return isinstance(other, Static) and self.value == other.value
-
-    def __hash__(self):
-        return hash(("Static", self.value))
-
-    def __repr__(self):
-        return f"Static({self.value!r})"
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +37,9 @@ def init_linear(key, in_f: int, out_f: int, *, sparse: Optional[SparsityConfig],
                 dtype=jnp.float32, name: str = "linear"):
     """Weight (out_f, in_f).  When ``sparse`` is set, the effective group
     config is adapted to the contraction dim (choose_group) and the weight is
-    initialized pre-pruned to the pattern.
+    initialized pre-pruned to the pattern; the resolved config (including
+    the requested k-reconfiguration) is stored as ``sparsity`` static
+    metadata so it survives pack → serve → checkpoint end to end.
 
     The group size M must divide the per-TP-shard slice of the contraction
     dim (row-parallel weights shard K over 'model'): otherwise computing the
@@ -61,36 +48,43 @@ def init_linear(key, in_f: int, out_f: int, *, sparse: Optional[SparsityConfig],
     if sparse is not None:
         k_align = in_f // PRODUCTION_TP if in_f % PRODUCTION_TP == 0 else in_f
         cfg = choose_group(k_align, sparse.density, sparse.m)
+        if sparse.k > 1:
+            if cfg.n_effective % sparse.k == 0:
+                # re-express the adapted pattern with the requested
+                # k-reconfiguration (same n_effective, same numerics)
+                cfg = SparsityConfig(cfg.n_effective // sparse.k, cfg.m,
+                                     sparse.k)
+            else:
+                warnings.warn(
+                    f"requested k={sparse.k} reconfiguration cannot be kept "
+                    f"for {name}: the group config adapted to the "
+                    f"contraction dim ({cfg.pattern_name()}) has "
+                    f"n_effective={cfg.n_effective} not divisible by k; "
+                    "storing k=1", stacklevel=2)
         p = sl.init_sparse(key, in_f, out_f, cfg, dtype)
-        p["_sparse_m"] = Static(cfg.m)   # static metadata (not traced)
-        p["_sparse_n"] = Static(cfg.n)
+        p["sparsity"] = Static(cfg)   # static metadata (not traced)
         return p
     return sl.init_dense(key, in_f, out_f, dtype)
 
 
-def apply_linear(params, x, *, mode: str = "masked", backend: str = "reference"):
-    """mode: dense | masked (train) | packed (serve)."""
-    if "_sparse_m" not in params and "values" not in params:
-        return sl.apply_dense(params, x)
-    if "values" in params:  # packed serving form
-        cfg = SparsityConfig(params["_sparse_n"].value,
-                             params["_sparse_m"].value, 1)
-        return sl.apply_packed(params, x, cfg, backend=backend)
-    cfg = SparsityConfig(params["_sparse_n"].value, params["_sparse_m"].value, 1)
-    if mode == "dense":
-        return sl.apply_dense(params, x)
-    return sl.apply_masked(params, x, cfg)
+def apply_linear(params, x, policy: Optional[ExecPolicy] = None, *,
+                 mode: Optional[str] = None, backend: Optional[str] = None):
+    """Apply a linear node (dense dict, masked-sparse dict, or PackedWeight)
+    under an :class:`ExecPolicy`.  ``mode=``/``backend=`` are accepted as
+    legacy kwargs and folded into a policy."""
+    if mode is not None or backend is not None or policy is None:
+        policy = resolve_policy(policy, mode, backend)
+    return sl.apply(params, x, policy)
 
 
 def pack_linear(params):
     """Convert a (sparse) trained linear to the packed DeMM serving form."""
-    if "_sparse_m" not in params:
+    if isinstance(params, PackedWeight):
         return params
-    cfg = SparsityConfig(params["_sparse_n"].value, params["_sparse_m"].value, 1)
-    out = sl.pack_params(params, cfg)
-    out["_sparse_m"] = Static(cfg.m)
-    out["_sparse_n"] = Static(cfg.n)
-    return out
+    cfg = sl.node_sparsity(params)
+    if cfg is None:
+        return params
+    return sl.pack_params(params, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -182,8 +176,8 @@ def init_mlp(key, d: int, d_ff: int, *, sparse, dtype=jnp.float32):
     }
 
 
-def apply_mlp(params, x, *, mode="masked", backend="reference"):
-    g = apply_linear(params["gate"], x, mode=mode, backend=backend)
-    u = apply_linear(params["up"], x, mode=mode, backend=backend)
+def apply_mlp(params, x, *, policy: Optional[ExecPolicy] = None):
+    g = apply_linear(params["gate"], x, policy)
+    u = apply_linear(params["up"], x, policy)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u.astype(x.dtype)
-    return apply_linear(params["down"], h, mode=mode, backend=backend)
+    return apply_linear(params["down"], h, policy)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.core.sparse_linear import DENSE_POLICY
 from repro.models.layers import apply_linear, init_linear
 
 
@@ -35,8 +36,7 @@ def init_moe(key, d: int, cfg: MoEConfig, *, sparse=None, dtype=jnp.float32):
     }
 
 
-def apply_moe(params, x, cfg: MoEConfig, *, mode="masked",
-              backend="reference", capacity: int | None = None):
+def apply_moe(params, x, cfg: MoEConfig, *, policy=None, capacity: int | None = None):
     """x: (B, T, D) -> (y (B, T, D), aux_loss scalar).
 
     With an active sharding context, dispatch runs under shard_map: routing
@@ -48,20 +48,19 @@ def apply_moe(params, x, cfg: MoEConfig, *, mode="masked",
 
     ctx = shctx.get_context()
     if ctx is not None and cfg.num_experts % ctx.tp == 0:
-        return _apply_moe_ep(params, x, cfg, ctx, mode=mode, backend=backend,
+        return _apply_moe_ep(params, x, cfg, ctx, policy=policy,
                              capacity=capacity)
-    return _apply_moe_local(params, x, cfg, mode=mode, backend=backend,
+    return _apply_moe_local(params, x, cfg, policy=policy,
                             capacity=capacity)
 
 
-def _apply_moe_local(params, x, cfg: MoEConfig, *, mode="masked",
-                     backend="reference", capacity: int | None = None):
+def _apply_moe_local(params, x, cfg: MoEConfig, *, policy=None, capacity: int | None = None):
     b, t, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token
     n_tok = b * t
     xf = x.reshape(n_tok, d)
 
-    logits = apply_linear(params["router"], xf, mode="dense").astype(jnp.float32)
+    logits = apply_linear(params["router"], xf, DENSE_POLICY).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)                  # (N, E)
     gate_vals, top_e = jax.lax.top_k(probs, k)               # (N, k)
     gate_vals = gate_vals / jnp.maximum(
@@ -111,7 +110,7 @@ def _apply_moe_local(params, x, cfg: MoEConfig, *, mode="masked",
 # Expert-parallel path (shard_map over the active mesh)
 # ---------------------------------------------------------------------------
 
-def _apply_moe_ep(params, x, cfg: MoEConfig, ctx, *, mode, backend, capacity):
+def _apply_moe_ep(params, x, cfg: MoEConfig, ctx, *, policy, capacity):
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 

@@ -43,8 +43,8 @@ def init_mamba2(key, d: int, *, expand=2, state=64, head_dim=64, conv=4,
     }
 
 
-def _mamba2_split(params, u, *, di, state, heads, mode, backend):
-    zxbcdt = apply_linear(params["in_proj"], u, mode=mode, backend=backend)
+def _mamba2_split(params, u, *, di, state, heads, policy):
+    zxbcdt = apply_linear(params["in_proj"], u, policy=policy)
     z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * state], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     return z, xbc, dt
@@ -59,13 +59,13 @@ def _causal_conv(x, w):
 
 
 def apply_mamba2_seq(params, u, *, expand=2, state=64, head_dim=64,
-                     chunk=128, mode="masked", backend="reference"):
+                     chunk=128, policy=None):
     """Full-sequence Mamba2 (SSD chunked).  u: (B, T, D) -> (B, T, D)."""
     b, t, d = u.shape
     di = expand * d
     heads = di // head_dim
     z, xbc, dt = _mamba2_split(params, u, di=di, state=state, heads=heads,
-                               mode=mode, backend=backend)
+                               policy=policy)
     xbc = _causal_conv(xbc, params["conv_w"])
     x, bmat, cmat = jnp.split(xbc, [di, di + state], axis=-1)
     x = x.reshape(b, t, heads, head_dim)
@@ -113,7 +113,7 @@ def apply_mamba2_seq(params, u, *, expand=2, state=64, head_dim=64,
     y = y.reshape(b, t, di).astype(u.dtype)
     y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
         z.astype(jnp.float32)).astype(u.dtype)
-    return apply_linear(params["out_proj"], y, mode=mode, backend=backend)
+    return apply_linear(params["out_proj"], y, policy=policy)
 
 
 def init_mamba2_state(batch, d, *, expand=2, state=64, head_dim=64, conv=4,
@@ -127,13 +127,13 @@ def init_mamba2_state(batch, d, *, expand=2, state=64, head_dim=64, conv=4,
 
 
 def apply_mamba2_step(params, u, ssm_state, *, expand=2, state=64,
-                      head_dim=64, mode="masked", backend="reference"):
+                      head_dim=64, policy=None):
     """Single-token decode.  u: (B, 1, D); O(1) state update."""
     b, _, d = u.shape
     di = expand * d
     heads = di // head_dim
     z, xbc, dt = _mamba2_split(params, u, di=di, state=state, heads=heads,
-                               mode=mode, backend=backend)
+                               policy=policy)
     # causal conv over the carried window
     hist = jnp.concatenate([ssm_state["conv"], xbc], axis=1)  # (B, K, C)
     w = params["conv_w"]
@@ -152,7 +152,7 @@ def apply_mamba2_step(params, u, ssm_state, *, expand=2, state=64,
     y = y.reshape(b, 1, di).astype(u.dtype)
     y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
         z.astype(jnp.float32)).astype(u.dtype)
-    out = apply_linear(params["out_proj"], y, mode=mode, backend=backend)
+    out = apply_linear(params["out_proj"], y, policy=policy)
     return out, {"h": h, "conv": new_conv}
 
 
@@ -177,14 +177,14 @@ def init_mlstm(key, d: int, *, heads=4, pf=2, conv=4, sparse=None,
     }
 
 
-def _mlstm_qkvif(params, xm, *, heads, mode, backend):
+def _mlstm_qkvif(params, xm, *, heads, policy):
     b, t, di = xm.shape
     dh = di // heads
     conv_x = _causal_conv(xm, params["conv_w"])
-    q = apply_linear(params["wq"], conv_x, mode=mode, backend=backend)
-    k = apply_linear(params["wk"], conv_x, mode=mode, backend=backend)
-    v = apply_linear(params["wv"], xm, mode=mode, backend=backend)
-    gif = apply_linear(params["w_if"], xm, mode=mode, backend=backend)
+    q = apply_linear(params["wq"], conv_x, policy=policy)
+    k = apply_linear(params["wk"], conv_x, policy=policy)
+    v = apply_linear(params["wv"], xm, policy=policy)
+    gif = apply_linear(params["w_if"], xm, policy=policy)
     i_pre, f_pre = jnp.split(gif.astype(jnp.float32), 2, axis=-1)  # (B,T,H)
     q = q.reshape(b, t, heads, dh)
     k = k.reshape(b, t, heads, dh) * dh ** -0.5
@@ -193,18 +193,16 @@ def _mlstm_qkvif(params, xm, *, heads, mode, backend):
     return q, k, v, i_pre, log_f
 
 
-def apply_mlstm_seq(params, x, *, heads=4, pf=2, chunk=128, mode="masked",
-                    backend="reference"):
+def apply_mlstm_seq(params, x, *, heads=4, pf=2, chunk=128, policy=None):
     """Full-sequence mLSTM via the stabilized *chunked* parallel form:
     within a chunk, a decay-masked attention-like matmul; across chunks, the
     (C, n, m) matrix-memory carry — O(T·chunk) memory, MXU-friendly."""
     b, t, d = x.shape
-    up = apply_linear(params["up"], x, mode=mode, backend=backend)
+    up = apply_linear(params["up"], x, policy=policy)
     xm, z = jnp.split(up, 2, axis=-1)
     di = xm.shape[-1]
     dh = di // heads
-    q, k, v, i_pre, log_f = _mlstm_qkvif(params, xm, heads=heads, mode=mode,
-                                         backend=backend)
+    q, k, v, i_pre, log_f = _mlstm_qkvif(params, xm, heads=heads, policy=policy)
     c = min(chunk, t)
     nc = -(-t // c)
     tp = nc * c
@@ -263,7 +261,7 @@ def apply_mlstm_seq(params, x, *, heads=4, pf=2, chunk=128, mode="masked",
     y = y.reshape(b, t, di).astype(x.dtype)
     y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
         z.astype(jnp.float32)).astype(x.dtype)
-    return apply_linear(params["down"], y, mode=mode, backend=backend)
+    return apply_linear(params["down"], y, policy=policy)
 
 
 def init_mlstm_state(batch, d, *, heads=4, pf=2, conv=4, dtype=jnp.float32):
@@ -277,20 +275,19 @@ def init_mlstm_state(batch, d, *, heads=4, pf=2, conv=4, dtype=jnp.float32):
     }
 
 
-def apply_mlstm_step(params, x, st, *, heads=4, pf=2, mode="masked",
-                     backend="reference"):
+def apply_mlstm_step(params, x, st, *, heads=4, pf=2, policy=None):
     b, _, d = x.shape
-    up = apply_linear(params["up"], x, mode=mode, backend=backend)
+    up = apply_linear(params["up"], x, policy=policy)
     xm, z = jnp.split(up, 2, axis=-1)
     di = xm.shape[-1]
     dh = di // heads
     hist = jnp.concatenate([st["conv"], xm], axis=1)
     conv_x = jax.nn.silu((hist * params["conv_w"][None]).sum(1)
                          .astype(jnp.float32)).astype(x.dtype)[:, None]
-    q = apply_linear(params["wq"], conv_x, mode=mode, backend=backend)
-    k = apply_linear(params["wk"], conv_x, mode=mode, backend=backend)
-    v = apply_linear(params["wv"], xm, mode=mode, backend=backend)
-    gif = apply_linear(params["w_if"], xm, mode=mode, backend=backend)
+    q = apply_linear(params["wq"], conv_x, policy=policy)
+    k = apply_linear(params["wk"], conv_x, policy=policy)
+    v = apply_linear(params["wv"], xm, policy=policy)
+    gif = apply_linear(params["w_if"], xm, policy=policy)
     i_pre, f_pre = jnp.split(gif[:, 0].astype(jnp.float32), 2, axis=-1)
     log_f = -jax.nn.softplus(-f_pre)                    # (B,H)
     q = q.reshape(b, heads, dh).astype(jnp.float32)
@@ -308,7 +305,7 @@ def apply_mlstm_step(params, x, st, *, heads=4, pf=2, mode="masked",
     y = (num / den[..., None]).reshape(b, 1, di).astype(x.dtype)
     y = apply_rmsnorm(params["norm"], y) * jax.nn.silu(
         z.astype(jnp.float32)).astype(x.dtype)
-    out = apply_linear(params["down"], y, mode=mode, backend=backend)
+    out = apply_linear(params["down"], y, policy=policy)
     return out, {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
 
 
@@ -356,9 +353,9 @@ def _slstm_cell(params, wx_t, st, *, heads):
     return {"c": c, "n": n, "h": h, "m": m_new}
 
 
-def apply_slstm_seq(params, x, *, heads=4, mode="masked", backend="reference"):
+def apply_slstm_seq(params, x, *, heads=4, policy=None):
     b, t, d = x.shape
-    wx = apply_linear(params["w_in"], x, mode=mode, backend=backend)
+    wx = apply_linear(params["w_in"], x, policy=policy)
 
     def step(st, wx_t):
         st2 = _slstm_cell(params, wx_t, st, heads=heads)
@@ -368,14 +365,13 @@ def apply_slstm_seq(params, x, *, heads=4, mode="masked", backend="reference"):
     _, hs = jax.lax.scan(step, st0, wx.swapaxes(0, 1))
     y = hs.swapaxes(0, 1).reshape(b, t, d).astype(x.dtype)
     y = apply_rmsnorm(params["norm"], y)
-    return apply_linear(params["down"], y, mode=mode, backend=backend)
+    return apply_linear(params["down"], y, policy=policy)
 
 
-def apply_slstm_step(params, x, st, *, heads=4, mode="masked",
-                     backend="reference"):
+def apply_slstm_step(params, x, st, *, heads=4, policy=None):
     b, _, d = x.shape
-    wx = apply_linear(params["w_in"], x, mode=mode, backend=backend)[:, 0]
+    wx = apply_linear(params["w_in"], x, policy=policy)[:, 0]
     st2 = _slstm_cell(params, wx, st, heads=heads)
     y = st2["h"].reshape(b, 1, d).astype(x.dtype)
     y = apply_rmsnorm(params["norm"], y)
-    return apply_linear(params["down"], y, mode=mode, backend=backend), st2
+    return apply_linear(params["down"], y, policy=policy), st2

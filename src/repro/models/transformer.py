@@ -4,7 +4,7 @@ Four families share one functional interface:
 
     model = build_model(cfg)
     params = model.init(key)
-    loss, metrics = model.train_loss(params, batch, mode=...)
+    loss, metrics = model.train_loss(params, batch, policy=ExecPolicy(...))
     logits, state = model.prefill(params, inputs)
     logits, state = model.decode_step(params, state, tokens)
 
@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.sparse_linear import ExecPolicy, resolve_policy
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -69,12 +70,12 @@ def init_ring_cache(batch, window, hkv, dh, dtype=jnp.bfloat16):
 
 
 def ring_decode_attention(params_block, x, cache, pos, *, cfg: ArchConfig,
-                          window, mode, backend):
+                          window, policy):
     """One-token attention against a ring-buffer cache (window W slots)."""
     b = x.shape[0]
     hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     q, k_new, v_new = attn._project_qkv(params_block, x, x, hq, hkv, dh,
-                                        mode, backend)
+                                        policy)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
     w = cache["k"].shape[1]
@@ -94,7 +95,7 @@ def ring_decode_attention(params_block, x, cache, pos, *, cfg: ArchConfig,
     p = jnp.exp(logits - m)
     out = attn._gqa_out(p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30), v_c)
     out = out.reshape(b, 1, hq * dh).astype(x.dtype)
-    out = apply_linear(params_block["wo"], out, mode=mode, backend=backend)
+    out = apply_linear(params_block["wo"], out, policy=policy)
     return out, {"k": k_c, "v": v_c, "slot_pos": slot_pos}
 
 
@@ -131,14 +132,14 @@ def init_tblock(key, cfg: ArchConfig, *, cross=False, dtype=jnp.float32):
 
 def apply_tblock_seq(blk, x, cfg: ArchConfig, *, window, positions=None,
                      enc_out=None, causal=True, static_window=None,
-                     mode, backend):
+                     policy):
     h = apply_rmsnorm(blk["ln1"], x)
     h = attn.apply_attention(
         blk["attn"], h,
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
         positions=positions, causal=causal, window=window,
-        static_window=static_window, mode=mode, backend=backend)
+        static_window=static_window, policy=policy)
     x = x + h
     if "xattn" in blk and enc_out is not None:
         h = apply_rmsnorm(blk["ln_x"], x)
@@ -146,15 +147,14 @@ def apply_tblock_seq(blk, x, cfg: ArchConfig, *, window, positions=None,
             blk["xattn"], h,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            causal=False, window=-1, kv_x=enc_out, mode=mode, backend=backend)
+            causal=False, window=-1, kv_x=enc_out, policy=policy)
         x = x + h
     h = apply_rmsnorm(blk["ln2"], x)
     aux = jnp.zeros((), jnp.float32)
     if "moe" in blk:
-        h, aux = moe_mod.apply_moe(blk["moe"], h, cfg.moe, mode=mode,
-                                   backend=backend)
+        h, aux = moe_mod.apply_moe(blk["moe"], h, cfg.moe, policy=policy)
     else:
-        h = apply_mlp(blk["mlp"], h, mode=mode, backend=backend)
+        h = apply_mlp(blk["mlp"], h, policy=policy)
     return x + h, aux
 
 
@@ -209,7 +209,7 @@ class DecoderLM:
         return params
 
     # ---- full-sequence forward (train / prefill logits) ----
-    def _backbone_seq(self, params, x, *, positions, mode, backend):
+    def _backbone_seq(self, params, x, *, positions, policy):
         cfg = self.cfg
 
         if cfg.attention == "local_global":
@@ -229,12 +229,11 @@ class DecoderLM:
                     x, a = apply_tblock_seq(
                         blk, x, cfg, window=cfg.local_window,
                         static_window=cfg.local_window,
-                        positions=positions, mode=mode, backend=backend)
+                        positions=positions, policy=policy)
                     aux = aux + a
                 blk = jax.tree.map(lambda a: a[period - 1], blks)
                 x, a = apply_tblock_seq(blk, x, cfg, window=-1,
-                                        positions=positions, mode=mode,
-                                        backend=backend)
+                                        positions=positions, policy=policy)
                 return (x, aux + a), None
 
             (x, aux), _ = jax.lax.scan(
@@ -244,7 +243,7 @@ class DecoderLM:
                 x, a = apply_tblock_seq(
                     blk, x, cfg, window=cfg.local_window,
                     static_window=cfg.local_window, positions=positions,
-                    mode=mode, backend=backend)
+                    policy=policy)
                 aux = aux + a
             return apply_rmsnorm(params["final_norm"], x), aux
 
@@ -256,8 +255,7 @@ class DecoderLM:
             blk, window = layer
             x, a = apply_tblock_seq(blk, x, cfg, window=window,
                                     static_window=static_window,
-                                    positions=positions, mode=mode,
-                                    backend=backend)
+                                    positions=positions, policy=policy)
             return (x, aux + a), None
 
         body = _remat(body, cfg)
@@ -274,13 +272,15 @@ class DecoderLM:
             x = jnp.concatenate([pe, x], axis=1)
         return x
 
-    def train_loss(self, params, batch, *, mode="masked", backend="reference"):
+    def train_loss(self, params, batch, *, policy=None,
+                         mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = self._embed_inputs(params, batch, dtype)
         t = x.shape[1]
         x, aux = self._backbone_seq(params, x, positions=jnp.arange(t),
-                                    mode=mode, backend=backend)
+                                    policy=policy)
         if cfg.frontend == "vision":  # only text positions carry loss
             x = x[:, cfg.num_patches:]
         logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
@@ -288,14 +288,15 @@ class DecoderLM:
         return loss + aux, {"xent": loss, "aux": aux}
 
     # ---- serving ----
-    def prefill(self, params, batch, *, max_len=None, mode="masked",
-                backend="reference"):
+    def prefill(self, params, batch, *, max_len=None, policy=None,
+                      mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = self._embed_inputs(params, batch, dtype)
         b, t = x.shape[0], x.shape[1]
         x, _ = self._backbone_seq(params, x, positions=jnp.arange(t),
-                                  mode=mode, backend=backend)
+                                  policy=policy)
         logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
         state = self.init_decode_state(b, max_len or t + 1, dtype=dtype)
         # NOTE: serving fills the cache during prefill; for the dry-run cells
@@ -344,35 +345,34 @@ class DecoderLM:
             }
         return {"caches": caches, "pos": jnp.zeros((batch,), jnp.int32)}
 
-    def _decode_ffn(self, blk, x, mode, backend):
+    def _decode_ffn(self, blk, x, policy):
         cfg = self.cfg
         h = apply_rmsnorm(blk["ln2"], x)
         if "moe" in blk:
-            h, _ = moe_mod.apply_moe(blk["moe"], h, cfg.moe, mode=mode,
-                                     backend=backend)
+            h, _ = moe_mod.apply_moe(blk["moe"], h, cfg.moe, policy=policy)
         else:
-            h = apply_mlp(blk["mlp"], h, mode=mode, backend=backend)
+            h = apply_mlp(blk["mlp"], h, policy=policy)
         return x + h
 
-    def _decode_full_layer(self, blk, x, cache, pos, window, mode, backend):
+    def _decode_full_layer(self, blk, x, cache, pos, window, policy):
         cfg = self.cfg
         h = apply_rmsnorm(blk["ln1"], x)
         h, nc = attn.apply_attention_decode(
             blk["attn"], h, cache, pos,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            window=window, mode=mode, backend=backend)
-        return self._decode_ffn(blk, x + h, mode, backend), nc
+            window=window, policy=policy)
+        return self._decode_ffn(blk, x + h, policy), nc
 
-    def _decode_ring_layer(self, blk, x, cache, pos, window, mode, backend):
+    def _decode_ring_layer(self, blk, x, cache, pos, window, policy):
         h = apply_rmsnorm(blk["ln1"], x)
         h, nc = ring_decode_attention(blk["attn"], h, cache, pos,
-                                      cfg=self.cfg, window=window, mode=mode,
-                                      backend=backend)
-        return self._decode_ffn(blk, x + h, mode, backend), nc
+                                      cfg=self.cfg, window=window, policy=policy)
+        return self._decode_ffn(blk, x + h, policy), nc
 
-    def decode_step(self, params, state, tokens, *, mode="masked",
-                    backend="reference"):
+    def decode_step(self, params, state, tokens, *, policy=None,
+                          mode=None, backend=None):
+        policy = resolve_policy(policy, mode, backend)
         cfg = self.cfg
         dtype = dtype_of(cfg.compute_dtype)
         x = apply_embedding(params["embed"], tokens).astype(dtype)
@@ -384,8 +384,8 @@ class DecoderLM:
             def body(x, layer):
                 blk, kc, vc = layer
                 x, nc = self._decode_full_layer(
-                    blk, x, {"k": kc, "v": vc}, pos, FULL_WINDOW, mode,
-                    backend)
+                    blk, x, {"k": kc, "v": vc}, pos, FULL_WINDOW,
+                    policy)
                 return x, (nc["k"], nc["v"])
 
             x, (ks, vs) = jax.lax.scan(
@@ -396,7 +396,7 @@ class DecoderLM:
             def body(x, layer):
                 blk, ring = layer
                 x, nc = self._decode_ring_layer(blk, x, ring, pos,
-                                                cfg.window, mode, backend)
+                                                cfg.window, policy)
                 return x, nc
 
             x, rings = jax.lax.scan(body, x, (params["layers"],
@@ -418,13 +418,13 @@ class DecoderLM:
                     blk = jax.tree.map(lambda a: a[i], blks)
                     ring = jax.tree.map(lambda a: a[i], local)
                     x, nc = self._decode_ring_layer(
-                        blk, x, ring, pos, cfg.local_window, mode, backend)
+                        blk, x, ring, pos, cfg.local_window, policy)
                     new_local.append(nc)
                 # the global layer (full cache, unbounded window)
                 blk = jax.tree.map(lambda a: a[period - 1], blks)
                 x, nc = self._decode_full_layer(
-                    blk, x, {"k": gk, "v": gv}, pos, FULL_WINDOW, mode,
-                    backend)
+                    blk, x, {"k": gk, "v": gv}, pos, FULL_WINDOW,
+                    policy)
                 stacked_local = jax.tree.map(lambda *a: jnp.stack(a),
                                              *new_local)
                 return x, (stacked_local, nc["k"], nc["v"])
@@ -439,7 +439,7 @@ class DecoderLM:
                 blk = jax.tree.map(lambda a: a[i], tail)
                 ring = jax.tree.map(lambda a: a[i], caches["tail"])
                 x, nc = self._decode_ring_layer(
-                    blk, x, ring, pos, cfg.local_window, mode, backend)
+                    blk, x, ring, pos, cfg.local_window, policy)
                 new_tail.append(nc)
             tail_caches = (jax.tree.map(lambda *a: jnp.stack(a), *new_tail)
                            if new_tail else caches["tail"])

@@ -6,12 +6,14 @@ prompt prefilled token-by-token (the jitted decode step doubles as a
 prefill-by-steps path so the engine needs exactly one compiled program),
 then generation proceeds until EOS/max_tokens and the slot frees.
 
-The packed-DeMM serving path is selected with ``backend``/``mode`` — with
-``mode='packed'`` all sparse weights are in the paper's packed form and every
-matmul in the decode step reads only packed bytes (see DESIGN.md §6).
-``backend='auto'`` resolves each packed matmul through the ``repro.tune``
-registry/cache; pass ``autotune=True`` to pre-measure tile configs for every
-packed weight shape before the decode step is compiled (DESIGN.md §8).
+The packed-DeMM serving path is selected by handing the engine a params tree
+of ``PackedWeight`` nodes (``launch.pack_tree``) plus an
+``ExecPolicy(mode="packed", backend=...)``: every matmul in the decode step
+then reads only packed bytes (see DESIGN.md §6).  ``backend='auto'``
+resolves each packed matmul through the ``repro.tune`` registry/cache; pass
+``autotune=True`` to pre-measure tile configs for every packed weight shape
+before the decode step is compiled (DESIGN.md §8).  The legacy
+``mode=``/``backend=`` kwargs are still accepted and folded into a policy.
 """
 
 from __future__ import annotations
@@ -43,12 +45,16 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, model, params, cfg: ServeConfig, *, mode="masked",
-                 backend="reference", autotune=False):
+    def __init__(self, model, params, cfg: ServeConfig, *, policy=None,
+                 mode=None, backend=None, autotune=False):
+        from repro.core.sparse_linear import resolve_policy
+
+        policy = resolve_policy(policy, mode, backend)
         self.model = model
         self.params = params
         self.cfg = cfg
-        if autotune and mode == "packed":
+        self.policy = policy
+        if autotune and policy.mode == "packed":
             # Measure tile configs for every packed weight at the decode
             # batch shape so backend="auto" resolves from the cache when the
             # step below is traced.
@@ -67,8 +73,7 @@ class ServeEngine:
                               None) if hasattr(a, "shape") else None,
             self.state, probe)
         self._step = jax.jit(
-            lambda p, s, t: model.decode_step(p, s, t, mode=mode,
-                                              backend=backend))
+            lambda p, s, t: model.decode_step(p, s, t, policy=policy))
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * cfg.num_slots
         self._fed: List[int] = [0] * cfg.num_slots    # prompt tokens fed

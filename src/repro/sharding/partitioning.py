@@ -15,15 +15,25 @@ the largest replicated dimension over 'data' (opt_state_specs).
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.sparsity import PackedWeight
+from repro.core.treeutil import key_path_str as _path_str
+
 
 # (regex on path, spec builder(ndim) -> PartitionSpec)
 # 'M' = model axis, 'D' = data axes tuple ('pod','data') or ('data',)
+#
+# Rules address the *linear's* dense weight path (".../w").  Packed sparse
+# weights are not matched by leaf-name regexes: PackedWeight nodes are
+# handled structurally (isinstance) in ``param_specs``, which classifies the
+# node's module path as col/row-parallel via the same rules and shards the
+# values/indices children by their known (O, G, Ne) geometry.
 
 def _rules():
     return [
@@ -33,19 +43,19 @@ def _rules():
         (r"moe/w_(gate|up|down)", lambda nd: P("model", None, None)),
         (r"moe/router/w", lambda nd: P(None, None)),
         # attention projections: column-parallel q/k/v, row-parallel o
-        (r"(attn|xattn)/w[qkv]/(w|values|indices)", "col"),
-        (r"(attn|xattn)/wo/(w|values|indices)", "row"),
+        (r"(attn|xattn)/w[qkv]/w", "col"),
+        (r"(attn|xattn)/wo/w", "row"),
         # MLP: column-parallel gate/up, row-parallel down
-        (r"mlp/(gate|up)/(w|values|indices)", "col"),
-        (r"mlp/down/(w|values|indices)", "row"),
+        (r"mlp/(gate|up)/w", "col"),
+        (r"mlp/down/w", "row"),
         # mamba: column-parallel in_proj, row-parallel out_proj
-        (r"mamba/in_proj/(w|values|indices)", "col"),
-        (r"mamba/out_proj/(w|values|indices)", "row"),
+        (r"mamba/in_proj/w", "col"),
+        (r"mamba/out_proj/w", "row"),
         (r"mamba/conv_w", lambda nd: P(None, "model")),
         (r"mamba/(A_log|D|dt_bias)", lambda nd: P("model",)),
         # xlstm blocks
-        (r"(blk)/(up|wq|wk|wv|w_in)/(w|values|indices)", "col"),
-        (r"(blk)/(down)/(w|values|indices)", "row"),
+        (r"(blk)/(up|wq|wk|wv|w_in)/w", "col"),
+        (r"(blk)/(down)/w", "row"),
         (r"blk/w_if/w", lambda nd: P(None, None)),
         (r"blk/r$", lambda nd: P(None, None, None)),  # tiny sLSTM recurrent
         # frontends / misc projections: column-parallel
@@ -84,16 +94,6 @@ def spec_for_path(path: str, ndim: int) -> P:
     return P(*([None] * ndim))
 
 
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if hasattr(p, "key"):
-            parts.append(str(p.key))
-        elif hasattr(p, "idx"):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(p))
-    return "/".join(parts)
 
 
 def _stacked_offset(leaf_ndim: int, spec_ndim: int) -> int:
@@ -102,11 +102,50 @@ def _stacked_offset(leaf_ndim: int, spec_ndim: int) -> int:
     return leaf_ndim - spec_ndim
 
 
+def linear_kind(path: str, *, attn_kv_replicated: bool = False) -> str:
+    """Classify a linear *module* path (no trailing leaf name) as
+    ``col`` | ``row`` | ``replicated`` using the shared rule table."""
+    probe = path.rstrip("/") + "/w"
+    if attn_kv_replicated and re.search(r"(attn|xattn)/w[kv]/w", probe):
+        return "replicated"
+    for pat, builder in _rules():
+        if re.search(pat, probe):
+            return builder if builder in ("col", "row") else "replicated"
+    return "replicated"
+
+
+def _packed_spec(kind: str, extra: int) -> P:
+    """values/indices are (*stack, O, G, Ne): column-parallel shards the
+    output axis O; row-parallel shards the group axis G (groups tile the
+    contraction dim, and choose_group aligned M to the shard size); stack
+    dims are replicated."""
+    if kind == "col":
+        core = ["model", None, None]
+    elif kind == "row":
+        core = [None, "model", None]
+    else:
+        core = [None, None, None]
+    return P(*([None] * extra + core))
+
+
+def packed_weight_specs(pw: PackedWeight, kind: str) -> PackedWeight:
+    """Structural PartitionSpecs for a PackedWeight node, returned in the
+    same PackedWeight container so spec/sharding trees mirror the params."""
+    spec = _packed_spec(kind, len(pw.stack_dims))
+    return pw.replace(values=spec, indices=spec)
+
+
+def _is_legacy_packed(node) -> bool:
+    return isinstance(node, dict) and "values" in node and "shape" in node
+
+
 def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
     """PartitionSpec pytree matching ``params``.
 
     Handles layer stacking: rule specs are defined for the *unstacked*
     2-D/3-D weights; extra leading axes (scan stacking) are replicated.
+    PackedWeight nodes are handled structurally: the module path picks
+    col/row-parallel and the (O, G, Ne) geometry places the axes.
 
     ``attn_kv_replicated``: for archs whose KV head count does not divide
     TP (but whose Q heads do), K/V projection weights are replicated so the
@@ -114,27 +153,40 @@ def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
     """
 
     def one(path, leaf):
+        p = _path_str(path)
+        if isinstance(leaf, PackedWeight):
+            kind = linear_kind(p, attn_kv_replicated=attn_kv_replicated)
+            return packed_weight_specs(leaf, kind)
+        if _is_legacy_packed(leaf):
+            # deprecation-boundary: old {values, indices, shape, _sparse_*}
+            # dicts still shard like their PackedWeight equivalent
+            warnings.warn(
+                "sharding a legacy packed dict; convert with "
+                "launch.pack_tree to get PackedWeight nodes",
+                DeprecationWarning, stacklevel=2)
+            kind = linear_kind(p, attn_kv_replicated=attn_kv_replicated)
+            spec = _packed_spec(kind,
+                                getattr(leaf["values"], "ndim", 3) - 3)
+            return dict(leaf, values=spec, indices=spec)
         if not hasattr(leaf, "ndim"):
             return P()  # Static metadata
-        p = _path_str(path)
         nd = leaf.ndim
         # how many leading stack dims? infer from known rule arity:
         base_nd = _base_ndim(p, nd)
         extra = nd - base_nd
-        if attn_kv_replicated and re.search(
-                r"(attn|xattn)/w[kv]/(w|values|indices)", p):
+        if attn_kv_replicated and re.search(r"(attn|xattn)/w[kv]/w", p):
             base = P(*([None] * base_nd))
         else:
             base = spec_for_path(p, base_nd)
         return P(*([None] * extra + list(base)))
 
-    return jax.tree_util.tree_map_with_path(one, params)
+    return jax.tree_util.tree_map_with_path(
+        one, params,
+        is_leaf=lambda x: isinstance(x, PackedWeight) or _is_legacy_packed(x))
 
 
 def _base_ndim(path: str, nd: int) -> int:
     """Arity of the unstacked tensor for this path."""
-    if re.search(r"(values|indices)$", path):
-        return 3
     if re.search(r"moe/w_(gate|up|down)", path):
         return 3
     if re.search(r"blk/r$", path):

@@ -12,6 +12,14 @@ that saved — elastic restarts) and rebuilds global arrays with
 ``jax.make_array_from_callback``, so each device materializes only its
 shard.  ``save_async`` stages device-to-host transfers immediately and
 writes on a background thread (training continues).
+
+Typed nodes: :class:`~repro.core.sparsity.PackedWeight` nodes (values /
+indices leaves plus static ``{cfg, dense_shape, layout}`` aux) and
+:class:`Static` metadata are recorded in the manifest's ``nodes`` table, and
+restore patches the manifest's aux back over the template — so a packed
+model round-trips save → elastic-restore with its full
+:class:`SparsityConfig` (including k-reconfiguration) even if the restoring
+process rebuilt its template with different static metadata.
 """
 
 from __future__ import annotations
@@ -19,15 +27,15 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import Static
+from repro.core.sparsity import PackedWeight, SparsityConfig, Static
+from repro.core.treeutil import key_path_str
 
 _EXEC = ThreadPoolExecutor(max_workers=2)
 
@@ -36,13 +44,82 @@ def _leaf_paths(tree):
     paths = []
 
     def one(path, leaf):
-        parts = []
-        for p in path:
-            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
-        paths.append(("/".join(parts), leaf))
+        paths.append((key_path_str(path), leaf))
 
     jax.tree_util.tree_map_with_path(one, tree)
     return paths
+
+
+# ---------------------------------------------------------------------------
+# Typed-node manifest entries (PackedWeight aux, Static values)
+# ---------------------------------------------------------------------------
+
+def _encode_value(v):
+    """JSON-encode a Static value, tagging non-JSON-native types."""
+    if isinstance(v, SparsityConfig):
+        return {"__type__": "SparsityConfig", "n": v.n, "m": v.m, "k": v.k}
+    if isinstance(v, tuple):
+        return {"__type__": "tuple", "items": [_encode_value(x) for x in v]}
+    return v
+
+
+def _decode_value(v):
+    if isinstance(v, dict) and "__type__" in v:
+        if v["__type__"] == "SparsityConfig":
+            return SparsityConfig(v["n"], v["m"], v["k"])
+        if v["__type__"] == "tuple":
+            return tuple(_decode_value(x) for x in v["items"])
+    return v
+
+
+def _node_entries(tree, prefix=""):
+    """Manifest entries for typed (non-array) nodes, keyed by tree path."""
+    out = []
+    if isinstance(tree, PackedWeight):
+        out.append({"path": prefix, "kind": "packed_weight",
+                    "cfg": {"n": tree.cfg.n, "m": tree.cfg.m,
+                            "k": tree.cfg.k},
+                    "dense_shape": list(tree.dense_shape),
+                    "layout": tree.layout})
+    elif isinstance(tree, Static):
+        out.append({"path": prefix, "kind": "static",
+                    "value": _encode_value(tree.value)})
+    elif isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(_node_entries(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_node_entries(v, f"{prefix}/{i}" if prefix else str(i)))
+    return out
+
+
+def _patch_nodes(tree, by_path, prefix=""):
+    """Overlay manifest node aux onto a restored tree (manifest wins, so the
+    saved SparsityConfig — k included — survives a stale template)."""
+    if isinstance(tree, PackedWeight):
+        e = by_path.get(prefix)
+        if e is not None and e["kind"] == "packed_weight":
+            cfg = SparsityConfig(**e["cfg"])
+            return PackedWeight(tree.values, tree.indices, cfg=cfg,
+                                dense_shape=tuple(e["dense_shape"]),
+                                layout=e["layout"])
+        return tree
+    if isinstance(tree, Static):
+        e = by_path.get(prefix)
+        if e is not None and e["kind"] == "static":
+            return Static(_decode_value(e["value"]))
+        return tree
+    if isinstance(tree, dict):
+        return {k: _patch_nodes(v, by_path, f"{prefix}/{k}" if prefix else k)
+                for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        patched = [_patch_nodes(v, by_path,
+                                f"{prefix}/{i}" if prefix else str(i))
+                   for i, v in enumerate(tree)]
+        if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+            return type(tree)(*patched)   # NamedTuple (e.g. optimizer state)
+        return type(tree)(patched)
+    return tree
 
 
 def save(tree, directory: str, step: int) -> str:
@@ -53,13 +130,9 @@ def save(tree, directory: str, step: int) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
 
-    manifest = {"step": step, "leaves": []}
+    manifest = {"step": step, "leaves": [], "nodes": _node_entries(tree)}
     for path, leaf in _leaf_paths(tree):
         fname = path.replace("/", "__") + ".npy"
-        if isinstance(leaf, Static):
-            manifest["leaves"].append(
-                {"path": path, "kind": "static", "value": leaf.value})
-            continue
         if leaf is None:
             manifest["leaves"].append({"path": path, "kind": "none"})
             continue
@@ -78,8 +151,7 @@ def save(tree, directory: str, step: int) -> str:
 
 def save_async(tree, directory: str, step: int) -> Future:
     host_tree = jax.tree.map(
-        lambda x: np.asarray(jax.device_get(x))
-        if x is not None and not isinstance(x, Static) else x, tree)
+        lambda x: np.asarray(jax.device_get(x)) if x is not None else x, tree)
     return _EXEC.submit(save, host_tree, directory, step)
 
 
@@ -94,7 +166,9 @@ def latest_step(directory: str) -> Optional[int]:
 def restore(template, directory: str, step: int, shardings=None):
     """Restore into ``template``'s structure.  ``shardings`` (same structure)
     places every leaf; None leaves restore to host numpy (then committed to
-    the default device by jnp.asarray)."""
+    the default device by jnp.asarray).  Typed nodes (PackedWeight aux,
+    Static values) are patched from the manifest, so the checkpoint — not
+    the restoring process's template — is authoritative for them."""
     final = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(final, "manifest.json")) as f:
         manifest = json.load(f)
@@ -107,9 +181,6 @@ def restore(template, directory: str, step: int, shardings=None):
     out = []
     for (path, leaf), sh in zip(zip(paths, flat), shard_flat):
         entry = by_path[path]
-        if entry["kind"] == "static":
-            out.append(Static(entry["value"]))
-            continue
         if entry["kind"] == "none":
             out.append(None)
             continue
@@ -120,4 +191,6 @@ def restore(template, directory: str, step: int, shardings=None):
         else:
             arr = jnp.asarray(data)
         out.append(arr)
-    return treedef.unflatten(out)
+    restored = treedef.unflatten(out)
+    nodes = {e["path"]: e for e in manifest.get("nodes", [])}
+    return _patch_nodes(restored, nodes) if nodes else restored

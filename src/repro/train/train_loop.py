@@ -47,18 +47,19 @@ def premask_params(params):
     semantics (straight-through gradients still reach the dense weight
     through this one masking site)."""
     from repro.core.pruning import masked_weight
-    from repro.core.sparsity import SparsityConfig
+    from repro.core.sparse_linear import node_sparsity
 
     def walk(node):
         if isinstance(node, dict):
-            if "_sparse_m" in node and "w" in node:
-                cfg = SparsityConfig(node["_sparse_n"].value,
-                                     node["_sparse_m"].value, 1)
-                w = node["w"]
-                # layer-stacked weights (L, ..., O, K): the N:M groups live
-                # along K, so masking is row-wise after flattening.
-                flat = w.reshape(-1, w.shape[-1])
-                return dict(node, w=masked_weight(flat, cfg).reshape(w.shape))
+            if "w" in node:
+                cfg = node_sparsity(node)
+                if cfg is not None:
+                    w = node["w"]
+                    # layer-stacked weights (L, ..., O, K): the N:M groups
+                    # live along K, so masking is row-wise after flattening.
+                    flat = w.reshape(-1, w.shape[-1])
+                    return dict(node,
+                                w=masked_weight(flat, cfg).reshape(w.shape))
             return {k: walk(v) for k, v in node.items()}
         return node
 
@@ -66,15 +67,18 @@ def premask_params(params):
 
 
 def make_train_step(model, opt_cfg: adamw.AdamWConfig, *,
-                    num_microbatches: int = 1, mode: str = "masked",
-                    backend: str = "reference", donate: bool = True,
-                    premask: bool = True):
+                    num_microbatches: int = 1, policy=None, mode=None,
+                    backend=None, donate: bool = True, premask: bool = True):
+    from repro.core.sparse_linear import resolve_policy
+
+    policy = resolve_policy(policy, mode, backend)
+    mode = policy.mode
     # With premasking, the per-microbatch model runs in dense mode.
-    inner_mode = "dense" if (premask and mode == "masked") else mode
+    inner_policy = (policy.replace(mode="dense")
+                    if premask and mode == "masked" else policy)
 
     def loss_fn(params, mb):
-        loss, metrics = model.train_loss(params, mb, mode=inner_mode,
-                                         backend=backend)
+        loss, metrics = model.train_loss(params, mb, policy=inner_policy)
         return loss, metrics
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -123,10 +127,13 @@ def make_train_step(model, opt_cfg: adamw.AdamWConfig, *,
     return train_step
 
 
-def make_eval_step(model, *, mode: str = "masked", backend: str = "reference"):
+def make_eval_step(model, *, policy=None, mode=None, backend=None):
+    from repro.core.sparse_linear import resolve_policy
+
+    policy = resolve_policy(policy, mode, backend)
+
     def eval_step(params, batch):
-        loss, metrics = model.train_loss(params, batch, mode=mode,
-                                         backend=backend)
+        loss, metrics = model.train_loss(params, batch, policy=policy)
         return dict(metrics, loss=loss)
 
     return eval_step

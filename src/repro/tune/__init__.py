@@ -82,40 +82,53 @@ def autotune_packed_tree(params, batch: int, dtype=None, *,
                          persist: bool = True, **tune_kw) -> dict:
     """Pre-tune every distinct packed-weight matmul shape in a param pytree.
 
-    Walks ``params`` for packed sparse-linear nodes (``{values, indices,
-    shape, _sparse_n, _sparse_m}``, as produced by ``launch.pack_tree``) and
-    runs :func:`autotune_xwT` once per distinct (O, K, pattern) with a dummy
-    activation batch of ``batch`` rows, so a subsequent jit trace with
-    ``backend="auto"`` resolves every layer from measured entries instead of
-    heuristics.  Returns {problem_key: TuneResult}.
+    Walks ``params`` for :class:`~repro.core.sparsity.PackedWeight` nodes
+    (as produced by ``launch.pack_tree``) and runs :func:`autotune_xwT` once
+    per distinct (O, K, pattern) — all read from the type's static aux data,
+    k-reconfiguration included — with a dummy activation batch of ``batch``
+    rows, so a subsequent jit trace with ``backend="auto"`` resolves every
+    layer from measured entries instead of heuristics.  Returns
+    {problem_key: TuneResult}.  Legacy packed dicts are converted through
+    the deprecation shim.
     """
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.core.sparsity import PackedWeight
+
     dtype = dtype or jnp.float32
     seen = {}
 
+    def tune_one(pw: PackedWeight):
+        o, k = pw.dense_shape
+        vals, idxs = pw.values, pw.indices
+        if vals.ndim > 3:   # layer-stacked: tune one slice
+            vals = vals.reshape(-1, *vals.shape[-2:])[:o]
+            idxs = idxs.reshape(-1, *idxs.shape[-2:])[:o]
+        p = Problem.for_xwT((batch, k), (o, k), pw.cfg, dtype)
+        key = problem_key(p)
+        if key in seen:
+            return
+        x = jnp.asarray(
+            np.random.default_rng(0).standard_normal((batch, k)), dtype)
+        seen[key] = autotune_xwT(x, vals, idxs, pw.cfg, (o, k),
+                                 persist=persist, **tune_kw)
+
     def visit(node):
-        if isinstance(node, dict) and "values" in node and "shape" in node:
-            shape = node["shape"]
-            o, k = shape.value if hasattr(shape, "value") else shape
-            cfg = SparsityConfig(node["_sparse_n"].value,
-                                 node["_sparse_m"].value, 1)
-            vals, idxs = node["values"], node["indices"]
-            if vals.ndim > 3:   # layer-stacked: tune one slice
-                vals = vals.reshape(-1, *vals.shape[-2:])[:o]
-                idxs = idxs.reshape(-1, *idxs.shape[-2:])[:o]
-            p = Problem.for_xwT((batch, k), (o, k), cfg, dtype)
-            key = problem_key(p)
-            if key in seen:
-                return
-            x = jnp.asarray(
-                np.random.default_rng(0).standard_normal((batch, k)), dtype)
-            seen[key] = autotune_xwT(x, vals, idxs, cfg, (o, k),
-                                     persist=persist, **tune_kw)
+        if isinstance(node, PackedWeight):
+            tune_one(node)
         elif isinstance(node, dict):
-            for v in node.values():
-                visit(v)
+            if "values" in node and "shape" in node:
+                import warnings
+
+                warnings.warn(
+                    "autotuning a legacy packed dict; convert with "
+                    "launch.pack_tree to get PackedWeight nodes",
+                    DeprecationWarning, stacklevel=3)
+                tune_one(PackedWeight.from_legacy(node))
+            else:
+                for v in node.values():
+                    visit(v)
 
     visit(params)
     return seen

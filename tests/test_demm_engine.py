@@ -124,6 +124,8 @@ def test_maybe_update_mask_schedule():
 
 def test_sparse_linear_roundtrip_train_to_serve():
     from repro.core import sparse_linear as sl
+    from repro.core.sparse_linear import ExecPolicy
+    from repro.core.sparsity import PackedWeight
 
     cfg = SparsityConfig(2, 16)
     key = jax.random.PRNGKey(0)
@@ -131,11 +133,30 @@ def test_sparse_linear_roundtrip_train_to_serve():
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
     y_masked = sl.apply_masked(params, x, cfg)
     packed = sl.pack_params(params, cfg)
+    assert isinstance(packed, PackedWeight)
     for backend in ("reference", "pallas_interpret"):
-        y_packed = sl.apply_packed(packed, x, cfg, backend=backend)
+        y_packed = sl.apply(packed, x, ExecPolicy(mode="packed",
+                                                  backend=backend))
         np.testing.assert_allclose(np.asarray(y_masked), np.asarray(y_packed),
                                    rtol=1e-3, atol=1e-3)
     # the packed weight satisfies the pattern by construction
-    from repro.core.sparsity import unpack
-    w = unpack(packed["values"], packed["indices"], cfg, (32, 64))
-    assert satisfies_pattern(w, cfg)
+    assert satisfies_pattern(packed.to_dense(), cfg)
+
+
+def test_sparse_linear_k_reconfiguration_survives_pack():
+    """Regression: a k>1 SparsityConfig must survive pack -> apply (the old
+    dict convention rebuilt SparsityConfig(n, m, 1), silently dropping the
+    paper's k-reconfiguration)."""
+    from repro.core import sparse_linear as sl
+    from repro.core.sparse_linear import ExecPolicy
+
+    cfg = SparsityConfig(2, 32, k=2)   # 4:32 served as 2 passes of 2:32
+    params = sl.init_sparse(jax.random.PRNGKey(0), 64, 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    pw = sl.pack_params(params, cfg)
+    assert pw.cfg == cfg and pw.cfg.k == 2
+    assert pw.values.shape[-1] == cfg.n_effective == 4
+    y_masked = sl.apply_masked(params, x, cfg)
+    y_packed = sl.apply(pw, x, ExecPolicy(mode="packed"))
+    np.testing.assert_allclose(np.asarray(y_masked), np.asarray(y_packed),
+                               rtol=1e-3, atol=1e-3)

@@ -90,7 +90,7 @@ def test_decode_matches_full_forward(arch_id):
         dtype = jnp.bfloat16
         x = model._embed_inputs(params, batch, jnp.float32)
         x, _ = model._backbone_seq(params, x, positions=jnp.arange(t),
-                                   mode="masked", backend="reference")
+                                   policy=None)
         from repro.models.layers import apply_unembedding
         full = apply_unembedding(params["unembed"], x)
 

@@ -1,0 +1,315 @@
+"""Tests for the first-class PackedWeight pytree + unified ExecPolicy API:
+registration, whole-tree packing, structural sharding rules, checkpoint
+round-trip onto a different mesh, and the deprecation shims."""
+
+import tempfile
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sparse_linear as sl
+from repro.core.sparse_linear import DEFAULT_POLICY, ExecPolicy, resolve_policy
+from repro.core.sparsity import PackedWeight, SparsityConfig, Static
+from repro.models.layers import apply_linear, init_linear
+
+CFG = SparsityConfig(2, 16)
+
+
+def _pw(key=0, o=16, k=64, cfg=CFG):
+    params = sl.init_sparse(jax.random.PRNGKey(key), k, o, cfg)
+    return params, sl.pack_params(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration
+# ---------------------------------------------------------------------------
+
+def test_packed_weight_is_registered_pytree():
+    _, pw = _pw()
+    leaves, treedef = jax.tree_util.tree_flatten(pw)
+    assert len(leaves) == 2
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, PackedWeight)
+    assert rebuilt.cfg == pw.cfg
+    assert rebuilt.dense_shape == pw.dense_shape
+    assert rebuilt.layout == pw.layout
+
+
+def test_packed_weight_tree_map_keeps_aux():
+    _, pw = _pw()
+    doubled = jax.tree.map(lambda a: a * 2, pw)
+    assert isinstance(doubled, PackedWeight)
+    assert doubled.cfg == pw.cfg
+    np.testing.assert_array_equal(np.asarray(doubled.indices),
+                                  np.asarray(pw.indices) * 2)
+
+
+def test_packed_weight_key_paths():
+    _, pw = _pw()
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(pw)[0]]
+    assert paths == [".values", ".indices"]
+
+
+def test_packed_weight_static_aux_under_jit():
+    params, pw = _pw()
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+
+    @jax.jit
+    def f(pw_, x_):
+        # aux data is static: visible at trace time
+        assert pw_.cfg == CFG and pw_.dense_shape == (16, 64)
+        return sl.apply(pw_, x_, ExecPolicy(mode="packed"))
+
+    np.testing.assert_allclose(np.asarray(f(pw, x)),
+                               np.asarray(sl.apply_masked(params, x, CFG)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_packed_weight_to_dense_roundtrip():
+    params, pw = _pw()
+    np.testing.assert_allclose(
+        np.asarray(pw.to_dense()),
+        np.asarray(jnp.where(params["w"] != 0, params["w"], 0.0)),
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ExecPolicy
+# ---------------------------------------------------------------------------
+
+def test_exec_policy_hashable_and_normalized():
+    a = ExecPolicy(mode="packed", backend="auto", cfg_overrides={"k": 2})
+    b = ExecPolicy(mode="packed", backend="auto", cfg_overrides=(("k", 2),))
+    assert a == b and hash(a) == hash(b)
+    assert a.resolve_cfg(SparsityConfig(4, 32, 1)) == SparsityConfig(4, 32, 2)
+    with pytest.raises(ValueError):
+        ExecPolicy(mode="bogus")
+
+
+def test_resolve_policy_legacy_kwargs():
+    assert resolve_policy(None, None, None) is DEFAULT_POLICY
+    p = resolve_policy(None, "packed", "auto")
+    assert p == ExecPolicy(mode="packed", backend="auto")
+    with pytest.raises(ValueError):
+        resolve_policy(ExecPolicy(), "packed", None)
+
+
+def test_cfg_override_k_reconfigures_packed_apply():
+    """An n_effective-preserving k override reinterprets a packed weight as
+    k passes (paper §II-B) without changing numerics."""
+    cfg = SparsityConfig(4, 32, 1)
+    params = sl.init_sparse(jax.random.PRNGKey(0), 64, 16, cfg)
+    pw = sl.pack_params(params, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    base = sl.apply(pw, x, ExecPolicy(mode="packed"))
+    recfg = sl.apply(pw, x, ExecPolicy(mode="packed",
+                                       cfg_overrides={"n": 2, "k": 2}))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(recfg),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):  # layout-changing override is rejected
+        sl.apply(pw, x, ExecPolicy(mode="packed", cfg_overrides={"n": 8}))
+
+
+# ---------------------------------------------------------------------------
+# init_linear metadata + pack_tree
+# ---------------------------------------------------------------------------
+
+def test_init_linear_stores_full_sparsity_config():
+    # 256 // PRODUCTION_TP = 16 = the requested group, so choose_group keeps
+    # the 4:16 pattern and init_linear re-expresses it as the requested k=2
+    p = init_linear(jax.random.PRNGKey(0), 256, 32,
+                    sparse=SparsityConfig(2, 16, 2))
+    cfg = p["sparsity"].value
+    assert isinstance(cfg, SparsityConfig)
+    assert cfg.k == 2 and cfg.n_effective == 4
+    assert "_sparse_m" not in p
+
+
+def test_pack_tree_emits_packed_weights_including_stacked():
+    from repro.launch.pack_tree import pack_tree
+
+    cfg = SparsityConfig(2, 16)
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 32))  # stacked L=3
+    tree = {"layers": {"mlp": {"gate": {"w": w, "sparsity": Static(cfg)}}},
+            "norm": {"scale": jnp.ones((8,))}}
+    packed = pack_tree(tree)
+    pw = packed["layers"]["mlp"]["gate"]
+    assert isinstance(pw, PackedWeight)
+    assert pw.dense_shape == (8, 32)           # per-layer shape
+    assert pw.stack_dims == (3,)
+    assert pw.values.shape == (3, 8, 2, 2)     # (L, O, G, Ne)
+    # dense weights untouched
+    np.testing.assert_array_equal(np.asarray(packed["norm"]["scale"]),
+                                  np.asarray(tree["norm"]["scale"]))
+    # stacked pack == per-slice pack
+    per = sl.pack_params({"w": w[1]}, cfg)
+    np.testing.assert_array_equal(np.asarray(pw.values[1]),
+                                  np.asarray(per.values))
+
+
+# ---------------------------------------------------------------------------
+# Structural sharding rules
+# ---------------------------------------------------------------------------
+
+def test_param_specs_structural_for_packed_weights():
+    from repro.sharding import partitioning as part
+
+    cfg = SparsityConfig(2, 16)
+    def lin(key):
+        return init_linear(jax.random.PRNGKey(key), 64, 32, sparse=cfg)
+    from repro.launch.pack_tree import pack_tree
+    tree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)},
+                      "attn": {"wq": lin(2)}})
+    specs = part.param_specs(tree)
+    assert isinstance(specs["mlp"]["gate"], PackedWeight)
+    assert specs["mlp"]["gate"].values == P("model", None, None)    # col
+    assert specs["mlp"]["down"].values == P(None, "model", None)    # row
+    assert specs["attn"]["wq"].values == P("model", None, None)     # col
+    # kv-replication classifies structurally too
+    tree2 = pack_tree({"attn": {"wk": lin(3)}})
+    specs2 = part.param_specs(tree2, attn_kv_replicated=True)
+    assert specs2["attn"]["wk"].values == P(None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip (elastic restore onto a different mesh)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_packed_model_different_mesh():
+    """pack_tree -> save -> restore onto a (different) mesh via shardings ->
+    decode step produces identical logits, SparsityConfig.k included."""
+    from repro.configs.base import get_arch
+    from repro.launch.pack_tree import pack_tree, pack_tree_shapes
+    from repro.models.families import build_model
+    from repro.sharding import partitioning as part
+    from repro.train import checkpoint as ckpt
+
+    arch = get_arch("stablelm_3b").reduced()
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    packed = pack_tree(params)
+
+    # saved-side: unsharded host save
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(packed, d, 7)
+
+        # restoring process: fresh template from shapes only, placed on a
+        # mesh the saver never saw
+        pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        template = pack_tree_shapes(model, pshapes)
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        shardings = part.shardings_for(mesh, part.param_specs(template))
+        restored = ckpt.restore(template, d, 7, shardings=shardings)
+
+    for a, b in zip(jax.tree_util.tree_leaves(packed),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    state = model.init_decode_state(2, 16, dtype=jnp.float32)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    pol = ExecPolicy(mode="packed")
+    l0, _ = model.decode_step(packed, state, toks, policy=pol)
+    l1, _ = model.decode_step(restored, state, toks, policy=pol)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_checkpoint_manifest_is_authoritative_for_sparsity():
+    """A stale template (wrong k) is corrected from the manifest on restore."""
+    from repro.train import checkpoint as ckpt
+
+    cfg = SparsityConfig(1, 16, 2)
+    params = sl.init_sparse(jax.random.PRNGKey(0), 32, 8, cfg)
+    pw = sl.pack_params(params, cfg)
+    tree = {"lin": pw, "meta": Static(cfg)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(tree, d, 1)
+        stale = {"lin": pw.replace(cfg=SparsityConfig(2, 16, 1)),
+                 "meta": Static(SparsityConfig(2, 16, 1))}
+        restored = ckpt.restore(stale, d, 1)
+    assert restored["lin"].cfg == cfg
+    assert restored["meta"].value == cfg
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_legacy_packed_dict_shim_warns_and_works():
+    params, pw = _pw()
+    legacy = {"values": pw.values, "indices": pw.indices,
+              "shape": Static(pw.dense_shape),
+              "_sparse_m": Static(CFG.m), "_sparse_n": Static(CFG.n)}
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    with pytest.warns(DeprecationWarning):
+        y = apply_linear(legacy, x, mode="packed")
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(sl.apply(pw, x,
+                                                   ExecPolicy(mode="packed"))),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_legacy_bare_packed_dict_with_explicit_cfg():
+    """The oldest pack_params output ({values, indices, shape} with no
+    _sparse_* metadata) still works when the caller passes cfg, and a
+    layout-changing cfg is rejected with a clear error."""
+    params, pw = _pw()
+    legacy = {"values": pw.values, "indices": pw.indices,
+              "shape": Static(pw.dense_shape)}
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    with pytest.warns(DeprecationWarning):
+        y = sl.apply_packed(legacy, x, CFG)
+    np.testing.assert_allclose(
+        np.asarray(y),
+        np.asarray(sl.apply(pw, x, ExecPolicy(mode="packed"))),
+        rtol=1e-5, atol=1e-5)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="packed layout"):
+            sl.apply_packed(legacy, x, SparsityConfig(4, 16))
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="_sparse_n"):
+            sl.apply_packed(legacy, x)   # no cfg anywhere
+
+
+def test_param_specs_shards_legacy_packed_dicts():
+    from repro.sharding import partitioning as part
+
+    _, pw = _pw()
+    legacy = {"values": pw.values, "indices": pw.indices,
+              "shape": Static(pw.dense_shape),
+              "_sparse_m": Static(CFG.m), "_sparse_n": Static(CFG.n)}
+    with pytest.warns(DeprecationWarning):
+        specs = part.param_specs({"mlp": {"gate": legacy}})
+    assert specs["mlp"]["gate"]["values"] == P("model", None, None)
+
+
+def test_legacy_masked_metadata_shim_warns():
+    params, _ = _pw()
+    legacy = {"w": params["w"], "_sparse_m": Static(CFG.m),
+              "_sparse_n": Static(CFG.n)}
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    with pytest.warns(DeprecationWarning):
+        y = apply_linear(legacy, x)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(sl.apply_masked(params, x, CFG)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_autotune_packed_tree_keys_off_type(tmp_path):
+    from repro import tune
+
+    cfg = SparsityConfig(2, 16)
+    params = sl.init_sparse(jax.random.PRNGKey(0), 32, 16, cfg)
+    pw = sl.pack_params(params, cfg)
+    cache = tune.TuneCache(path=str(tmp_path / "cache.json"))
+    results = tune.autotune_packed_tree(
+        {"mlp": {"gate": pw, "up": pw}}, 4, persist=False, cache=cache,
+        max_measure=1, warmup=1, iters=1)
+    assert len(results) == 1  # deduped by (O, K, pattern) from static aux
+    (res,) = results.values()
+    assert res.problem.sparsity == (cfg.n, cfg.m, cfg.k)
