@@ -1,0 +1,121 @@
+"""Benchmark-regression gate: compare two kernel_bench autotune JSONs.
+
+    python benchmarks/compare_bench.py BASELINE.json NEW.json \
+        [--threshold 1.25] [--absolute] [--min-us 0]
+
+For every case present in *both* files the tuned-path cost is compared and
+the script exits 1 if any case regressed beyond ``--threshold`` (default
+1.25 = 25% slower, the CI gate).
+
+By default the compared metric is ``best_us / dense_us`` — the fastest
+measured candidate normalized by the dense matmul measured *in the same run
+on the same host*.  CI runners and dev machines differ wildly in absolute
+speed, so raw microseconds would gate on machine lottery; the dense-relative
+ratio keeps the check about the *kernels* (a dispatch-layer or kernel
+regression moves tuned relative to dense on any host).  ``best_us`` is the
+min over the case's measured candidate table (not just the selected winner):
+with few timing iterations the winner can flip between near-tied variants,
+and the min over the shared candidate set is stable against those flips
+while still catching a real regression (which slows every variant of the
+affected kernel).  ``--absolute`` switches the numerator comparison to raw
+microseconds for same-host trend tracking.
+
+Cases only in one file (new benchmarks, renamed cases) are reported and
+skipped; ``--min-us`` skips cases whose tuned time is below the floor in
+both files (sub-noise microbenchmarks).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_cases(path: str):
+    with open(path) as f:
+        blob = json.load(f)
+    return {c["name"]: c for c in blob.get("cases", [])}, blob
+
+
+def best_us(case: dict) -> float:
+    """Fastest measured candidate (falls back to the selected winner)."""
+    measured = [c["measured_us"] for c in case.get("candidates", [])
+                if c.get("measured_us") is not None]
+    best = min(measured, default=None)
+    return case["tuned"]["us"] if best is None else min(best,
+                                                        case["tuned"]["us"])
+
+
+def metric(case: dict, absolute: bool) -> float:
+    us = best_us(case)
+    if absolute:
+        return us
+    dense = case.get("dense_us") or 0.0
+    return us / dense if dense > 0 else float("inf")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if any tuned benchmark case regressed vs baseline")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("new", help="freshly generated JSON to check")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="max allowed new/baseline metric ratio "
+                         "(default 1.25 = 25%% regression)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw tuned_us instead of tuned/dense ratios")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="skip cases with tuned_us below this floor in both "
+                         "files (sub-noise microbenchmarks)")
+    args = ap.parse_args(argv)
+
+    base_cases, base_blob = load_cases(args.baseline)
+    new_cases, new_blob = load_cases(args.new)
+    unit = "tuned_us" if args.absolute else "tuned/dense"
+    print(f"baseline: {args.baseline} (platform={base_blob.get('platform')}, "
+          f"jax={base_blob.get('jax')})")
+    print(f"new     : {args.new} (platform={new_blob.get('platform')}, "
+          f"jax={new_blob.get('jax')})")
+    print(f"metric  : {unit}, threshold {args.threshold:.2f}x\n")
+
+    shared = sorted(set(base_cases) & set(new_cases))
+    for only, names in (("baseline-only", set(base_cases) - set(new_cases)),
+                        ("new-only", set(new_cases) - set(base_cases))):
+        if names:
+            print(f"[skip] {only} cases: {', '.join(sorted(names))}")
+    if not shared:
+        print("no shared cases to compare — failing closed")
+        return 1
+
+    regressions = []
+    w = max(len(n) for n in shared)
+    for name in shared:
+        b, n = base_cases[name], new_cases[name]
+        if (args.min_us and b["tuned"]["us"] < args.min_us
+                and n["tuned"]["us"] < args.min_us):
+            print(f"{name:{w}s}  skipped (< {args.min_us}us)")
+            continue
+        mb, mn = metric(b, args.absolute), metric(n, args.absolute)
+        ratio = mn / mb if mb > 0 else float("inf")
+        flag = "REGRESSED" if ratio > args.threshold else "ok"
+        print(f"{name:{w}s}  base {mb:10.3f}  new {mn:10.3f}  "
+              f"({ratio:5.2f}x)  {flag}")
+        if ratio > args.threshold:
+            regressions.append((name, ratio, b["tuned"], n["tuned"]))
+
+    if regressions:
+        print(f"\n{len(regressions)} case(s) regressed > "
+              f"{(args.threshold - 1) * 100:.0f}%:")
+        for name, ratio, bt, nt in regressions:
+            print(f"  {name}: {ratio:.2f}x  "
+                  f"(baseline {bt['backend']}{bt['params']} "
+                  f"{bt['us']:.1f}us -> new {nt['backend']}{nt['params']} "
+                  f"{nt['us']:.1f}us)")
+        return 1
+    print("\nno tuned-path regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

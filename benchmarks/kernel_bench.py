@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparsity import SparsityConfig, pack, prune, random_sparse_dense
+from repro.core.sparsity import (SparsityConfig, pack, pack_block, prune,
+                                 random_sparse_dense)
 from repro.kernels.demm_spmm import demm_xwT_pallas
 from repro.kernels.ref import xwT_ref
 
@@ -48,6 +49,14 @@ CASES = [
 ]
 
 DEFAULT_OUT = "BENCH_kernels.json"
+
+# Two-level block-layout (xwT_block) cases: (name, out, in, batch, pattern).
+# Shapes are kept under the interpret-mode FLOP limit so the Pallas block
+# kernel is a measurable candidate on CPU hosts too.
+BLOCK_CASES = [
+    ("block_mlp_decode", 256, 512, 64, SparsityConfig(8, 128)),
+    ("block_attn_decode", 256, 256, 128, SparsityConfig(8, 128)),
+]
 
 
 def roofline_time(flops, bytes_):
@@ -129,11 +138,48 @@ def _measure_thunk(thunk, warmup, iters):
     return measure(thunk, warmup=warmup, iters=iters)
 
 
+def _case_entry(name, key, shape, t_dense, default, t_default, res,
+                verbose):
+    """Shared tuned-vs-default-vs-dense record (one schema for every op —
+    benchmarks/compare_bench.py parses these)."""
+    # the default was measured twice (eagerly above and inside the tuner);
+    # keep the tuned<=default invariant against the tuner's own measurement.
+    tuner_default_us = min(
+        (c.measured_s * 1e6 for c in res.candidates
+         if c.backend == default.backend and c.params == default.params
+         and c.measured_s is not None), default=t_default * 1e6)
+    entry = {
+        "name": name,
+        "problem": key,
+        "shape": shape,
+        "dense_us": t_dense * 1e6,
+        "default": {"backend": default.backend,
+                    "params": default.params,
+                    "us": t_default * 1e6},
+        "tuned": {"backend": res.best.backend,
+                  "params": res.best.params,
+                  "us": res.best.measured_us},
+        "tuned_vs_default": tuner_default_us / res.best.measured_us,
+        "dense_vs_tuned": t_dense * 1e6 / res.best.measured_us,
+        "candidates": res.table(),
+    }
+    if verbose:
+        print(f"{name:28s} dense {t_dense*1e6:9.1f}us | default "
+              f"{default.backend:18s} {t_default*1e6:9.1f}us | tuned "
+              f"{res.best.backend}{res.best.params} "
+              f"{res.best.measured_us:9.1f}us "
+              f"({entry['tuned_vs_default']:.2f}x vs default)")
+    return entry
+
+
 def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
-                 verbose: bool = True):
+                 verbose: bool = True, warmup: "int | None" = None,
+                 iters: "int | None" = None):
     from repro import tune
 
-    warmup, iters = (1, 2) if quick else (2, 5)
+    default_w, default_i = (1, 2) if quick else (2, 5)
+    warmup = default_w if warmup is None else warmup
+    iters = default_i if iters is None else iters
     max_measure = 4 if quick else 8
     rng = np.random.default_rng(0)
     seen = set()
@@ -168,37 +214,42 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         res = tune.autotune_xwT(x, p.values, p.indices, sp, (o, k),
                                 max_measure=max_measure, warmup=warmup,
                                 iters=iters, persist=True)
-        t_tuned = res.best.measured_us / 1e6
-        # the default was measured twice (here and inside the tuner); keep
-        # the invariant against the tuner's own default measurement.
-        tuner_default_us = min(
-            (c.measured_s * 1e6 for c in res.candidates
-             if c.backend == default.backend and c.params == default.params
-             and c.measured_s is not None), default=t_default * 1e6)
+        results.append(_case_entry(
+            name, key, {"out": o, "k": k, "batch": bt,
+                        "pattern": sp.pattern_name()},
+            t_dense, default, t_default, res, verbose))
 
-        entry = {
-            "name": name,
-            "problem": key,
-            "shape": {"out": o, "k": k, "batch": bt,
-                      "pattern": sp.pattern_name()},
-            "dense_us": t_dense * 1e6,
-            "default": {"backend": default.backend,
-                        "params": default.params,
-                        "us": t_default * 1e6},
-            "tuned": {"backend": res.best.backend,
-                      "params": res.best.params,
-                      "us": res.best.measured_us},
-            "tuned_vs_default": tuner_default_us / res.best.measured_us,
-            "dense_vs_tuned": t_dense * 1e6 / res.best.measured_us,
-            "candidates": res.table(),
-        }
-        results.append(entry)
-        if verbose:
-            print(f"{name:28s} dense {t_dense*1e6:9.1f}us | default "
-                  f"{default.backend:18s} {t_default*1e6:9.1f}us | tuned "
-                  f"{res.best.backend}{res.best.params} "
-                  f"{res.best.measured_us:9.1f}us "
-                  f"({entry['tuned_vs_default']:.2f}x vs default)")
+    # --- two-level block layout (xwT_block dispatch) ----------------------
+    for name, o, k, bt, sp in BLOCK_CASES[:1 if quick else None]:
+        w_dense = jnp.asarray(prune(jnp.asarray(
+            rng.standard_normal((o, k)).astype(np.float32)), sp))
+        pw = pack_block(w_dense, sp)
+        x = jnp.asarray(rng.standard_normal((bt, k)).astype(np.float32))
+        problem = tune.Problem.for_xwT_block(x.shape, pw, jnp.float32)
+        key = tune.problem_key(problem)
+        if key in seen:
+            continue
+        seen.add(key)
+
+        dense_mm = jax.jit(lambda xx, ww: xx @ ww.T)
+        t_dense = _measure_thunk(lambda: dense_mm(x, w_dense), warmup, iters)
+
+        default = tune.heuristic_default(problem)
+        dvar = tune.get_variant("xwT_block", default.backend)
+        default_jf = jax.jit(lambda xx, vv, ii, ag: dvar.call(
+            xx, vv, ii, ag, sp, (o, k), **default.params))
+        t_default = _measure_thunk(
+            lambda: default_jf(x, pw.values, pw.indices, pw.active_groups),
+            warmup, iters)
+
+        res = tune.autotune_xwT_block(x, pw, max_measure=max_measure,
+                                      warmup=warmup, iters=iters,
+                                      persist=True)
+        results.append(_case_entry(
+            name, key, {"out": o, "k": k, "batch": bt,
+                        "pattern": sp.pattern_name(),
+                        "block_geom": list(pw.block_geom)},
+            t_dense, default, t_default, res, verbose))
 
     blob = {
         "platform": tune.current_platform(),
@@ -225,14 +276,25 @@ def main():
                     help="reduced case set / iterations (CI smoke)")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="output JSON path for --autotune")
+    ap.add_argument("--warmup", type=int, default=None,
+                    help="override warmup iterations (CI regression runs "
+                         "want more than the quick default of 1)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="override timed iterations per candidate")
     args = ap.parse_args()
     if args.autotune or args.quick:
         out = args.out
         if args.quick and out == DEFAULT_OUT:
             # quick runs (reduced cases/iters) must never clobber the
-            # committed full benchmark trajectory
+            # committed full benchmark trajectory.  They default to
+            # BENCH_kernels_quick.json — the *committed CI regression
+            # baseline* — so running `--quick` without `--out` IS the
+            # rebaseline flow (the diff shows up in git); CI itself passes
+            # `--out BENCH_kernels_quick_ci.json` and compares against the
+            # committed file (benchmarks/compare_bench.py).
             out = "BENCH_kernels_quick.json"
-        run_autotune(quick=args.quick, out_path=out)
+        run_autotune(quick=args.quick, out_path=out, warmup=args.warmup,
+                     iters=args.iters)
     if not args.autotune:
         run()
 

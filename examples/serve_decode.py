@@ -44,6 +44,10 @@ def main():
     done_m, tps_m, dt_m = run_engine(model, params, cfg, "masked", requests)
     packed = pack_tree(params)
     done_p, tps_p, dt_p = run_engine(model, packed, cfg, "packed", requests)
+    # the two-level block layout: active-group lists gate the kernel's DMAs
+    # (scan-stacked weights share one a_max via pack_block_stacked)
+    blocked = pack_tree(params, layout="block")
+    done_b, tps_b, dt_b = run_engine(model, blocked, cfg, "packed", requests)
 
     sp = cfg.sparsity
     print(f"arch {cfg.name} (reduced), sparsity {sp.pattern_name()}, "
@@ -52,17 +56,24 @@ def main():
     print(f"packed-DeMM  serving: {len(done_p)} reqs, {tps_p:.1f} tok/s "
           f"(CPU interpret — on TPU the packed path cuts weight HBM reads "
           f"~{sp.compression_ratio(2, 1):.0f}x; see DESIGN.md §6)")
+    print(f"block-DeMM   serving: {len(done_b)} reqs, {tps_b:.1f} tok/s "
+          f"(layout='block': two-level packing, DESIGN.md §9)")
 
     # generations agree modulo fp-tie argmax flips (the packed path
     # accumulates in fp32, the masked path in bf16)
     by_uid_m = {r.uid: r.output for r in done_m}
     by_uid_p = {r.uid: r.output for r in done_p}
+    by_uid_b = {r.uid: r.output for r in done_b}
     agree = np.mean([
         np.mean(np.asarray(by_uid_m[u]) == np.asarray(by_uid_p[u]))
         for u in by_uid_m])
+    agree_b = np.mean([
+        np.mean(np.asarray(by_uid_p[u]) == np.asarray(by_uid_b[u]))
+        for u in by_uid_p])
     print(f"greedy top-1 agreement across paths: {agree:.1%} "
-          f"(fp32 vs bf16 accumulation)")
+          f"(fp32 vs bf16 accumulation), xwT vs block: {agree_b:.1%}")
     assert agree > 0.7, "packed and masked paths diverged beyond fp noise"
+    assert agree_b > 0.95, "block and xwT packed paths diverged"
     for uid in sorted(by_uid_m)[:3]:
         print(f"  req {uid}: masked {by_uid_m[uid]}")
         print(f"          packed {by_uid_p[uid]}")

@@ -162,12 +162,15 @@ def prune_mask(a: jax.Array, cfg: SparsityConfig) -> jax.Array:
     # Threshold = value of the ne-th largest magnitude in each group.
     top_vals, _ = jax.lax.top_k(mag, ne)
     thresh = top_vals[..., ne - 1 : ne]  # (R, G, 1)
-    keep = mag >= thresh
+    # Exact zeros are never kept — and must be excluded *before* the tie
+    # resolution: an under-full group (fewer than ne non-zeros — the relaxed
+    # "at most N" case) has threshold 0, and counting its zeros as tie
+    # candidates used to crowd out the genuine non-zeros sitting later in
+    # the group.
+    keep = (mag >= thresh) & (mag > 0)
     # Resolve ties: if >ne elements meet the threshold, keep the first ones.
     over = jnp.cumsum(keep.astype(jnp.int32), axis=-1)
     keep = keep & (over <= ne)
-    # Never keep exact zeros (threshold can be 0 in an all-zero group).
-    keep = keep & (mag > 0)
     return keep.reshape(r, kdim)
 
 
@@ -258,12 +261,17 @@ def unpack_packed(p: PackedSparse) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 # Known packed layouts.  ``xwT`` is the serving orientation (y = x @ W^T with
-# W row-sparse along the contraction dim); ``block`` is reserved for the
-# two-level block-sparse format of kernels/demm_block_spmm.py once it gains
-# an ahead-of-time conversion pass.
+# W row-sparse along the contraction dim); ``block`` is the two-level
+# block-sparse format of kernels/demm_block_spmm.py — per row-block
+# active-group lists (level 1) over the usual relaxed N:M packed pairs
+# (level 2), converted ahead of time by :func:`pack_block`.
 LAYOUT_XWT = "xwT"
 LAYOUT_BLOCK = "block"
 LAYOUTS = (LAYOUT_XWT, LAYOUT_BLOCK)
+
+# Row-block height for the block layout: the MXU tile on TPU.  pack_block
+# clamps it to the largest power-of-two divisor of the row count.
+DEFAULT_BLOCK_R = 128
 
 
 class PackedWeight:
@@ -276,16 +284,23 @@ class PackedWeight:
     dense ``(out, in)`` shape, and the ``layout`` tag ride along as static
     aux data — available at trace time for kernel dispatch and autotuning.
 
-    Shapes: ``values``/``indices`` are ``(*stack, O, G, Ne)`` with
-    ``G = in_features // cfg.m`` and ``Ne = cfg.n_effective``; ``dense_shape``
-    is always the per-layer 2-D ``(O, K)`` (leading stack dims — e.g. the
-    scan-stacked layer axis — do not change it).
+    Shapes: for the ``xwT`` layout ``values``/``indices`` are
+    ``(*stack, O, G, Ne)`` with ``G = in_features // cfg.m`` and
+    ``Ne = cfg.n_effective``.  For the ``block`` layout they are
+    ``(RB, A_max, block_r, Ne)`` with a third traced child
+    ``active_groups (RB, A_max) int32`` — the level-1 address stream that
+    gates which B blocks the kernel DMAs at all — and the static block
+    geometry ``block_geom = (block_r, a_max)`` rides in the aux data.
+    ``dense_shape`` is always the per-layer 2-D ``(O, K)`` (leading stack
+    dims — e.g. the scan-stacked layer axis — do not change it).
     """
 
-    __slots__ = ("values", "indices", "cfg", "dense_shape", "layout")
+    __slots__ = ("values", "indices", "cfg", "dense_shape", "layout",
+                 "active_groups", "block_geom")
 
     def __init__(self, values, indices, *, cfg: SparsityConfig, dense_shape,
-                 layout: str = LAYOUT_XWT):
+                 layout: str = LAYOUT_XWT, active_groups=None,
+                 block_geom=None):
         if not isinstance(cfg, SparsityConfig):
             raise TypeError(f"cfg must be a SparsityConfig, got {type(cfg)}")
         if layout not in LAYOUTS:
@@ -295,19 +310,49 @@ class PackedWeight:
             raise ValueError(f"dense_shape must be 2-D (out, in), got "
                              f"{dense_shape}")
         vshape = getattr(values, "shape", None)
-        if vshape is not None and len(vshape) >= 3:
-            g, ne = int(vshape[-2]), int(vshape[-1])
-            if ne != cfg.n_effective or g * cfg.m != dense_shape[1]:
+        if layout == LAYOUT_BLOCK:
+            if active_groups is None:
                 raise ValueError(
-                    f"values shape {tuple(vshape)} is inconsistent with the "
-                    f"packed layout of cfg={cfg.pattern_name()} over dense "
-                    f"{dense_shape}: expected (*, {dense_shape[1] // cfg.m}, "
-                    f"{cfg.n_effective})")
+                    "block layout needs the active_groups child (the level-1 "
+                    "address stream); pack with pack_block")
+            if block_geom is None:
+                if vshape is None or len(vshape) < 4:
+                    raise ValueError(
+                        "block layout needs block_geom=(block_r, a_max) when "
+                        "values carry no shape to derive it from")
+                block_geom = (int(vshape[-2]), int(vshape[-3]))
+            block_geom = (int(block_geom[0]), int(block_geom[1]))
+            if vshape is not None and len(vshape) >= 4:
+                rb, amax, br, ne = (int(d) for d in vshape[-4:])
+                if (ne != cfg.n_effective or br != block_geom[0]
+                        or amax != block_geom[1] or rb * br != dense_shape[0]):
+                    raise ValueError(
+                        f"values shape {tuple(vshape)} is inconsistent with "
+                        f"block_geom={block_geom} over dense {dense_shape} "
+                        f"at cfg={cfg.pattern_name()}: expected "
+                        f"(*, {dense_shape[0] // block_geom[0]}, "
+                        f"{block_geom[1]}, {block_geom[0]}, "
+                        f"{cfg.n_effective})")
+        else:
+            if active_groups is not None or block_geom is not None:
+                raise ValueError(
+                    f"active_groups/block_geom only apply to the "
+                    f"{LAYOUT_BLOCK!r} layout, not {layout!r}")
+            if vshape is not None and len(vshape) >= 3:
+                g, ne = int(vshape[-2]), int(vshape[-1])
+                if ne != cfg.n_effective or g * cfg.m != dense_shape[1]:
+                    raise ValueError(
+                        f"values shape {tuple(vshape)} is inconsistent with "
+                        f"the packed layout of cfg={cfg.pattern_name()} over "
+                        f"dense {dense_shape}: expected "
+                        f"(*, {dense_shape[1] // cfg.m}, {cfg.n_effective})")
         self.values = values
         self.indices = indices
         self.cfg = cfg
         self.dense_shape = dense_shape
         self.layout = layout
+        self.active_groups = active_groups
+        self.block_geom = block_geom
 
     # ---- static geometry -------------------------------------------------
     @property
@@ -324,27 +369,37 @@ class PackedWeight:
 
     @property
     def stack_dims(self) -> tuple:
-        """Leading (scan/vmap) stack dims in front of the (O, G, Ne) core."""
+        """Leading (scan/vmap) stack dims in front of the layout's core:
+        (O, G, Ne) for ``xwT``, (RB, A_max, block_r, Ne) for ``block``."""
         shape = getattr(self.values, "shape", None)
-        return tuple(shape[:-3]) if shape is not None else ()
+        if shape is None:
+            return ()
+        core = 4 if self.layout == LAYOUT_BLOCK else 3
+        return tuple(shape[:-core])
 
     def replace(self, **kw) -> "PackedWeight":
         out = {"values": self.values, "indices": self.indices,
                "cfg": self.cfg, "dense_shape": self.dense_shape,
-               "layout": self.layout}
+               "layout": self.layout, "active_groups": self.active_groups,
+               "block_geom": self.block_geom}
         out.update(kw)
         return PackedWeight(out.pop("values"), out.pop("indices"), **out)
 
     def __repr__(self):
         vs = getattr(self.values, "shape", "?")
+        geom = f", block_geom={self.block_geom}" if self.block_geom else ""
         return (f"PackedWeight(values={vs}, cfg={self.cfg.pattern_name()!r}, "
-                f"dense_shape={self.dense_shape}, layout={self.layout!r})")
+                f"dense_shape={self.dense_shape}, layout={self.layout!r}"
+                f"{geom})")
 
     # ---- conversions -----------------------------------------------------
     @classmethod
     def from_dense(cls, w: jax.Array, cfg: SparsityConfig,
-                   layout: str = LAYOUT_XWT) -> "PackedWeight":
-        """Prune (if needed) and pack a dense 2-D weight."""
+                   layout: str = LAYOUT_XWT, *, block_r: "int | None" = None,
+                   a_max: "int | None" = None) -> "PackedWeight":
+        """Prune (if needed) and pack a dense 2-D weight into ``layout``."""
+        if layout == LAYOUT_BLOCK:
+            return pack_block(w, cfg, block_r=block_r, a_max=a_max)
         p = pack(prune(w, cfg), cfg)
         return cls(p.values, p.indices, cfg=cfg, dense_shape=w.shape,
                    layout=layout)
@@ -358,21 +413,34 @@ class PackedWeight:
         ``k``, so an embedded config is reconstructed with ``k=1``; the
         oldest form (bare ``pack_params`` output) had no pattern metadata at
         all and needs ``cfg`` passed explicitly."""
-        shape = node["shape"]
-        shape = shape.value if isinstance(shape, Static) else shape
+        def unwrap(v):
+            return v.value if isinstance(v, Static) else v
+
+        shape = unwrap(node["shape"])
         if cfg is None:
             if "_sparse_n" not in node:
                 raise ValueError(
                     "legacy packed dict carries no _sparse_n/_sparse_m "
                     "metadata; pass its SparsityConfig explicitly")
-            cfg = SparsityConfig(node["_sparse_n"].value,
-                                 node["_sparse_m"].value, 1)
+            cfg = SparsityConfig(unwrap(node["_sparse_n"]),
+                                 unwrap(node["_sparse_m"]), 1)
         return cls(node["values"], node["indices"], cfg=cfg,
                    dense_shape=shape, layout=LAYOUT_XWT)
 
     def to_dense(self) -> jax.Array:
         """Scatter back to the dense weight, restoring any stack dims."""
         o, k = self.dense_shape
+        if self.layout == LAYOUT_BLOCK:
+            stack = self.stack_dims
+            ag, vals, idxs = self.active_groups, self.values, self.indices
+            if stack:
+                ag = ag.reshape(-1, *ag.shape[-2:])
+                vals = vals.reshape(-1, *vals.shape[-4:])
+                idxs = idxs.reshape(-1, *idxs.shape[-4:])
+                dense = jax.vmap(lambda a, v, i: unpack_block(
+                    a, v, i, self.cfg, self.dense_shape))(ag, vals, idxs)
+                return dense.reshape(*stack, o, k)
+            return unpack_block(ag, vals, idxs, self.cfg, self.dense_shape)
         vals, idxs = self.values, self.indices
         stack = self.stack_dims
         if stack:
@@ -383,24 +451,215 @@ class PackedWeight:
 
 
 def _pw_flatten(pw: PackedWeight):
-    return (pw.values, pw.indices), (pw.cfg, pw.dense_shape, pw.layout)
+    aux = (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom)
+    if pw.layout == LAYOUT_BLOCK:
+        return (pw.values, pw.indices, pw.active_groups), aux
+    return (pw.values, pw.indices), aux
 
 
 def _pw_flatten_with_keys(pw: PackedWeight):
-    return ((jax.tree_util.GetAttrKey("values"), pw.values),
-            (jax.tree_util.GetAttrKey("indices"), pw.indices)), \
-        (pw.cfg, pw.dense_shape, pw.layout)
+    keyed = [(jax.tree_util.GetAttrKey("values"), pw.values),
+             (jax.tree_util.GetAttrKey("indices"), pw.indices)]
+    if pw.layout == LAYOUT_BLOCK:
+        keyed.append((jax.tree_util.GetAttrKey("active_groups"),
+                      pw.active_groups))
+    return tuple(keyed), (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom)
 
 
 def _pw_unflatten(aux, children) -> PackedWeight:
-    values, indices = children
-    cfg, dense_shape, layout = aux
-    return PackedWeight(values, indices, cfg=cfg, dense_shape=dense_shape,
-                        layout=layout)
+    # Raw rebuild, no __init__ validation: tree transforms routinely carry
+    # non-array leaves (None results, PartitionSpecs, sentinel objects) and
+    # the aux was validated when the weight was packed.
+    cfg, dense_shape, layout, block_geom = aux
+    pw = object.__new__(PackedWeight)
+    if layout == LAYOUT_BLOCK:
+        values, indices, active_groups = children
+    else:
+        (values, indices), active_groups = children, None
+    pw.values = values
+    pw.indices = indices
+    pw.cfg = cfg
+    pw.dense_shape = dense_shape
+    pw.layout = layout
+    pw.active_groups = active_groups
+    pw.block_geom = block_geom
+    return pw
 
 
 jax.tree_util.register_pytree_with_keys(
     PackedWeight, _pw_flatten_with_keys, _pw_unflatten, _pw_flatten)
+
+
+# ---------------------------------------------------------------------------
+# Two-level block packing (the "block" layout)
+# ---------------------------------------------------------------------------
+
+def _choose_block_r(rows: int, cap: int = DEFAULT_BLOCK_R) -> int:
+    """Largest power-of-two divisor of ``rows``, capped at ``cap``."""
+    br = 1
+    while br * 2 <= cap and rows % (br * 2) == 0:
+        br *= 2
+    return br
+
+
+def _group_activity(w: jax.Array, block_r: int, m: int) -> jax.Array:
+    """Active-group mask ``(..., RB, G)`` of ``(..., R, K)``: a group is
+    active when any row of the row block has a non-zero in it.  The single
+    home for the level-1 activity definition, shared by the stacked and
+    unstacked packers so their ``a_max`` bounds can never diverge."""
+    *lead, r, k = w.shape
+    blocks = w.reshape(*lead, r // block_r, block_r, k // m, m)
+    return jnp.any(blocks != 0, axis=(-3, -1))
+
+
+def _needed_a_max(activity: jax.Array) -> int:
+    """Max active groups over every row block (>= 1; concrete data only)."""
+    return max(1, int(jnp.max(jnp.sum(activity, axis=-1))))
+
+
+def pack_block(a: jax.Array, cfg: SparsityConfig, *,
+               block_r: "int | None" = None,
+               a_max: "int | None" = None) -> PackedWeight:
+    """Ahead-of-time two-level conversion to the ``block`` layout.
+
+    Level 1: per ``block_r``-row block, the sorted list of *active* M-groups
+    (groups where any row of the block has a non-zero) — the address stream
+    that gates which B blocks the kernel DMAs from HBM at all.  Level 2:
+    within each active group, the usual relaxed N:M ``{values, indices}``
+    pairs (magnitude top-``n_effective`` per row, like :func:`pack`).
+
+    ``a_max`` bounds the active-group list length (static — it shapes the
+    packed arrays).  When ``None`` it is computed from the data; under
+    tracing (``jax.eval_shape`` dry-runs) data is unavailable, so the
+    conservative upper bound ``G`` is used — pass ``a_max`` explicitly for
+    shape-exact dry-runs.  An ``a_max`` larger than ``G`` pads with
+    inactive slots (matching an existing checkpoint's geometry); an
+    undersized ``a_max`` raises on concrete inputs, but **cannot be checked
+    under tracing** (the bound is data-dependent): a traced call with an
+    explicit ``a_max`` below the true active count silently truncates, so
+    the caller owns that bound — pack on concrete weights (the AOT path)
+    when in doubt.  Padded slots point at group 0 with all-zero values and
+    contribute nothing.
+
+    Returns a :class:`PackedWeight` with ``layout="block"``, traced children
+    ``values``/``indices`` ``(RB, A_max, block_r, Ne)`` +
+    ``active_groups (RB, A_max) int32``, and static
+    ``block_geom=(block_r, a_max)`` in the aux.
+    """
+    _check_dims(a.shape, cfg.m)
+    r, kdim = a.shape
+    g = kdim // cfg.m
+    ne = cfg.n_effective
+    if block_r is None:
+        block_r = _choose_block_r(r)
+    if r % block_r:
+        raise ValueError(f"rows {r} not divisible by block_r={block_r}")
+    rb = r // block_r
+    concrete = not isinstance(a, jax.core.Tracer)
+
+    blocks = jnp.asarray(a).reshape(rb, block_r, g, cfg.m)
+    activity = _group_activity(jnp.asarray(a), block_r, cfg.m)  # (RB, G)
+    if a_max is None:
+        a_max = _needed_a_max(activity) if concrete else g
+    a_max = int(a_max)
+    if concrete:
+        needed = _needed_a_max(activity)
+        if needed > a_max:
+            raise ValueError(f"a_max={a_max} < {needed} active groups in the "
+                             "densest row block")
+
+    # Stable sort by (active desc, group id asc): actives first, ascending.
+    sel_w = min(a_max, g)
+    order = jnp.argsort(-activity.astype(jnp.int32), axis=-1,
+                        stable=True)[:, :sel_w]                # (RB, sel_w)
+    active = jnp.take_along_axis(activity, order, axis=-1)     # bool
+    if a_max > sel_w:
+        # a_max beyond the group count (e.g. matching an existing
+        # checkpoint's geometry): pad with inactive slots.
+        order = jnp.pad(order, ((0, 0), (0, a_max - sel_w)))
+        active = jnp.pad(active, ((0, 0), (0, a_max - sel_w)))
+    ag = jnp.where(active, order, 0).astype(jnp.int32)
+
+    grp = jnp.swapaxes(blocks, 1, 2)                           # (RB, G, br, M)
+    sel = jnp.take_along_axis(
+        grp, order[:, :, None, None].astype(jnp.int32), axis=1
+    )                                                          # (RB, A, br, M)
+    mag = jnp.abs(sel)
+    _, idx = jax.lax.top_k(mag, ne)                            # (RB, A, br, Ne)
+    idx = jnp.sort(idx, axis=-1)
+    vals = jnp.take_along_axis(sel, idx, axis=-1)
+    # Padded slots alias group 0: zero them so duplicates contribute nothing.
+    vals = jnp.where(active[:, :, None, None], vals, jnp.zeros((), a.dtype))
+    idx = jnp.where(vals != 0, idx, jnp.zeros((), jnp.int32))
+    return PackedWeight(vals, idx.astype(jnp.int32), cfg=cfg,
+                        dense_shape=(r, kdim), layout=LAYOUT_BLOCK,
+                        active_groups=ag, block_geom=(block_r, a_max))
+
+
+def pack_block_stacked(w: jax.Array, cfg: SparsityConfig, *,
+                       block_r: "int | None" = None,
+                       a_max: "int | None" = None) -> PackedWeight:
+    """:func:`pack_block` for layer-stacked weights ``(*lead, O, K)``.
+
+    All slices share one static ``a_max`` (the max active-group count over
+    the stack) so the packed children stack to ``(*lead, RB, A_max, block_r,
+    Ne)`` / ``(*lead, RB, A_max)`` and ``jax.lax.scan`` can slice the layer
+    axis off exactly as for the xwT layout; ``dense_shape``/``block_geom``
+    stay the per-layer statics."""
+    lead = tuple(w.shape[:-2])
+    if not lead:
+        return pack_block(w, cfg, block_r=block_r, a_max=a_max)
+    o, kdim = int(w.shape[-2]), int(w.shape[-1])
+    _check_dims((o, kdim), cfg.m)
+    if block_r is None:
+        block_r = _choose_block_r(o)
+    g = kdim // cfg.m
+    wf = jnp.asarray(w).reshape(-1, o, kdim)
+    concrete = not isinstance(w, jax.core.Tracer)
+    if a_max is None:
+        a_max = (_needed_a_max(_group_activity(wf, block_r, cfg.m))
+                 if concrete else g)
+    elif concrete:
+        # Validate here: the per-slice packers below run under vmap, where
+        # every input is a tracer and pack_block's own too-small-a_max check
+        # is skipped — without this, an undersized a_max would silently drop
+        # weights from the densest slice.
+        needed = _needed_a_max(_group_activity(wf, block_r, cfg.m))
+        if needed > int(a_max):
+            raise ValueError(f"a_max={a_max} < {needed} active groups in "
+                             "the densest row block of the stack")
+    packed = jax.vmap(
+        lambda a: pack_block(a, cfg, block_r=block_r, a_max=a_max))(wf)
+
+    def fix(x):
+        return x.reshape(*lead, *x.shape[1:])
+
+    return packed.replace(values=fix(packed.values),
+                          indices=fix(packed.indices),
+                          active_groups=fix(packed.active_groups))
+
+
+@partial(jax.jit, static_argnames=("cfg", "shape"))
+def unpack_block(active_groups: jax.Array, values: jax.Array,
+                 indices: jax.Array, cfg: SparsityConfig,
+                 shape: tuple) -> jax.Array:
+    """Scatter a two-level block packing back to a dense (R, K) matrix.
+    Duplicate active-group ids accumulate (matching the kernel's
+    revisit-accumulate semantics); padded all-zero slots contribute 0."""
+    r, kdim = shape
+    rb, a_max, block_r, ne = values.shape
+    g = kdim // cfg.m
+    assert rb * block_r == r, (values.shape, shape)
+    iota = jnp.arange(cfg.m, dtype=jnp.int32)
+    onehot = (indices[..., None] == iota).astype(values.dtype)
+    per_slot = jnp.einsum("rabn,rabnm->rabm", values, onehot)  # (RB,A,br,M)
+
+    def per_block(ag_b, slot_b):
+        dense_b = jnp.zeros((block_r, g, cfg.m), values.dtype)
+        return dense_b.at[:, ag_b, :].add(jnp.swapaxes(slot_b, 0, 1))
+
+    dense = jax.vmap(per_block)(active_groups, per_slot)       # (RB,br,G,M)
+    return dense.reshape(r, kdim)
 
 
 def reconfigure_k(p: PackedSparse, k: int) -> PackedSparse:

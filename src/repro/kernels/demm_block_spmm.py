@@ -34,10 +34,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.sparsity import SparsityConfig
+from repro.core.sparsity import DEFAULT_BLOCK_R, SparsityConfig, pack_block
 from repro.kernels.demm_spmm import _CompilerParams, _scatter_matrix
 
-DEFAULT_BLOCK_R = 128
 DEFAULT_BLOCK_C = 256
 
 
@@ -45,39 +44,18 @@ def pack_block_sparse(
     a: np.ndarray, cfg: SparsityConfig, block_r: int = DEFAULT_BLOCK_R,
     a_max: int | None = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-    """Host-side two-level packing.
+    """Host-side two-level packing — a numpy adapter over
+    :func:`repro.core.sparsity.pack_block` (the single home for the
+    active-group / level-2 selection semantics).
 
     Returns (active_groups (RB, A_max) int32,
              values (RB, A_max, block_r, Ne),
              indices (RB, A_max, block_r, Ne),
              a_max).
     """
-    r, k = a.shape
-    m, ne = cfg.m, cfg.n_effective
-    assert r % block_r == 0 and k % m == 0
-    rb, g = r // block_r, k // m
-    blocks = a.reshape(rb, block_r, g, m)
-
-    active = [np.nonzero(np.any(blocks[i] != 0, axis=(0, 2)))[0] for i in range(rb)]
-    max_needed = max((len(x) for x in active), default=0)
-    a_max = max(1, max_needed if a_max is None else a_max)
-    if max_needed > a_max:
-        raise ValueError(f"a_max={a_max} < needed {max_needed}")
-
-    ag = np.zeros((rb, a_max), np.int32)
-    vals = np.zeros((rb, a_max, block_r, ne), a.dtype)
-    idxs = np.zeros((rb, a_max, block_r, ne), np.int32)
-    for i in range(rb):
-        for j, gg in enumerate(active[i]):
-            ag[i, j] = gg
-            grp = blocks[i, :, gg, :]                       # (block_r, M)
-            order = np.argsort(-np.abs(grp), axis=-1, kind="stable")[:, :ne]
-            order = np.sort(order, axis=-1)
-            v = np.take_along_axis(grp, order, axis=-1)
-            order = np.where(v != 0, order, 0)
-            vals[i, j] = v
-            idxs[i, j] = order
-    return ag, vals, idxs, a_max
+    pw = pack_block(jnp.asarray(a), cfg, block_r=block_r, a_max=a_max)
+    return (np.asarray(pw.active_groups), np.asarray(pw.values),
+            np.asarray(pw.indices), pw.block_geom[1])
 
 
 def _block_spmm_kernel(ag_ref, values_ref, indices_ref, b_ref, out_ref, *, m, n):

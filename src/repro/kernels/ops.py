@@ -32,7 +32,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import LAYOUT_XWT, PackedWeight, SparsityConfig, unpack
+from repro.core.sparsity import (
+    LAYOUT_BLOCK,
+    LAYOUT_XWT,
+    LAYOUTS,
+    PackedWeight,
+    SparsityConfig,
+    unpack,
+)
 
 # Baseline backends always registered; `repro.tune.backend_names("xwT")` has
 # the live list (plus "auto", resolved through the tuning cache).
@@ -43,22 +50,52 @@ def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
                        backend: str = "reference") -> jax.Array:
     """y = x @ W^T for a first-class :class:`PackedWeight`.
 
-    The sparsity config (including k-reconfiguration) and dense shape come
-    from the type's static aux data, so call sites never re-derive them from
-    loose dict keys.  ``pw`` must be an unstacked (O, G, Ne) weight — scan
+    The layout tag picks the op: ``xwT`` weights run the row-packed DeMM
+    matmul, ``block`` weights (two-level ahead-of-time packing from
+    ``core.sparsity.pack_block``) run the scalar-prefetch block-spmm family.
+    The sparsity config (including k-reconfiguration), dense shape, and
+    block geometry come from the type's static aux data, so call sites never
+    re-derive them from loose dict keys.  ``pw`` must be unstacked — scan
     bodies slice the layer axis off stacked weights before applying.
     """
+    if pw.layout == LAYOUT_BLOCK:
+        if getattr(pw.values, "ndim", 4) != 4:
+            raise ValueError(
+                f"demm_matmul_packed needs an unstacked (RB, A_max, block_r, "
+                f"Ne) block weight, got values of shape {pw.values.shape}")
+        return demm_matmul_block(x, pw, backend)
     if pw.layout != LAYOUT_XWT:
-        raise NotImplementedError(
-            f"layout {pw.layout!r} has no registered matmul op yet "
-            f"(only {LAYOUT_XWT!r}; 'block' lands with the block_spmm "
-            "ahead-of-time conversion pass)")
+        raise ValueError(
+            f"unknown PackedWeight layout {pw.layout!r}; known layouts: "
+            f"{LAYOUTS}")
     if getattr(pw.values, "ndim", 3) != 3:
         raise ValueError(
             f"demm_matmul_packed needs an unstacked (O, G, Ne) weight, got "
             f"values of shape {pw.values.shape}; slice the stack axis first")
     return demm_matmul_xwT(x, pw.values, pw.indices, pw.cfg, pw.dense_shape,
                            backend)
+
+
+def demm_matmul_block(x: jax.Array, pw: PackedWeight,
+                      backend: str = "reference") -> jax.Array:
+    """y = x @ W^T for a ``block``-layout :class:`PackedWeight`.
+
+    The two-level kernel computes the paper orientation C = A_sparse @ B, so
+    the serving matmul is evaluated as ``(W_block @ x^T)^T`` with the
+    active-group address stream gating which xᵀ blocks are touched at all.
+    Dispatch routes through the ``xwT_block`` op of the ``repro.tune``
+    registry; ``backend="auto"`` resolves per (shape, dtype, pattern, block
+    geometry, platform) through the tuning cache.
+    """
+    from repro import tune
+
+    params = {}
+    if backend == "auto":
+        choice = tune.resolve_xwT_block(x.shape, pw, x.dtype)
+        backend, params = choice.backend, choice.params
+    variant = tune.get_variant("xwT_block", backend)
+    return variant.call(x, pw.values, pw.indices, pw.active_groups, pw.cfg,
+                        tuple(pw.dense_shape), **params)
 
 
 def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import SparsityConfig, unpack
+from repro.core.sparsity import SparsityConfig, unpack, unpack_block
 
 
 def spmm_ref(values: jax.Array, indices: jax.Array, b: jax.Array,
@@ -32,20 +32,9 @@ def xwT_ref(x: jax.Array, values: jax.Array, indices: jax.Array,
 def block_spmm_ref(active_groups, values, indices, b, cfg: SparsityConfig,
                    r: int) -> jax.Array:
     """Oracle for the two-level block-sparse format: scatter every active
-    group back to dense, then matmul."""
-    rb, a_max, block_r, ne = values.shape
-    k, cd = b.shape
-    m = cfg.m
-    g = k // m
-    dense = jnp.zeros((rb, block_r, g, m), values.dtype)
-    iota = jnp.arange(m, dtype=jnp.int32)
-    onehot = (indices[..., None] == iota).astype(values.dtype)  # (RB,A,br,Ne,M)
-    per_slot = jnp.einsum("rabn,rabnm->rabm", values, onehot)    # (RB,A,br,M)
-    # scatter-add each active slot into its group (duplicate ids accumulate,
-    # matching the kernel's revisit-accumulate semantics)
-    def per_block(dense_b, ag_b, slot_b):
-        return dense_b.at[:, ag_b, :].add(jnp.swapaxes(slot_b, 0, 1))
-    dense = jax.vmap(per_block)(dense, active_groups, per_slot)
-    a = dense.reshape(r, k)
+    group back to dense (``core.sparsity.unpack_block`` — one home for the
+    revisit-accumulate scatter semantics), then matmul."""
+    k = b.shape[0]
+    a = unpack_block(active_groups, values, indices, cfg, (r, k))
     return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                    preferred_element_type=jnp.float32)

@@ -4,8 +4,15 @@
 linear (``{"w": ..., "sparsity": Static(cfg)}``) to a first-class
 :class:`~repro.core.sparsity.PackedWeight` node, including the layer-stacked
 scan case (leading stack dims are preserved on values/indices while
-``dense_shape`` stays the per-layer 2-D shape).  ``pack_tree_shapes`` is the
-eval_shape twin used by the dry-run."""
+``dense_shape`` stays the per-layer 2-D shape).  ``layout`` selects the
+packed format: ``"xwT"`` (default, the row-packed serving stream) or
+``"block"`` (the two-level block format of ``core.sparsity.pack_block`` —
+per row-block active-group lists gating the kernel's B DMAs); stacked block
+weights share one ``a_max`` across the stack (``pack_block_stacked``) so
+scan slicing works unchanged.  ``pack_tree_shapes`` is the eval_shape twin
+used by the dry-run; for shape-exact block dry-runs pass ``a_max``
+explicitly (under tracing the active-group count cannot be read from the
+data and defaults to all groups)."""
 
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import warnings
 import jax
 
 from repro.core import sparse_linear as sl
-from repro.core.sparsity import PackedWeight
+from repro.core.sparsity import LAYOUT_BLOCK, LAYOUT_XWT, PackedWeight
 
 
 def _is_sparse_linear(node) -> bool:
@@ -29,8 +36,16 @@ def _is_sparse_linear(node) -> bool:
         "sparsity" in node or "_sparse_m" in node)
 
 
-def _pack_sparse_linear(node, cfg) -> PackedWeight:
+def _pack_sparse_linear(node, cfg, layout=LAYOUT_XWT, *, block_r=None,
+                        a_max=None) -> PackedWeight:
+    from repro.core.sparsity import pack_block_stacked
+
     w = node["w"]
+    if layout == LAYOUT_BLOCK:
+        # The block conversion prunes per-(row, group) itself; stacked
+        # weights share one a_max so scan bodies slice the layer axis off
+        # the packed children exactly as for xwT.
+        return pack_block_stacked(w, cfg, block_r=block_r, a_max=a_max)
     if w.ndim == 2:
         return sl.pack_params(node, cfg)
     # layer-stacked (L, ..., O, K): pack rows flat, restore the stack dims
@@ -43,18 +58,23 @@ def _pack_sparse_linear(node, cfg) -> PackedWeight:
         cfg=cfg, dense_shape=(o, k), layout=pw.layout)
 
 
-def pack_tree(params):
+def pack_tree(params, layout: str = LAYOUT_XWT, *, block_r=None, a_max=None):
     if isinstance(params, PackedWeight):
         return params
     if isinstance(params, dict):
         if "w" in params:
             cfg = sl.node_sparsity(params)
             if cfg is not None:
-                return _pack_sparse_linear(params, cfg)
-        return {k: pack_tree(v) for k, v in params.items()}
+                return _pack_sparse_linear(params, cfg, layout,
+                                           block_r=block_r, a_max=a_max)
+        return {k: pack_tree(v, layout, block_r=block_r, a_max=a_max)
+                for k, v in params.items()}
     return params
 
 
-def pack_tree_shapes(model, param_shapes):
+def pack_tree_shapes(model, param_shapes, layout: str = LAYOUT_XWT, *,
+                     block_r=None, a_max=None):
     """ShapeDtypeStruct tree of the packed params (no allocation)."""
-    return jax.eval_shape(pack_tree, param_shapes)
+    return jax.eval_shape(
+        lambda p: pack_tree(p, layout, block_r=block_r, a_max=a_max),
+        param_shapes)

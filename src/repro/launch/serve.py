@@ -33,11 +33,17 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--layout", choices=("xwT", "block"), default="xwT",
+                    help="packed-weight layout for --packed: the row-packed "
+                         "xwT stream or the two-level block format "
+                         "(pack_block; dispatches the block-spmm kernel)")
     # valid backends come from the registry, so variants added via
     # repro.tune.register_variant are immediately servable
     from repro import tune
     ap.add_argument("--backend", default="reference",
-                    choices=tuple(v.name for v in tune.variants_for("xwT"))
+                    choices=tuple(sorted(
+                        {v.name for v in tune.variants_for("xwT")}
+                        | {v.name for v in tune.variants_for("xwT_block")}))
                     + ("auto",))
     ap.add_argument("--autotune", action="store_true",
                     help="pre-measure tile configs for the packed decode "
@@ -45,13 +51,22 @@ def main():
     args = ap.parse_args()
     if args.autotune:
         args.backend = "auto"
+    if args.packed and args.backend != "auto":
+        # fail invalid layout/backend pairs here, not deep inside the first
+        # jitted decode step
+        op = "xwT_block" if args.layout == "block" else "xwT"
+        valid = {v.name for v in tune.variants_for(op)}
+        if args.backend not in valid:
+            ap.error(f"--backend {args.backend} is not a registered {op} "
+                     f"variant for --layout {args.layout} "
+                     f"(valid: {sorted(valid)} or 'auto')")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mode = "masked"
     if args.packed:
-        params = pack_tree(params)
+        params = pack_tree(params, layout=args.layout)
         mode = "packed"
     policy = ExecPolicy(mode=mode, backend=args.backend)
     engine = ServeEngine(model, params,

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.sparsity import PackedWeight
+from repro.core.sparsity import LAYOUT_BLOCK, PackedWeight
 from repro.core.treeutil import key_path_str as _path_str
 
 
@@ -128,10 +128,30 @@ def _packed_spec(kind: str, extra: int) -> P:
     return P(*([None] * extra + core))
 
 
+def _block_packed_specs(kind: str, extra: int):
+    """Specs for the block layout: values/indices are
+    (*stack, RB, A_max, block_r, Ne) and active_groups (*stack, RB, A_max).
+    Column-parallel shards the row-block axis RB (row blocks tile the output
+    dim, so each TP shard owns whole row blocks and their address streams).
+    Row-parallel would shard the contraction dim, but the active-group ids
+    address *global* M-groups — a shard would need its ids renumbered to its
+    local B slice — so row-parallel block weights stay replicated until a
+    renumbering pass lands."""
+    if kind == "col":
+        core, ag = ["model", None, None, None], ["model", None]
+    else:
+        core, ag = [None] * 4, [None] * 2
+    return (P(*([None] * extra + core)), P(*([None] * extra + ag)))
+
+
 def packed_weight_specs(pw: PackedWeight, kind: str) -> PackedWeight:
     """Structural PartitionSpecs for a PackedWeight node, returned in the
     same PackedWeight container so spec/sharding trees mirror the params."""
-    spec = _packed_spec(kind, len(pw.stack_dims))
+    extra = len(pw.stack_dims)
+    if pw.layout == LAYOUT_BLOCK:
+        spec, ag_spec = _block_packed_specs(kind, extra)
+        return pw.replace(values=spec, indices=spec, active_groups=ag_spec)
+    spec = _packed_spec(kind, extra)
     return pw.replace(values=spec, indices=spec)
 
 

@@ -14,7 +14,8 @@ shard.  ``save_async`` stages device-to-host transfers immediately and
 writes on a background thread (training continues).
 
 Typed nodes: :class:`~repro.core.sparsity.PackedWeight` nodes (values /
-indices leaves plus static ``{cfg, dense_shape, layout}`` aux) and
+indices — plus active_groups for the block layout — leaves with static
+``{cfg, dense_shape, layout, block_geom}`` aux) and
 :class:`Static` metadata are recorded in the manifest's ``nodes`` table, and
 restore patches the manifest's aux back over the template — so a packed
 model round-trips save → elastic-restore with its full
@@ -76,11 +77,14 @@ def _node_entries(tree, prefix=""):
     """Manifest entries for typed (non-array) nodes, keyed by tree path."""
     out = []
     if isinstance(tree, PackedWeight):
-        out.append({"path": prefix, "kind": "packed_weight",
-                    "cfg": {"n": tree.cfg.n, "m": tree.cfg.m,
-                            "k": tree.cfg.k},
-                    "dense_shape": list(tree.dense_shape),
-                    "layout": tree.layout})
+        entry = {"path": prefix, "kind": "packed_weight",
+                 "cfg": {"n": tree.cfg.n, "m": tree.cfg.m,
+                         "k": tree.cfg.k},
+                 "dense_shape": list(tree.dense_shape),
+                 "layout": tree.layout}
+        if tree.block_geom is not None:
+            entry["block_geom"] = list(tree.block_geom)
+        out.append(entry)
     elif isinstance(tree, Static):
         out.append({"path": prefix, "kind": "static",
                     "value": _encode_value(tree.value)})
@@ -100,9 +104,12 @@ def _patch_nodes(tree, by_path, prefix=""):
         e = by_path.get(prefix)
         if e is not None and e["kind"] == "packed_weight":
             cfg = SparsityConfig(**e["cfg"])
+            geom = e.get("block_geom")
             return PackedWeight(tree.values, tree.indices, cfg=cfg,
                                 dense_shape=tuple(e["dense_shape"]),
-                                layout=e["layout"])
+                                layout=e["layout"],
+                                active_groups=tree.active_groups,
+                                block_geom=tuple(geom) if geom else None)
         return tree
     if isinstance(tree, Static):
         e = by_path.get(prefix)

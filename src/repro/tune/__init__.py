@@ -27,6 +27,7 @@ from repro.tune.autotune import (
     TuneResult,
     autotune_spmm,
     autotune_xwT,
+    autotune_xwT_block,
     enumerate_candidates,
     estimate_cycles,
     measure,
@@ -54,11 +55,11 @@ from repro.tune.registry import (
 __all__ = [
     "DEFAULT_VMEM_BUDGET", "KernelVariant", "Problem", "TuneCache",
     "TuneResult", "TunedConfig", "autotune_spmm", "autotune_xwT",
-    "backend_names", "current_platform", "default_cache",
-    "enumerate_candidates", "estimate_cycles", "get_variant",
-    "heuristic_default", "measure", "problem_key", "prune_candidates",
-    "register_variant", "resolve_spmm", "resolve_xwT", "set_default_cache",
-    "variants_for", "vmem_bytes",
+    "autotune_xwT_block", "backend_names", "current_platform",
+    "default_cache", "enumerate_candidates", "estimate_cycles",
+    "get_variant", "heuristic_default", "measure", "problem_key",
+    "prune_candidates", "register_variant", "resolve_spmm", "resolve_xwT",
+    "resolve_xwT_block", "set_default_cache", "variants_for", "vmem_bytes",
 ]
 
 
@@ -78,29 +79,53 @@ def resolve_spmm(a_shape, b_shape, cfg: SparsityConfig, dtype) -> TunedConfig:
     return default_cache().resolve(p)
 
 
+def resolve_xwT_block(x_shape, pw, dtype) -> TunedConfig:
+    """Static (backend, params) choice for ``backend="auto"`` dispatch of a
+    block-layout :class:`~repro.core.sparsity.PackedWeight` — keyed by the
+    full problem including the pack-time block geometry.  Never measures."""
+    p = Problem.for_xwT_block(x_shape, pw, dtype)
+    return default_cache().resolve(p)
+
+
 def autotune_packed_tree(params, batch: int, dtype=None, *,
                          persist: bool = True, **tune_kw) -> dict:
     """Pre-tune every distinct packed-weight matmul shape in a param pytree.
 
     Walks ``params`` for :class:`~repro.core.sparsity.PackedWeight` nodes
-    (as produced by ``launch.pack_tree``) and runs :func:`autotune_xwT` once
-    per distinct (O, K, pattern) — all read from the type's static aux data,
-    k-reconfiguration included — with a dummy activation batch of ``batch``
-    rows, so a subsequent jit trace with ``backend="auto"`` resolves every
-    layer from measured entries instead of heuristics.  Returns
-    {problem_key: TuneResult}.  Legacy packed dicts are converted through
-    the deprecation shim.
+    (as produced by ``launch.pack_tree``) and runs :func:`autotune_xwT`
+    (or :func:`autotune_xwT_block` for block-layout nodes) once per distinct
+    (O, K, pattern[, block geometry]) — all read from the type's static aux
+    data, k-reconfiguration included — with a dummy activation batch of
+    ``batch`` rows, so a subsequent jit trace with ``backend="auto"``
+    resolves every layer from measured entries instead of heuristics.
+    Returns {problem_key: TuneResult}.  Legacy packed dicts are converted
+    through the deprecation shim.
     """
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.sparsity import PackedWeight
+    from repro.core.sparsity import LAYOUT_BLOCK, PackedWeight
 
     dtype = dtype or jnp.float32
     seen = {}
 
     def tune_one(pw: PackedWeight):
         o, k = pw.dense_shape
+        if pw.layout == LAYOUT_BLOCK:
+            stack = pw.stack_dims
+            if stack:   # layer-stacked: tune one slice (scan applies 2-D)
+                first = (0,) * len(stack)
+                pw = pw.replace(values=pw.values[first],
+                                indices=pw.indices[first],
+                                active_groups=pw.active_groups[first])
+            p = Problem.for_xwT_block((batch, k), pw, dtype)
+            key = problem_key(p)
+            if key in seen:
+                return
+            x = jnp.asarray(
+                np.random.default_rng(0).standard_normal((batch, k)), dtype)
+            seen[key] = autotune_xwT_block(x, pw, persist=persist, **tune_kw)
+            return
         vals, idxs = pw.values, pw.indices
         if vals.ndim > 3:   # layer-stacked: tune one slice
             vals = vals.reshape(-1, *vals.shape[-2:])[:o]

@@ -20,9 +20,12 @@ Pipeline (per problem):
      heuristic default is always measured, so the tuned choice is never
      slower than the default on the measured host.
 
-``measure_only`` variants (block_spmm's host-repacked two-level format) are
-measured and reported in the result table but never selected for dispatch —
-they cannot be invoked from inside a jit trace.
+``measure_only`` variants (the spmm-orientation block_spmm, which repacks
+flat packed operands on the host) are measured and reported in the result
+table but never selected for dispatch — they cannot be invoked from inside a
+jit trace.  The ``xwT_block`` op has no such restriction: its operands are
+packed ahead of time by ``core.sparsity.pack_block``, so the block kernel is
+a first-class dispatch target (see :func:`autotune_xwT_block`).
 """
 
 from __future__ import annotations
@@ -69,6 +72,14 @@ def vmem_bytes(problem: Problem, variant: str, params: Dict[str, int]) -> int:
         w_blk = bo * ne * (eb + 4)          # values + int32 indices
         out_blk = bb * bo * 4               # fp32 accumulator
         scatter = bo * m * eb
+    elif problem.op == "xwT_block":
+        # block_r is pack-time geometry (Problem.block_r), not a tile param.
+        br = problem.block_r or 128
+        bc = params.get("cd_block", 256)
+        x_blk = m * bc * eb                 # gathered B (= xᵀ) block
+        w_blk = br * ne * (eb + 4)
+        out_blk = br * bc * 4
+        scatter = br * m * eb
     else:  # spmm / block_spmm
         br = params.get("block_r", 128)
         bc = params.get("block_c", params.get("cd_block", 256))
@@ -95,12 +106,21 @@ def estimate_cycles(problem: Problem, params: Dict[str, int]) -> int:
         block_cols = params.get("block_b", 128)
         row_tiles = -(-problem.out // max(1, params.get("block_o", 128)))
         col_tiles = -(-problem.rows // max(1, block_cols))
+        inner = problem.groups
+    elif problem.op == "xwT_block":
+        block_cols = params.get("cd_block", 256)
+        row_tiles = -(-problem.out // max(1, problem.block_r or 128))
+        col_tiles = -(-problem.rows // max(1, block_cols))
+        # the inner grid dim visits only the active groups — the decoupled
+        # address stream's whole point.
+        inner = max(1, problem.a_max)
     else:
         block_cols = params.get("block_c", params.get("cd_block", 256))
         row_tiles = -(-problem.out // max(1, params.get("block_r", 128)))
         col_tiles = -(-problem.rows // max(1, block_cols))
+        inner = problem.groups
     base = _schedule_cycles(problem, block_cols)
-    grid_steps = row_tiles * col_tiles * problem.groups
+    grid_steps = row_tiles * col_tiles * inner
     return int(base + 50 * grid_steps)
 
 
@@ -255,6 +275,33 @@ def autotune_xwT(x: jax.Array, values: jax.Array, indices: jax.Array,
         jf = jax.jit(lambda xx, vv, ii: v.call(
             xx, vv, ii, cfg, tuple(w_shape), **c.params))
         return lambda: jf(x, values, indices)
+
+    return _autotune(problem, make_thunk, vmem_budget=vmem_budget,
+                     max_measure=max_measure, warmup=warmup, iters=iters,
+                     cache=cache, persist=persist)
+
+
+def autotune_xwT_block(x: jax.Array, pw, *,
+                       vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                       max_measure: int = 8, warmup: int = 2, iters: int = 5,
+                       cache: Optional[TuneCache] = None,
+                       persist: bool = True) -> TuneResult:
+    """Tune ``y = x @ W^T`` for a block-layout
+    :class:`~repro.core.sparsity.PackedWeight` (geometry and pattern come
+    from the type's static aux data).  All ``xwT_block`` variants are
+    dispatchable, so the winner is directly selectable by ``backend="auto"``.
+    """
+    from repro.tune.registry import get_variant
+
+    problem = Problem.for_xwT_block(x.shape, pw, x.dtype)
+    cfg, w_shape = pw.cfg, tuple(pw.dense_shape)
+    values, indices, active_groups = pw.values, pw.indices, pw.active_groups
+
+    def make_thunk(c: Candidate):
+        v = get_variant("xwT_block", c.backend)
+        jf = jax.jit(lambda xx, vv, ii, ag: v.call(
+            xx, vv, ii, ag, cfg, w_shape, **c.params))
+        return lambda: jf(x, values, indices, active_groups)
 
     return _autotune(problem, make_thunk, vmem_budget=vmem_budget,
                      max_measure=max_measure, warmup=warmup, iters=iters,

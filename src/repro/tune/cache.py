@@ -53,20 +53,25 @@ class TunedConfig:
 
 def problem_key(p: Problem) -> str:
     n, m, kr = p.sparsity
-    return (f"{p.op}|r{p.rows}|o{p.out}|k{p.k}|{p.dtype}"
-            f"|{n}:{m}:{kr}|{p.platform}")
+    key = (f"{p.op}|r{p.rows}|o{p.out}|k{p.k}|{p.dtype}"
+           f"|{n}:{m}:{kr}|{p.platform}")
+    if p.block_r:
+        # block geometry is fixed at pack time, so two packings of the same
+        # weight are distinct dispatch problems (pre-block keys unchanged).
+        key += f"|b{p.block_r}x{p.a_max}"
+    return key
 
 
 def heuristic_default(p: Problem) -> TunedConfig:
-    """Best unmeasured guess: the fused Pallas kernel with MXU-aligned tiles
-    on TPU, the XLA reference path everywhere else (interpret mode is a
-    debug backend and never a heuristic winner)."""
-    for v in variants_for(p.op, p):
-        if v.name == "pallas":
-            return TunedConfig("pallas", v.default_params(p))
-    for v in variants_for(p.op, p):
-        if v.name == "reference":
-            return TunedConfig("reference", v.default_params(p))
+    """Best unmeasured guess: a real Pallas kernel with MXU-aligned tiles on
+    TPU (the fused ``pallas`` variant, or ``block_spmm`` for the two-level
+    block layout), the XLA reference path everywhere else (interpret mode is
+    a debug backend and never a heuristic winner)."""
+    preferred = ("pallas", "block_spmm") if p.platform == "tpu" else ()
+    for name in preferred + ("reference",):
+        for v in variants_for(p.op, p):
+            if v.name == name:
+                return TunedConfig(name, v.default_params(p))
     raise RuntimeError(f"no supported variant for {p}")
 
 

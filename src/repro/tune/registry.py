@@ -17,8 +17,13 @@ visible to the autotuner, the benchmark harness, and ``backend="auto"``.
 
 Ops and uniform signatures
 --------------------------
-``xwT``  : call(x, values, indices, cfg, w_shape, **params) -> (B, O) f32
-``spmm`` : call(values, indices, b, cfg, a_shape, **params) -> (R, Cd) f32
+``xwT``       : call(x, values, indices, cfg, w_shape, **params) -> (B, O)
+``spmm``      : call(values, indices, b, cfg, a_shape, **params) -> (R, Cd)
+``xwT_block`` : call(x, values, indices, active_groups, cfg, w_shape,
+                **params) -> (B, O) — the two-level block layout packed ahead
+                of time by ``core.sparsity.pack_block`` (values/indices
+                (RB, A_max, block_r, Ne) + active_groups (RB, A_max)), fully
+                dispatchable under jit (no host repacking).
 
 A :class:`Problem` is the static description of one matmul instance — shapes,
 dtype, sparsity pattern, platform — and is everything a variant needs to
@@ -34,7 +39,7 @@ import jax
 
 from repro.core.sparsity import SparsityConfig
 
-OPS = ("xwT", "spmm")
+OPS = ("xwT", "spmm", "xwT_block")
 
 
 def current_platform() -> str:
@@ -46,10 +51,13 @@ def current_platform() -> str:
 class Problem:
     """Static description of one sparse-matmul instance.
 
-    ``rows``  — rows of the dense operand (batch tokens for xwT, output
-                columns Cd for spmm's B).
+    ``rows``  — rows of the dense operand (batch tokens for xwT/xwT_block,
+                output columns Cd for spmm's B).
     ``out``   — rows of the sparse operand (O for xwT, R for spmm).
     ``k``     — contraction dim (== groups * cfg.m).
+    ``block_r``/``a_max`` — static block geometry of the two-level layout
+                (``xwT_block`` only; 0 otherwise).  Fixed at pack time, so
+                it is part of the problem, not a tunable parameter.
     """
 
     op: str
@@ -59,6 +67,8 @@ class Problem:
     dtype: str                      # canonical jnp dtype name, e.g. "float32"
     sparsity: Tuple[int, int, int]  # (n, m, k_reconfig)
     platform: str = "cpu"
+    block_r: int = 0
+    a_max: int = 0
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -92,6 +102,20 @@ class Problem:
                    k=int(b_shape[0]), dtype=jax.numpy.dtype(dtype).name,
                    sparsity=(cfg.n, cfg.m, cfg.k),
                    platform=platform or current_platform())
+
+    @classmethod
+    def for_xwT_block(cls, x_shape, pw, dtype,
+                      platform: Optional[str] = None) -> "Problem":
+        """Problem for a block-layout PackedWeight serving matmul; geometry
+        and pattern are read from the type's static aux data."""
+        o, k = pw.dense_shape
+        block_r, a_max = pw.block_geom
+        cfg = pw.cfg
+        return cls(op="xwT_block", rows=int(x_shape[0]), out=int(o),
+                   k=int(k), dtype=jax.numpy.dtype(dtype).name,
+                   sparsity=(cfg.n, cfg.m, cfg.k),
+                   platform=platform or current_platform(),
+                   block_r=int(block_r), a_max=int(a_max))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -289,7 +313,58 @@ def _register_builtin_variants():
         supported=lambda p: (p.platform == "tpu"
                              or p.dense_flops <= _INTERPRET_FLOP_LIMIT),
         measure_only=True,
-        description="scalar-prefetch block-gather kernel (two-level packing)"))
+        description="scalar-prefetch block-gather kernel (host repack of the "
+                    "flat spmm packing; ahead-of-time conversion dispatches "
+                    "through the xwT_block op instead)"))
+
+    # ---- xwT_block: the two-level AOT block layout (serving orientation) --
+    # Operands come pre-packed by core.sparsity.pack_block, so both variants
+    # are dispatchable from inside a jit trace (no measure_only flag).
+
+    def xwT_block_ref_call(x, values, indices, active_groups, cfg, w_shape,
+                           **_):
+        o, _k = w_shape
+        return kref.block_spmm_ref(active_groups, values, indices, x.T, cfg,
+                                   int(o)).T
+
+    def xwT_block_pallas_call(x, values, indices, active_groups, cfg,
+                              w_shape, *, interpret, cd_block=256, **_):
+        from repro.kernels.demm_block_spmm import demm_block_spmm_pallas
+
+        o, _k = w_shape
+        b = x.T                                   # (K, B): paper orientation
+        cd = b.shape[1]
+        cd_block = min(cd_block, cd)
+        if cd % cd_block:
+            cd_block = cd                         # ragged batch: one tile
+        return demm_block_spmm_pallas(active_groups, values, indices, b, cfg,
+                                      r=int(o), cd_block=int(cd_block),
+                                      interpret=interpret).T
+
+    def xwT_block_tiles(p: Problem):
+        return {"cd_block": tuple(
+            c for c in _pow2_candidates(p.rows, 8, 256) if p.rows % c == 0
+        ) or (p.rows,)}
+
+    def xwT_block_defaults(p: Problem):
+        return {"cd_block": max(
+            (c for c in _pow2_candidates(p.rows, 8, 256) if p.rows % c == 0),
+            default=p.rows)}
+
+    register_variant(KernelVariant(
+        op="xwT_block", name="reference", call=xwT_block_ref_call,
+        param_space=lambda p: {}, default_params=lambda p: {},
+        supported=lambda p: True,
+        description="pure-jnp two-level scatter-add + matmul (XLA path)"))
+    register_variant(KernelVariant(
+        op="xwT_block", name="block_spmm",
+        call=lambda *a, **kw: xwT_block_pallas_call(
+            *a, interpret=current_platform() != "tpu", **kw),
+        param_space=xwT_block_tiles, default_params=xwT_block_defaults,
+        supported=lambda p: (p.platform == "tpu"
+                             or p.dense_flops <= _INTERPRET_FLOP_LIMIT),
+        description="scalar-prefetch block-gather Pallas kernel over the "
+                    "ahead-of-time two-level packing (interpret on CPU)"))
 
 
 _register_builtin_variants()

@@ -300,6 +300,254 @@ def test_legacy_masked_metadata_shim_warns():
                                rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Block layout (two-level ahead-of-time packing)
+# ---------------------------------------------------------------------------
+
+def _block_pw(key=0, o=32, k=64, cfg=CFG, block_r=8):
+    """A dense N:M weight and its two-level block packing."""
+    from repro.core.sparsity import pack_block, random_sparse_dense
+
+    w = jnp.asarray(random_sparse_dense(np.random.default_rng(key), o, k, cfg))
+    return w, pack_block(w, cfg, block_r=block_r)
+
+
+def test_pack_block_geometry_and_pytree():
+    from repro.core.sparsity import unpack_block
+
+    w, pw = _block_pw()
+    assert pw.layout == "block"
+    br, a_max = pw.block_geom
+    assert br == 8
+    assert pw.values.shape == (4, a_max, 8, CFG.n_effective)
+    assert pw.indices.shape == pw.values.shape
+    assert pw.active_groups.shape == (4, a_max)
+    # three traced children; aux (incl. geometry) survives a flatten cycle
+    leaves, treedef = jax.tree_util.tree_flatten(pw)
+    assert len(leaves) == 3
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.block_geom == pw.block_geom
+    assert rebuilt.layout == "block" and rebuilt.cfg == CFG
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(pw)[0]]
+    assert paths == [".values", ".indices", ".active_groups"]
+    # lossless for a pattern-satisfying weight
+    np.testing.assert_array_equal(np.asarray(pw.to_dense()), np.asarray(w))
+    np.testing.assert_array_equal(
+        np.asarray(unpack_block(pw.active_groups, pw.values, pw.indices,
+                                CFG, pw.dense_shape)),
+        np.asarray(w))
+
+
+def test_block_apply_parity_vs_ref_oracle():
+    """pack_block -> apply matches the kernels/ref.block_spmm_ref oracle and
+    the dense matmul, on the reference and (interpret) Pallas backends."""
+    from repro.kernels.ref import block_spmm_ref
+
+    w, pw = _block_pw()
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    want_oracle = np.asarray(block_spmm_ref(
+        pw.active_groups, pw.values, pw.indices, x.T, CFG, 32).T)
+    want_dense = np.asarray(x @ w.T)
+    for backend in ("reference", "block_spmm"):
+        y = sl.apply(pw, x, ExecPolicy(mode="packed", backend=backend))
+        np.testing.assert_allclose(np.asarray(y), want_oracle,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(y), want_dense,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_block_matches_xwT_path_through_checkpoint():
+    """Acceptance regression: a block-layout PackedWeight survives
+    pack -> apply -> checkpoint -> elastic restore with outputs identical
+    (within tolerance) to the xwT path."""
+    import tempfile
+
+    from repro.train import checkpoint as ckpt
+
+    w, pw_block = _block_pw()
+    pw_xwT = sl.pack_params({"w": w}, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    pol = ExecPolicy(mode="packed")
+    y_xwT = np.asarray(sl.apply(pw_xwT, x, pol))
+    y_block = np.asarray(sl.apply(pw_block, x, pol))
+    np.testing.assert_allclose(y_block, y_xwT, rtol=1e-5, atol=1e-5)
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save({"lin": pw_block}, d, 1)
+        # elastic restore: fresh shape-only template (as a restarted process
+        # would build), manifest is authoritative for the aux
+        template = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            {"lin": pw_block})
+        restored = ckpt.restore(template, d, 1)["lin"]
+    assert restored.layout == "block"
+    assert restored.block_geom == pw_block.block_geom
+    assert restored.cfg == CFG
+    np.testing.assert_array_equal(np.asarray(restored.active_groups),
+                                  np.asarray(pw_block.active_groups))
+    np.testing.assert_array_equal(np.asarray(sl.apply(restored, x, pol)),
+                                  y_block)
+
+
+def test_block_param_specs_structural():
+    from repro.launch.pack_tree import pack_tree
+    from repro.sharding import partitioning as part
+
+    cfg = SparsityConfig(2, 16)
+    def lin(key):
+        w = jax.random.normal(jax.random.PRNGKey(key), (32, 64))
+        return {"w": w, "sparsity": Static(cfg)}
+    tree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)}},
+                     layout="block")
+    assert tree["mlp"]["gate"].layout == "block"
+    specs = part.param_specs(tree)
+    # col-parallel shards the row-block axis of all three children
+    assert specs["mlp"]["gate"].values == P("model", None, None, None)
+    assert specs["mlp"]["gate"].active_groups == P("model", None)
+    # row-parallel needs active-group renumbering -> replicated for now
+    assert specs["mlp"]["down"].values == P(None, None, None, None)
+    assert specs["mlp"]["down"].active_groups == P(None, None)
+
+
+def test_pack_tree_block_stacked_scan_slices():
+    """Stacked block packing shares a_max across the stack and scan-style
+    layer slicing reproduces the per-layer packing."""
+    from repro.core.sparsity import pack_block
+    from repro.launch.pack_tree import pack_tree
+
+    cfg = SparsityConfig(2, 16)
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 32))  # stacked L=3
+    tree = pack_tree({"layers": {"w": w, "sparsity": Static(cfg)}},
+                     layout="block")
+    pw = tree["layers"]
+    assert pw.layout == "block" and pw.stack_dims == (3,)
+    assert pw.dense_shape == (8, 32)
+    br, a_max = pw.block_geom
+    assert pw.values.shape == (3, 8 // br, a_max, br, cfg.n_effective)
+    # slicing the layer axis (what lax.scan does) == packing that slice with
+    # the shared a_max
+    sliced = jax.tree.map(lambda a: a[1], pw)
+    per = pack_block(w[1], cfg, block_r=br, a_max=a_max)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 32))
+    pol = ExecPolicy(mode="packed")
+    np.testing.assert_allclose(
+        np.asarray(sl.apply(sliced, x, pol)),
+        np.asarray(sl.apply(per, x, pol)), rtol=1e-5, atol=1e-5)
+    # stacked to_dense restores the stack dims (regression: used to crash)
+    np.testing.assert_allclose(np.asarray(pw.to_dense()[1]),
+                               np.asarray(per.to_dense()),
+                               rtol=1e-6, atol=1e-6)
+    assert pw.to_dense().shape == (3, 8, 32)
+
+
+def test_autotune_packed_tree_slices_stacked_block(tmp_path):
+    """A scan-stacked block tree pre-tunes by slicing one layer off (the
+    decode step applies 2-D slices), instead of erroring on 5-D operands."""
+    from repro import tune
+    from repro.core.sparsity import pack_block_stacked
+
+    cfg = SparsityConfig(2, 16)
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 32))
+    pw = pack_block_stacked(w, cfg)
+    cache = tune.TuneCache(path=str(tmp_path / "cache.json"))
+    results = tune.autotune_packed_tree(
+        {"layers": pw}, 4, persist=False, cache=cache,
+        max_measure=1, warmup=1, iters=1)
+    (res,) = results.values()
+    assert res.problem.op == "xwT_block"
+    assert any(c.status == "measured" for c in res.candidates)
+
+
+def test_pack_block_a_max_validation_and_padding():
+    from repro.core.sparsity import (pack_block, pack_block_stacked,
+                                     random_sparse_dense)
+
+    w = jnp.asarray(random_sparse_dense(np.random.default_rng(0), 8, 32,
+                                        CFG))                  # G = 2
+    # a_max beyond the group count pads with inactive slots (useful when
+    # matching an existing checkpoint's geometry) — still lossless
+    pw = pack_block(w, CFG, block_r=8, a_max=5)
+    assert pw.block_geom == (8, 5)
+    assert pw.values.shape == (1, 5, 8, CFG.n_effective)
+    np.testing.assert_array_equal(np.asarray(pw.to_dense()), np.asarray(w))
+    # an undersized explicit a_max raises — including on the stacked path,
+    # whose per-slice packers run under vmap and cannot check it themselves
+    # (regression: used to silently drop weights from the densest slice)
+    ws = jnp.zeros((2, 8, 32)).at[0, 0, 0].set(1.0).at[0, 0, 16].set(2.0)
+    with pytest.raises(ValueError, match="active groups"):
+        pack_block_stacked(ws, CFG, block_r=8, a_max=1)
+    with pytest.raises(ValueError, match="active groups"):
+        pack_block(ws[0], CFG, block_r=8, a_max=1)
+
+
+def test_block_auto_dispatch_resolves_block_spmm(tmp_path):
+    """backend='auto' can resolve a block-layout weight to the block_spmm
+    kernel on CPU: forced cache entries dispatch it (numerics unchanged) and
+    the autotuner measures it as a first-class, dispatchable candidate."""
+    from repro import tune
+
+    cache = tune.TuneCache(path=str(tmp_path / "cache.json"))
+    tune.set_default_cache(cache)
+    try:
+        w, pw = _block_pw()
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+        p = tune.Problem.for_xwT_block(x.shape, pw, x.dtype)
+        assert f"b{pw.block_geom[0]}x{pw.block_geom[1]}" in \
+            tune.problem_key(p)
+        cache.put(p, tune.TunedConfig(backend="block_spmm",
+                                      params={"cd_block": 8}))
+        y = jax.jit(lambda pw_, x_: sl.apply(
+            pw_, x_, ExecPolicy(mode="packed", backend="auto")))(pw, x)
+        np.testing.assert_allclose(
+            np.asarray(y),
+            np.asarray(sl.apply(pw, x, ExecPolicy(mode="packed"))),
+            rtol=1e-5, atol=1e-5)
+
+        res = tune.autotune_xwT_block(x, pw, cache=cache, persist=False,
+                                      max_measure=2, warmup=1, iters=1)
+        measured = {c.backend for c in res.candidates
+                    if c.status == "measured"}
+        assert "block_spmm" in measured   # dispatchable, not measure-only
+        assert res.best.backend in measured
+    finally:
+        tune.set_default_cache(None)
+
+
+def test_autotune_packed_tree_handles_block_layout(tmp_path):
+    from repro import tune
+
+    w, pw = _block_pw()
+    cache = tune.TuneCache(path=str(tmp_path / "cache.json"))
+    results = tune.autotune_packed_tree(
+        {"mlp": {"gate": pw, "up": pw}}, 4, persist=False, cache=cache,
+        max_measure=1, warmup=1, iters=1)
+    assert len(results) == 1   # deduped by (O, K, pattern, block geometry)
+    (res,) = results.values()
+    assert res.problem.op == "xwT_block"
+    assert (res.problem.block_r, res.problem.a_max) == pw.block_geom
+
+
+def test_unknown_layout_tag_rejected():
+    """The constructor rejects unknown tags, and ops keeps a clear
+    ValueError (not the old 'lands later' NotImplementedError) for a forged
+    layout that slips past it."""
+    from repro.kernels import ops
+
+    _, pw = _pw()
+    with pytest.raises(ValueError, match="unknown layout"):
+        PackedWeight(pw.values, pw.indices, cfg=CFG, dense_shape=(16, 64),
+                     layout="bogus")
+    forged = object.__new__(PackedWeight)
+    forged.values, forged.indices = pw.values, pw.indices
+    forged.cfg, forged.dense_shape = CFG, (16, 64)
+    forged.layout, forged.active_groups, forged.block_geom = \
+        "bogus", None, None
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    with pytest.raises(ValueError, match="unknown PackedWeight layout"):
+        ops.demm_matmul_packed(x, forged)
+
+
 def test_autotune_packed_tree_keys_off_type(tmp_path):
     from repro import tune
 

@@ -63,6 +63,19 @@ def test_prune_keeps_largest_magnitudes():
     np.testing.assert_allclose(pruned, [[0.0, -5.0, 0.0, 3.0, 0.0, 0.2, -0.3, 0.0]])
 
 
+def test_prune_is_identity_on_underfull_groups():
+    """Relaxed "at most N" groups with fewer than n_effective non-zeros must
+    survive pruning untouched (regression: the tie-resolution used to count
+    leading zeros against the 0-threshold and drop the real non-zeros)."""
+    cfg = SparsityConfig(2, 16)
+    a = np.zeros((2, 32), np.float32)
+    a[0, 8] = -0.7          # 1 non-zero, late in the group
+    a[1, 20] = 0.3          # 1 non-zero in the second group
+    a[1, 30] = -0.2
+    pruned = np.asarray(prune(jnp.asarray(a), cfg))
+    np.testing.assert_array_equal(pruned, a)
+
+
 def test_pack_unpack_roundtrip_exact():
     rng = np.random.default_rng(2)
     cfg = SparsityConfig(4, 32)
