@@ -58,6 +58,15 @@ BLOCK_CASES = [
     ("block_attn_decode", 256, 256, 128, SparsityConfig(8, 128)),
 ]
 
+# int8-quantized cases (repro.quant, w8a16 kernels): one per quantized op so
+# the CI smoke gates int8 tuned-vs-dense ratios on every jax matrix leg.
+Q8_CASES = [
+    ("q8_mlp_decode", 256, 512, 8, SparsityConfig(8, 128)),
+]
+Q8_BLOCK_CASES = [
+    ("q8_block_mlp_decode", 256, 512, 64, SparsityConfig(8, 128)),
+]
+
 
 def roofline_time(flops, bytes_):
     return max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
@@ -249,6 +258,74 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
             name, key, {"out": o, "k": k, "batch": bt,
                         "pattern": sp.pattern_name(),
                         "block_geom": list(pw.block_geom)},
+            t_dense, default, t_default, res, verbose))
+
+    # --- int8 quantized packed weights (repro.quant, w8a16 dispatch) ------
+    from repro.quant import quantize_packed
+
+    for name, o, k, bt, sp in Q8_CASES:
+        w_dense = jnp.asarray(prune(jnp.asarray(
+            rng.standard_normal((o, k)).astype(np.float32)), sp))
+        p = pack(w_dense, sp)
+        from repro.core.sparsity import PackedWeight
+        q = quantize_packed(PackedWeight(p.values, p.indices, cfg=sp,
+                                         dense_shape=(o, k)))
+        x = jnp.asarray(rng.standard_normal((bt, k)).astype(np.float32))
+        problem = tune.Problem.for_xwT((bt, k), (o, k), sp, jnp.float32,
+                                       quantized=True)
+        key = tune.problem_key(problem)
+        if key in seen:
+            continue
+        seen.add(key)
+
+        dense_mm = jax.jit(lambda xx, ww: xx @ ww.T)
+        t_dense = _measure_thunk(lambda: dense_mm(x, w_dense), warmup, iters)
+
+        default = tune.heuristic_default(problem)
+        dvar = tune.get_variant("xwT_q8", default.backend)
+        default_jf = jax.jit(lambda xx, vv, ii, ss: dvar.call(
+            xx, vv, ii, ss, sp, (o, k), **default.params))
+        t_default = _measure_thunk(
+            lambda: default_jf(x, q.values, q.indices, q.scales),
+            warmup, iters)
+
+        res = tune.autotune_xwT_q8(x, q.values, q.indices, q.scales, sp,
+                                   (o, k), max_measure=max_measure,
+                                   warmup=warmup, iters=iters, persist=True)
+        results.append(_case_entry(
+            name, key, {"out": o, "k": k, "batch": bt,
+                        "pattern": sp.pattern_name(), "qdtype": "int8"},
+            t_dense, default, t_default, res, verbose))
+
+    for name, o, k, bt, sp in Q8_BLOCK_CASES:
+        w_dense = jnp.asarray(prune(jnp.asarray(
+            rng.standard_normal((o, k)).astype(np.float32)), sp))
+        q = quantize_packed(pack_block(w_dense, sp))
+        x = jnp.asarray(rng.standard_normal((bt, k)).astype(np.float32))
+        problem = tune.Problem.for_xwT_block(x.shape, q, jnp.float32)
+        key = tune.problem_key(problem)
+        if key in seen:
+            continue
+        seen.add(key)
+
+        dense_mm = jax.jit(lambda xx, ww: xx @ ww.T)
+        t_dense = _measure_thunk(lambda: dense_mm(x, w_dense), warmup, iters)
+
+        default = tune.heuristic_default(problem)
+        dvar = tune.get_variant("xwT_block_q8", default.backend)
+        default_jf = jax.jit(lambda xx, vv, ii, ag, ss: dvar.call(
+            xx, vv, ii, ag, ss, sp, (o, k), **default.params))
+        t_default = _measure_thunk(
+            lambda: default_jf(x, q.values, q.indices, q.active_groups,
+                               q.scales), warmup, iters)
+
+        res = tune.autotune_xwT_block(x, q, max_measure=max_measure,
+                                      warmup=warmup, iters=iters,
+                                      persist=True)
+        results.append(_case_entry(
+            name, key, {"out": o, "k": k, "batch": bt,
+                        "pattern": sp.pattern_name(),
+                        "block_geom": list(q.block_geom), "qdtype": "int8"},
             t_dense, default, t_default, res, verbose))
 
     blob = {

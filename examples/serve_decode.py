@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests, comparing the dense-masked vs
-packed-DeMM serving paths (the paper's inference use case).
+"""Serve a small model with batched requests, comparing every supported
+serving path — dense-masked, packed xwT, two-level block, and int8-quantized
+block (sparsity × quantization, the S2TA-style multiplicative win).
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -48,32 +49,45 @@ def main():
     # (scan-stacked weights share one a_max via pack_block_stacked)
     blocked = pack_tree(params, layout="block")
     done_b, tps_b, dt_b = run_engine(model, blocked, cfg, "packed", requests)
+    # sparsity × quantization: the same block layout with int8 values +
+    # traced scales, dequantized in-register by the w8a16 kernels
+    quant = pack_tree(params, layout="block", quantize="int8")
+    done_q, tps_q, dt_q = run_engine(model, quant, cfg, "packed", requests)
 
     sp = cfg.sparsity
     print(f"arch {cfg.name} (reduced), sparsity {sp.pattern_name()}, "
-          f"weight compression {sp.compression_ratio(2, 1):.1f}x")
+          f"weight compression {sp.compression_ratio(2, 1):.1f}x "
+          f"(int8: {sp.compression_ratio(2, 1) * 1.5:.1f}x)")
     print(f"masked-dense serving: {len(done_m)} reqs, {tps_m:.1f} tok/s")
     print(f"packed-DeMM  serving: {len(done_p)} reqs, {tps_p:.1f} tok/s "
           f"(CPU interpret — on TPU the packed path cuts weight HBM reads "
           f"~{sp.compression_ratio(2, 1):.0f}x; see DESIGN.md §6)")
     print(f"block-DeMM   serving: {len(done_b)} reqs, {tps_b:.1f} tok/s "
           f"(layout='block': two-level packing, DESIGN.md §9)")
+    print(f"block+int8   serving: {len(done_q)} reqs, {tps_q:.1f} tok/s "
+          f"(quantize='int8': w8a16 kernels, DESIGN.md §10)")
 
     # generations agree modulo fp-tie argmax flips (the packed path
-    # accumulates in fp32, the masked path in bf16)
+    # accumulates in fp32, the masked path in bf16) and int8 rounding
     by_uid_m = {r.uid: r.output for r in done_m}
     by_uid_p = {r.uid: r.output for r in done_p}
     by_uid_b = {r.uid: r.output for r in done_b}
+    by_uid_q = {r.uid: r.output for r in done_q}
     agree = np.mean([
         np.mean(np.asarray(by_uid_m[u]) == np.asarray(by_uid_p[u]))
         for u in by_uid_m])
     agree_b = np.mean([
         np.mean(np.asarray(by_uid_p[u]) == np.asarray(by_uid_b[u]))
         for u in by_uid_p])
+    agree_q = np.mean([
+        np.mean(np.asarray(by_uid_b[u]) == np.asarray(by_uid_q[u]))
+        for u in by_uid_b])
     print(f"greedy top-1 agreement across paths: {agree:.1%} "
-          f"(fp32 vs bf16 accumulation), xwT vs block: {agree_b:.1%}")
+          f"(fp32 vs bf16 accumulation), xwT vs block: {agree_b:.1%}, "
+          f"block vs block+int8: {agree_q:.1%}")
     assert agree > 0.7, "packed and masked paths diverged beyond fp noise"
     assert agree_b > 0.95, "block and xwT packed paths diverged"
+    assert agree_q > 0.6, "int8 path diverged beyond quantization noise"
     for uid in sorted(by_uid_m)[:3]:
         print(f"  req {uid}: masked {by_uid_m[uid]}")
         print(f"          packed {by_uid_p[uid]}")

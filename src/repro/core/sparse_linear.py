@@ -25,14 +25,14 @@ activations are the dense matrix B.
 
 The pre-PackedWeight dict conventions (``{values, indices, shape,
 _sparse_m, _sparse_n}`` packed nodes; ``_sparse_m``/``_sparse_n`` masked
-metadata) are still accepted through deprecation shims that warn and
-convert; they will be removed after one release.
+metadata) went through one release of deprecation shims and are now
+rejected with a ValueError pointing at ``launch.pack_tree`` /
+``init_linear``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Mapping, Optional, Union
 
 import jax
@@ -136,14 +136,12 @@ def init_sparse(key, in_features: int, out_features: int, cfg: SparsityConfig,
 
 
 # ---------------------------------------------------------------------------
-# Node introspection (+ legacy-format shims)
+# Node introspection
 # ---------------------------------------------------------------------------
 
 def node_sparsity(params) -> Optional[SparsityConfig]:
     """The SparsityConfig of a dense-weight linear node, or None for a plain
-    dense linear.  Accepts the legacy ``_sparse_m``/``_sparse_n`` metadata
-    with a DeprecationWarning (``k`` is lost in that form — it predates
-    k-reconfiguration support)."""
+    dense linear."""
     if isinstance(params, PackedWeight):
         return params.cfg
     if not isinstance(params, dict):
@@ -152,29 +150,20 @@ def node_sparsity(params) -> Optional[SparsityConfig]:
     if sp is not None:
         return sp.value if isinstance(sp, Static) else sp
     if "_sparse_m" in params:
-        warnings.warn(
-            "the _sparse_m/_sparse_n metadata keys are deprecated; "
-            "re-init the layer (init_linear stores a single "
-            "sparsity=Static(SparsityConfig) entry carrying k)",
-            DeprecationWarning, stacklevel=3)
-        return SparsityConfig(params["_sparse_n"].value,
-                              params["_sparse_m"].value, 1)
+        raise ValueError(
+            "the legacy _sparse_m/_sparse_n metadata keys are no longer "
+            "supported; re-init the layer (init_linear stores a single "
+            "sparsity=Static(SparsityConfig) entry carrying k) and pack "
+            "with launch.pack_tree")
     return None
 
 
-def _coerce_packed(params, cfg: Optional[SparsityConfig] = None
-                   ) -> Optional[PackedWeight]:
-    """PackedWeight passthrough, plus the deprecated packed-dict shim."""
-    if isinstance(params, PackedWeight):
-        return params
+def _reject_legacy_packed(params):
     if isinstance(params, dict) and "values" in params:
-        warnings.warn(
-            "packed {values, indices, shape, _sparse_*} dicts are "
-            "deprecated; pack with pack_params/pack_tree to get a "
-            "PackedWeight",
-            DeprecationWarning, stacklevel=3)
-        return PackedWeight.from_legacy(params, cfg)
-    return None
+        raise ValueError(
+            "legacy packed {values, indices, shape} dicts are no longer "
+            "supported; pack with pack_params/launch.pack_tree to get a "
+            "PackedWeight")
 
 
 # ---------------------------------------------------------------------------
@@ -186,9 +175,9 @@ def apply(params, x: jax.Array,
     """Unified linear application: dense, masked, or packed-DeMM, chosen by
     the node's type and the :class:`ExecPolicy`."""
     policy = policy or DEFAULT_POLICY
-    pw = _coerce_packed(params)
-    if pw is not None:
-        return _apply_packed(pw, x, policy)
+    if isinstance(params, PackedWeight):
+        return _apply_packed(params, x, policy)
+    _reject_legacy_packed(params)
     cfg = node_sparsity(params)
     if cfg is None or policy.mode == "dense":
         return apply_dense(params, x)
@@ -247,13 +236,13 @@ def pack_params(params, cfg: Optional[SparsityConfig] = None) -> PackedWeight:
 
 def apply_packed(params, x: jax.Array, cfg: Optional[SparsityConfig] = None,
                  backend: str = "reference") -> jax.Array:
-    """Deprecated-compat wrapper: packed application of a PackedWeight or a
-    legacy packed dict (which warns and converts).  New code should call
+    """Packed application of a :class:`PackedWeight`.  New code should call
     :func:`apply` with ``ExecPolicy(backend=...)``."""
-    pw = _coerce_packed(params, cfg)
-    if pw is None:
-        raise TypeError(f"apply_packed expects a PackedWeight or a legacy "
-                        f"packed dict, got {type(params)}")
+    _reject_legacy_packed(params)
+    if not isinstance(params, PackedWeight):
+        raise TypeError(f"apply_packed expects a PackedWeight, got "
+                        f"{type(params)}")
+    pw = params
     if cfg is not None:
         pw = _reconfigure(pw, cfg)
     return _apply_packed(pw, x, ExecPolicy(mode="packed", backend=backend))

@@ -273,6 +273,13 @@ LAYOUTS = (LAYOUT_XWT, LAYOUT_BLOCK)
 # clamps it to the largest power-of-two divisor of the row count.
 DEFAULT_BLOCK_R = 128
 
+# Known quantized value dtypes.  ``None`` (the default) means the values
+# child carries full-precision floats; ``"int8"`` means symmetric int8 with
+# a traced ``scales`` child (per output row for the xwT layout, per
+# (row-block, group, row) for the block layout) — see ``repro.quant``.
+QDTYPE_INT8 = "int8"
+QDTYPES = (QDTYPE_INT8,)
+
 
 class PackedWeight:
     """A packed relaxed-N:M sparse weight as a registered JAX pytree.
@@ -293,18 +300,39 @@ class PackedWeight:
     geometry ``block_geom = (block_r, a_max)`` rides in the aux data.
     ``dense_shape`` is always the per-layer 2-D ``(O, K)`` (leading stack
     dims — e.g. the scan-stacked layer axis — do not change it).
+
+    Quantization (``repro.quant``): when ``qdtype`` is set (static aux, e.g.
+    ``"int8"``) the ``values`` child holds quantized integers and a fourth
+    traced child ``scales`` carries the symmetric dequantization scales —
+    ``(*stack, O)`` float32 (per output row) for ``xwT``,
+    ``(*stack, RB, A_max, block_r)`` (per row-block × group × row) for
+    ``block``.  The dense weight is ``scales ⊙ values`` broadcast over the
+    packed axes; kernels dequantize in-register (w8a16).
     """
 
     __slots__ = ("values", "indices", "cfg", "dense_shape", "layout",
-                 "active_groups", "block_geom")
+                 "active_groups", "block_geom", "scales", "qdtype")
 
     def __init__(self, values, indices, *, cfg: SparsityConfig, dense_shape,
                  layout: str = LAYOUT_XWT, active_groups=None,
-                 block_geom=None):
+                 block_geom=None, scales=None, qdtype=None):
         if not isinstance(cfg, SparsityConfig):
             raise TypeError(f"cfg must be a SparsityConfig, got {type(cfg)}")
         if layout not in LAYOUTS:
             raise ValueError(f"unknown layout {layout!r}; expected {LAYOUTS}")
+        if qdtype is None:
+            if scales is not None:
+                raise ValueError(
+                    "scales only apply to quantized weights; set qdtype "
+                    "(repro.quant.quantize_packed does both)")
+        else:
+            if qdtype not in QDTYPES:
+                raise ValueError(
+                    f"unknown qdtype {qdtype!r}; expected one of {QDTYPES}")
+            if scales is None:
+                raise ValueError(
+                    f"qdtype={qdtype!r} needs the scales child; quantize "
+                    "with repro.quant.quantize_packed")
         dense_shape = tuple(int(d) for d in dense_shape)
         if len(dense_shape) != 2:
             raise ValueError(f"dense_shape must be 2-D (out, in), got "
@@ -346,6 +374,16 @@ class PackedWeight:
                         f"the packed layout of cfg={cfg.pattern_name()} over "
                         f"dense {dense_shape}: expected "
                         f"(*, {dense_shape[1] // cfg.m}, {cfg.n_effective})")
+        sshape = getattr(scales, "shape", None)
+        if qdtype is not None and sshape is not None and vshape is not None:
+            want = (tuple(vshape[:-1]) if layout == LAYOUT_BLOCK
+                    else tuple(vshape[:-2]))
+            if tuple(sshape) != want:
+                raise ValueError(
+                    f"scales shape {tuple(sshape)} does not match values "
+                    f"{tuple(vshape)} for the {layout!r} layout: expected "
+                    f"{want} (per output row for xwT, per row-block × group "
+                    f"× row for block)")
         self.values = values
         self.indices = indices
         self.cfg = cfg
@@ -353,6 +391,8 @@ class PackedWeight:
         self.layout = layout
         self.active_groups = active_groups
         self.block_geom = block_geom
+        self.scales = scales
+        self.qdtype = qdtype
 
     # ---- static geometry -------------------------------------------------
     @property
@@ -381,16 +421,18 @@ class PackedWeight:
         out = {"values": self.values, "indices": self.indices,
                "cfg": self.cfg, "dense_shape": self.dense_shape,
                "layout": self.layout, "active_groups": self.active_groups,
-               "block_geom": self.block_geom}
+               "block_geom": self.block_geom, "scales": self.scales,
+               "qdtype": self.qdtype}
         out.update(kw)
         return PackedWeight(out.pop("values"), out.pop("indices"), **out)
 
     def __repr__(self):
         vs = getattr(self.values, "shape", "?")
         geom = f", block_geom={self.block_geom}" if self.block_geom else ""
+        q = f", qdtype={self.qdtype!r}" if self.qdtype else ""
         return (f"PackedWeight(values={vs}, cfg={self.cfg.pattern_name()!r}, "
                 f"dense_shape={self.dense_shape}, layout={self.layout!r}"
-                f"{geom})")
+                f"{geom}{q})")
 
     # ---- conversions -----------------------------------------------------
     @classmethod
@@ -404,35 +446,24 @@ class PackedWeight:
         return cls(p.values, p.indices, cfg=cfg, dense_shape=w.shape,
                    layout=layout)
 
-    @classmethod
-    def from_legacy(cls, node: dict,
-                    cfg: "SparsityConfig | None" = None) -> "PackedWeight":
-        """Convert the pre-PackedWeight packed dict convention
-        ``{values, indices, shape[, _sparse_m, _sparse_n]}`` (``shape``
-        either a Static or a plain tuple).  The legacy format never carried
-        ``k``, so an embedded config is reconstructed with ``k=1``; the
-        oldest form (bare ``pack_params`` output) had no pattern metadata at
-        all and needs ``cfg`` passed explicitly."""
-        def unwrap(v):
-            return v.value if isinstance(v, Static) else v
-
-        shape = unwrap(node["shape"])
-        if cfg is None:
-            if "_sparse_n" not in node:
-                raise ValueError(
-                    "legacy packed dict carries no _sparse_n/_sparse_m "
-                    "metadata; pass its SparsityConfig explicitly")
-            cfg = SparsityConfig(unwrap(node["_sparse_n"]),
-                                 unwrap(node["_sparse_m"]), 1)
-        return cls(node["values"], node["indices"], cfg=cfg,
-                   dense_shape=shape, layout=LAYOUT_XWT)
+    def dequantized_values(self) -> jax.Array:
+        """The values child with quantization scales applied (float32 for a
+        quantized weight; the raw values otherwise)."""
+        if self.qdtype is None:
+            return self.values
+        vals = self.values.astype(jnp.float32)
+        if self.layout == LAYOUT_BLOCK:
+            return vals * self.scales[..., None]
+        return vals * self.scales[..., None, None]
 
     def to_dense(self) -> jax.Array:
-        """Scatter back to the dense weight, restoring any stack dims."""
+        """Scatter back to the dense weight (dequantizing if needed),
+        restoring any stack dims."""
         o, k = self.dense_shape
         if self.layout == LAYOUT_BLOCK:
             stack = self.stack_dims
-            ag, vals, idxs = self.active_groups, self.values, self.indices
+            ag, vals, idxs = (self.active_groups, self.dequantized_values(),
+                              self.indices)
             if stack:
                 ag = ag.reshape(-1, *ag.shape[-2:])
                 vals = vals.reshape(-1, *vals.shape[-4:])
@@ -441,7 +472,7 @@ class PackedWeight:
                     a, v, i, self.cfg, self.dense_shape))(ag, vals, idxs)
                 return dense.reshape(*stack, o, k)
             return unpack_block(ag, vals, idxs, self.cfg, self.dense_shape)
-        vals, idxs = self.values, self.indices
+        vals, idxs = self.dequantized_values(), self.indices
         stack = self.stack_dims
         if stack:
             vals = vals.reshape(-1, *vals.shape[-2:])
@@ -451,10 +482,13 @@ class PackedWeight:
 
 
 def _pw_flatten(pw: PackedWeight):
-    aux = (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom)
+    aux = (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom, pw.qdtype)
+    children = [pw.values, pw.indices]
     if pw.layout == LAYOUT_BLOCK:
-        return (pw.values, pw.indices, pw.active_groups), aux
-    return (pw.values, pw.indices), aux
+        children.append(pw.active_groups)
+    if pw.qdtype is not None:
+        children.append(pw.scales)
+    return tuple(children), aux
 
 
 def _pw_flatten_with_keys(pw: PackedWeight):
@@ -463,15 +497,20 @@ def _pw_flatten_with_keys(pw: PackedWeight):
     if pw.layout == LAYOUT_BLOCK:
         keyed.append((jax.tree_util.GetAttrKey("active_groups"),
                       pw.active_groups))
-    return tuple(keyed), (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom)
+    if pw.qdtype is not None:
+        keyed.append((jax.tree_util.GetAttrKey("scales"), pw.scales))
+    return tuple(keyed), (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom,
+                          pw.qdtype)
 
 
 def _pw_unflatten(aux, children) -> PackedWeight:
     # Raw rebuild, no __init__ validation: tree transforms routinely carry
     # non-array leaves (None results, PartitionSpecs, sentinel objects) and
     # the aux was validated when the weight was packed.
-    cfg, dense_shape, layout, block_geom = aux
+    cfg, dense_shape, layout, block_geom, qdtype = aux
     pw = object.__new__(PackedWeight)
+    children = list(children)
+    scales = children.pop() if qdtype is not None else None
     if layout == LAYOUT_BLOCK:
         values, indices, active_groups = children
     else:
@@ -483,6 +522,8 @@ def _pw_unflatten(aux, children) -> PackedWeight:
     pw.layout = layout
     pw.active_groups = active_groups
     pw.block_geom = block_geom
+    pw.scales = scales
+    pw.qdtype = qdtype
     return pw
 
 

@@ -53,10 +53,15 @@ def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
     The layout tag picks the op: ``xwT`` weights run the row-packed DeMM
     matmul, ``block`` weights (two-level ahead-of-time packing from
     ``core.sparsity.pack_block``) run the scalar-prefetch block-spmm family.
-    The sparsity config (including k-reconfiguration), dense shape, and
-    block geometry come from the type's static aux data, so call sites never
-    re-derive them from loose dict keys.  ``pw`` must be unstacked — scan
-    bodies slice the layer axis off stacked weights before applying.
+    A quantized node (``pw.qdtype`` set, see ``repro.quant``) routes to the
+    ``xwT_q8`` / ``xwT_block_q8`` twins, whose kernels dequantize the int8
+    values in-register (w8a16); the quantized xwT path is forward-only
+    (serving) — fine-tune on the float packed form and re-quantize.
+    The sparsity config (including k-reconfiguration), dense shape, block
+    geometry, and qdtype come from the type's static aux data, so call
+    sites never re-derive them from loose dict keys.  ``pw`` must be
+    unstacked — scan bodies slice the layer axis off stacked weights before
+    applying.
     """
     if pw.layout == LAYOUT_BLOCK:
         if getattr(pw.values, "ndim", 4) != 4:
@@ -72,6 +77,9 @@ def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
         raise ValueError(
             f"demm_matmul_packed needs an unstacked (O, G, Ne) weight, got "
             f"values of shape {pw.values.shape}; slice the stack axis first")
+    if pw.qdtype is not None:
+        return demm_matmul_xwT_q8(x, pw.values, pw.indices, pw.scales,
+                                  pw.cfg, pw.dense_shape, backend)
     return demm_matmul_xwT(x, pw.values, pw.indices, pw.cfg, pw.dense_shape,
                            backend)
 
@@ -84,8 +92,9 @@ def demm_matmul_block(x: jax.Array, pw: PackedWeight,
     the serving matmul is evaluated as ``(W_block @ x^T)^T`` with the
     active-group address stream gating which xᵀ blocks are touched at all.
     Dispatch routes through the ``xwT_block`` op of the ``repro.tune``
-    registry; ``backend="auto"`` resolves per (shape, dtype, pattern, block
-    geometry, platform) through the tuning cache.
+    registry (``xwT_block_q8`` for a quantized node); ``backend="auto"``
+    resolves per (shape, dtype, pattern, block geometry, platform) through
+    the tuning cache.
     """
     from repro import tune
 
@@ -93,6 +102,11 @@ def demm_matmul_block(x: jax.Array, pw: PackedWeight,
     if backend == "auto":
         choice = tune.resolve_xwT_block(x.shape, pw, x.dtype)
         backend, params = choice.backend, choice.params
+    if pw.qdtype is not None:
+        variant = tune.get_variant("xwT_block_q8", backend)
+        return variant.call(x, pw.values, pw.indices, pw.active_groups,
+                            pw.scales, pw.cfg, tuple(pw.dense_shape),
+                            **params)
     variant = tune.get_variant("xwT_block", backend)
     return variant.call(x, pw.values, pw.indices, pw.active_groups, pw.cfg,
                         tuple(pw.dense_shape), **params)
@@ -139,6 +153,25 @@ def _xwT_bwd(cfg, w_shape, backend, res, dy):
 
 
 demm_matmul_xwT.defvjp(_xwT_fwd, _xwT_bwd)
+
+
+def demm_matmul_xwT_q8(x, values, indices, scales, cfg: SparsityConfig,
+                       w_shape, backend: str = "reference"):
+    """y = x @ W_q8ᵀ; int8 values (O, G, Ne) + per-output-row scales (O,).
+
+    Serving-only (no custom_vjp): the int8 values are not a differentiable
+    parameterization — train/fine-tune on the float packed form and
+    re-quantize with ``repro.quant.quantize_packed``.
+    """
+    from repro import tune
+
+    params = {}
+    if backend == "auto":
+        choice = tune.resolve_xwT_q8(x.shape, w_shape, cfg, x.dtype)
+        backend, params = choice.backend, choice.params
+    variant = tune.get_variant("xwT_q8", backend)
+    return variant.call(x, values, indices, scales, cfg, tuple(w_shape),
+                        **params)
 
 
 def demm_spmm(values, indices, b, cfg: SparsityConfig, a_shape,

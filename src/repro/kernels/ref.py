@@ -38,3 +38,22 @@ def block_spmm_ref(active_groups, values, indices, b, cfg: SparsityConfig,
     a = unpack_block(active_groups, values, indices, cfg, (r, k))
     return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                    preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized oracles (repro.quant): dequantize, then the float path.
+# ---------------------------------------------------------------------------
+
+def xwT_q8_ref(x: jax.Array, values: jax.Array, indices: jax.Array,
+               scales: jax.Array, cfg: SparsityConfig, w_shape) -> jax.Array:
+    """y = x @ W_q8ᵀ with per-output-row scales (O,): dequant + float ref."""
+    vals = values.astype(jnp.float32) * scales[:, None, None]
+    return xwT_ref(x, vals, indices, cfg, w_shape)
+
+
+def block_spmm_q8_ref(active_groups, values, indices, scales, b,
+                      cfg: SparsityConfig, r: int) -> jax.Array:
+    """Two-level block oracle with per-(row-block, group, row) scales
+    (RB, A_max, block_r): dequant + float ref."""
+    vals = values.astype(jnp.float32) * scales[..., None]
+    return block_spmm_ref(active_groups, vals, indices, b, cfg, r)

@@ -9,31 +9,21 @@ packed format: ``"xwT"`` (default, the row-packed serving stream) or
 ``"block"`` (the two-level block format of ``core.sparsity.pack_block`` —
 per row-block active-group lists gating the kernel's B DMAs); stacked block
 weights share one ``a_max`` across the stack (``pack_block_stacked``) so
-scan slicing works unchanged.  ``pack_tree_shapes`` is the eval_shape twin
-used by the dry-run; for shape-exact block dry-runs pass ``a_max``
-explicitly (under tracing the active-group count cannot be read from the
-data and defaults to all groups)."""
+scan slicing works unchanged.  ``quantize="int8"`` additionally quantizes
+every packed node (``repro.quant``): int8 values + traced scales + static
+``qdtype`` aux, served by the w8a16 kernels.  ``pack_tree_shapes`` is the
+eval_shape twin used by the dry-run; for shape-exact block dry-runs pass
+``a_max`` explicitly (under tracing the active-group count cannot be read
+from the data and defaults to all groups)."""
 
 from __future__ import annotations
 
-import warnings
+from typing import Optional
 
 import jax
 
 from repro.core import sparse_linear as sl
 from repro.core.sparsity import LAYOUT_BLOCK, LAYOUT_XWT, PackedWeight
-
-
-def _is_sparse_linear(node) -> bool:
-    """Deprecated: the pre-PackedWeight key-sniffing predicate.  Kept for one
-    release so external tree-walkers keep working; new code should test
-    ``sl.node_sparsity(node) is not None``."""
-    warnings.warn(
-        "_is_sparse_linear is deprecated; use "
-        "repro.core.sparse_linear.node_sparsity(node) is not None",
-        DeprecationWarning, stacklevel=2)
-    return isinstance(node, dict) and "w" in node and (
-        "sparsity" in node or "_sparse_m" in node)
 
 
 def _pack_sparse_linear(node, cfg, layout=LAYOUT_XWT, *, block_r=None,
@@ -58,23 +48,45 @@ def _pack_sparse_linear(node, cfg, layout=LAYOUT_XWT, *, block_r=None,
         cfg=cfg, dense_shape=(o, k), layout=pw.layout)
 
 
-def pack_tree(params, layout: str = LAYOUT_XWT, *, block_r=None, a_max=None):
+def pack_tree(params, layout: str = LAYOUT_XWT, *, block_r=None, a_max=None,
+              quantize: Optional[str] = None, observer=None):
+    """Convert every sparse linear in ``params`` to a PackedWeight.
+
+    ``quantize`` (e.g. ``"int8"``) quantizes each packed node on the fly;
+    ``observer`` is the optional calibration hook forwarded to
+    ``repro.quant.quantize_packed`` (e.g. ``quant.activation_calibration``).
+    Already-packed nodes pass through (and are quantized if requested).
+    """
+    def q(pw: PackedWeight) -> PackedWeight:
+        if quantize is None or pw.qdtype is not None:
+            return pw
+        from repro.quant import quantize_packed
+        return quantize_packed(pw, quantize, observer=observer)
+
     if isinstance(params, PackedWeight):
-        return params
+        return q(params)
     if isinstance(params, dict):
+        if "values" in params and "shape" in params:
+            raise ValueError(
+                "legacy packed {values, indices, shape} dicts are no longer "
+                "supported; re-pack the original weights with pack_tree to "
+                "get PackedWeight nodes")
         if "w" in params:
             cfg = sl.node_sparsity(params)
             if cfg is not None:
-                return _pack_sparse_linear(params, cfg, layout,
-                                           block_r=block_r, a_max=a_max)
-        return {k: pack_tree(v, layout, block_r=block_r, a_max=a_max)
+                return q(_pack_sparse_linear(params, cfg, layout,
+                                             block_r=block_r, a_max=a_max))
+        return {k: pack_tree(v, layout, block_r=block_r, a_max=a_max,
+                             quantize=quantize, observer=observer)
                 for k, v in params.items()}
     return params
 
 
 def pack_tree_shapes(model, param_shapes, layout: str = LAYOUT_XWT, *,
-                     block_r=None, a_max=None):
+                     block_r=None, a_max=None,
+                     quantize: Optional[str] = None):
     """ShapeDtypeStruct tree of the packed params (no allocation)."""
     return jax.eval_shape(
-        lambda p: pack_tree(p, layout, block_r=block_r, a_max=a_max),
+        lambda p: pack_tree(p, layout, block_r=block_r, a_max=a_max,
+                            quantize=quantize),
         param_shapes)

@@ -1,13 +1,16 @@
 """Batched serving driver (reduced configs on CPU; production via dry-run).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3_1b --requests 8 \
-        --packed --backend auto --autotune
+        --packed --layout block --quantize int8 --backend auto --autotune
 
 ``--packed`` converts every sparse weight to the paper's packed DeMM form
 before serving: the decode matmuls then stream only packed bytes.
-``--backend auto`` resolves every packed matmul through the ``repro.tune``
-registry + cache; ``--autotune`` pre-measures tile configs for the decode
-shapes first (results persist in the tuning cache for later runs).
+``--quantize int8`` additionally quantizes the packed values to symmetric
+int8 (``repro.quant``) — the decode matmuls then stream int8 bytes and
+dequantize in-register (w8a16 kernels).  ``--backend auto`` resolves every
+packed matmul through the ``repro.tune`` registry + cache; ``--autotune``
+pre-measures tile configs for the decode shapes first (results persist in
+the tuning cache for later runs).
 """
 
 from __future__ import annotations
@@ -37,13 +40,18 @@ def main():
                     help="packed-weight layout for --packed: the row-packed "
                          "xwT stream or the two-level block format "
                          "(pack_block; dispatches the block-spmm kernel)")
+    ap.add_argument("--quantize", choices=("int8",), default=None,
+                    help="quantize the packed values (repro.quant): int8 "
+                         "symmetric with traced scales, served by the "
+                         "w8a16 xwT_q8/xwT_block_q8 kernels")
     # valid backends come from the registry, so variants added via
     # repro.tune.register_variant are immediately servable
     from repro import tune
     ap.add_argument("--backend", default="reference",
                     choices=tuple(sorted(
-                        {v.name for v in tune.variants_for("xwT")}
-                        | {v.name for v in tune.variants_for("xwT_block")}))
+                        {v.name for op in
+                         ("xwT", "xwT_block", "xwT_q8", "xwT_block_q8")
+                         for v in tune.variants_for(op)}))
                     + ("auto",))
     ap.add_argument("--autotune", action="store_true",
                     help="pre-measure tile configs for the packed decode "
@@ -51,22 +59,30 @@ def main():
     args = ap.parse_args()
     if args.autotune:
         args.backend = "auto"
+    if args.quantize and not args.packed:
+        ap.error("--quantize applies to the packed serving form; add "
+                 "--packed")
     if args.packed and args.backend != "auto":
         # fail invalid layout/backend pairs here, not deep inside the first
         # jitted decode step
         op = "xwT_block" if args.layout == "block" else "xwT"
+        if args.quantize:
+            op += "_q8"
         valid = {v.name for v in tune.variants_for(op)}
         if args.backend not in valid:
             ap.error(f"--backend {args.backend} is not a registered {op} "
-                     f"variant for --layout {args.layout} "
-                     f"(valid: {sorted(valid)} or 'auto')")
+                     f"variant for --layout {args.layout}"
+                     + (f" --quantize {args.quantize}" if args.quantize
+                        else "")
+                     + f" (valid: {sorted(valid)} or 'auto')")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mode = "masked"
     if args.packed:
-        params = pack_tree(params, layout=args.layout)
+        params = pack_tree(params, layout=args.layout,
+                           quantize=args.quantize)
         mode = "packed"
     policy = ExecPolicy(mode=mode, backend=args.backend)
     engine = ServeEngine(model, params,
@@ -86,9 +102,10 @@ def main():
     ticks = engine.run_until_drained()
     dt = time.time() - t0
     total_tokens = sum(len(r.output) for r in engine.completed)
+    tag = mode if not args.quantize else f"{mode}+{args.quantize}"
     print(f"served {len(engine.completed)} requests, {total_tokens} tokens, "
           f"{ticks} engine ticks in {dt:.1f}s "
-          f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={mode})")
+          f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={tag})")
     for r in engine.completed[:3]:
         print(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
               f"-> {r.output[:8]}")

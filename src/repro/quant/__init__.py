@@ -1,0 +1,41 @@
+"""``repro.quant`` — int8 symmetric quantization of packed sparse weights.
+
+DeMM targets pruned models on mobile-class accelerators, where structured
+sparsity is almost always deployed together with low-precision arithmetic
+(S2TA shows the two wins are multiplicative).  This package makes
+quantization a first-class property of the packed format: a quantized
+:class:`~repro.core.sparsity.PackedWeight` carries int8 ``values``, a traced
+``scales`` child, and a static ``qdtype`` aux tag, and every consumer of the
+float path — kernels (``xwT_q8`` / ``xwT_block_q8`` registry ops), the
+autotuner, structural sharding, checkpointing, and the serving CLI — knows
+the quantized form.
+
+Entry points:
+
+* :func:`quantize_packed` / :func:`quantize_tree` — quantize one packed
+  weight / every packed node of a params pytree (data-free amax calibration
+  by default).
+* :func:`activation_calibration` — an optional observer built from sample
+  activations that picks per-row clip ratios minimizing a diagonal
+  approximation of the output error.
+* :func:`dequantize_packed` — back to the float packed form (testing,
+  fine-tuning export).
+"""
+
+from __future__ import annotations
+
+from repro.quant.quantize import (
+    CLIP_GRID,
+    QMAX,
+    activation_calibration,
+    amax_scales,
+    dequantize_packed,
+    quantize_packed,
+    quantize_tree,
+)
+from repro.core.sparsity import QDTYPE_INT8, QDTYPES
+
+__all__ = [
+    "CLIP_GRID", "QDTYPES", "QDTYPE_INT8", "QMAX", "activation_calibration",
+    "amax_scales", "dequantize_packed", "quantize_packed", "quantize_tree",
+]

@@ -1,0 +1,169 @@
+"""Symmetric int8 quantization of packed relaxed-N:M sparse weights.
+
+Granularity follows the packed layout (DESIGN.md §10):
+
+* ``xwT``    — one scale per output row: ``scales (*stack, O)``.  The row is
+  the reduction unit of the serving matmul ``y = x @ Wᵀ``, so a per-row
+  scale folds into the kernel as a single multiply on the (rows, M) scatter
+  matrix.
+* ``block``  — one scale per (row-block, active-group slot, row):
+  ``scales (*stack, RB, A_max, block_r)``.  Per-group scales are finer than
+  per-row (each group's Ne values share one exponent) and line up with the
+  block kernel's (block_r, Ne) value tiles.
+
+Quantization is symmetric round-to-nearest: ``q = clip(round(v / s), ±127)``
+with ``s = amax / 127`` (data-free) or an observer-provided scale.  Padded
+slots (value 0) quantize to 0 and keep contributing nothing; a genuine
+weight that rounds to 0 merely drops below the quantization floor.
+
+The optional activation-calibration hook searches a small clip grid per
+scale unit, weighting each packed slot's quantization error by the RMS of
+the calibration activations at the slot's *global* column (the diagonal /
+OBS approximation of the output MSE).  It never needs labels or a backward
+pass — a handful of activation rows from the serving distribution is
+enough.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import (
+    LAYOUT_BLOCK,
+    QDTYPE_INT8,
+    QDTYPES,
+    PackedWeight,
+)
+
+QMAX = 127.0
+# Clip ratios searched by the activation observer (1.0 = plain amax).
+CLIP_GRID = (1.0, 0.95, 0.9, 0.85, 0.8)
+
+_EPS = 1e-12
+
+
+def _reduce_axes(pw: PackedWeight):
+    """Packed axes reduced away by one scale unit."""
+    return (-1,) if pw.layout == LAYOUT_BLOCK else (-2, -1)
+
+
+def amax_scales(pw: PackedWeight) -> jax.Array:
+    """Data-free calibration: ``amax / 127`` per scale unit (float32).
+
+    Zero rows (fully padded slots) get a scale of ``1/127`` so the divide
+    stays finite; their values are all 0 and quantize to 0 regardless.
+    """
+    amax = jnp.max(jnp.abs(pw.values.astype(jnp.float32)),
+                   axis=_reduce_axes(pw))
+    return jnp.where(amax > _EPS, amax, 1.0) / QMAX
+
+
+def _expand(pw: PackedWeight, scales: jax.Array) -> jax.Array:
+    """Broadcast per-unit scales over the packed value axes."""
+    if pw.layout == LAYOUT_BLOCK:
+        return scales[..., None]
+    return scales[..., None, None]
+
+
+def _quantize_values(pw: PackedWeight, scales: jax.Array) -> jax.Array:
+    q = jnp.round(pw.values.astype(jnp.float32) / _expand(pw, scales))
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def quantize_packed(pw: PackedWeight, qdtype: str = QDTYPE_INT8, *,
+                    observer: Optional[Callable] = None) -> PackedWeight:
+    """Quantize a float packed weight to ``qdtype`` (int8 today).
+
+    ``observer`` maps the float ``PackedWeight`` to per-unit scales (see
+    :func:`activation_calibration`); by default the cheap data-free
+    :func:`amax_scales` pass is used.  Returns a new ``PackedWeight`` with
+    int8 ``values``, a float32 ``scales`` child, and the ``qdtype`` aux tag;
+    ``indices``/``active_groups`` and all static aux are shared unchanged.
+    """
+    if qdtype not in QDTYPES:
+        raise ValueError(f"unknown qdtype {qdtype!r}; expected {QDTYPES}")
+    if pw.qdtype is not None:
+        raise ValueError(f"weight is already quantized ({pw.qdtype!r}); "
+                         "dequantize_packed first to re-calibrate")
+    scales = (observer(pw) if observer is not None
+              else amax_scales(pw)).astype(jnp.float32)
+    return pw.replace(values=_quantize_values(pw, scales), scales=scales,
+                      qdtype=qdtype)
+
+
+def dequantize_packed(pw: PackedWeight) -> PackedWeight:
+    """Back to the float packed form (float32 values, no scales child)."""
+    if pw.qdtype is None:
+        return pw
+    return pw.replace(values=pw.dequantized_values(), scales=None,
+                      qdtype=None)
+
+
+def quantize_tree(params, qdtype: str = QDTYPE_INT8, *,
+                  observer: Optional[Callable] = None):
+    """Quantize every :class:`PackedWeight` node of a params pytree
+    (as produced by ``launch.pack_tree``); everything else passes through.
+    Already-quantized nodes are left untouched."""
+    if isinstance(params, PackedWeight):
+        if params.qdtype is not None:
+            return params
+        return quantize_packed(params, qdtype, observer=observer)
+    if isinstance(params, dict):
+        return {k: quantize_tree(v, qdtype, observer=observer)
+                for k, v in params.items()}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Activation calibration
+# ---------------------------------------------------------------------------
+
+def _slot_columns(pw: PackedWeight) -> jax.Array:
+    """Global contraction-dim column of every packed slot (same shape as
+    ``indices``): ``group_id * M + local_index``."""
+    m = pw.cfg.m
+    if pw.layout == LAYOUT_BLOCK:
+        # active_groups (*stack, RB, A_max) carries the group ids.
+        return (pw.active_groups[..., None, None] * m
+                + pw.indices).astype(jnp.int32)
+    g = pw.groups
+    gids = jnp.arange(g, dtype=jnp.int32)[:, None]        # (G, 1)
+    return (gids * m + pw.indices).astype(jnp.int32)
+
+
+def activation_calibration(x: jax.Array,
+                           grid: Sequence[float] = CLIP_GRID) -> Callable:
+    """Observer factory: pick per-unit clip ratios from sample activations.
+
+    ``x`` is a small ``(B, K)`` batch drawn from the serving distribution.
+    For every scale unit the observer evaluates each clip ratio ``c`` in
+    ``grid`` on the weighted quantization error
+
+        err(c) = Σ_slots ( (deq_c(v) - v) · act_rms[column(slot)] )²
+
+    — the diagonal approximation of the output MSE ``‖x (W - Ŵ)ᵀ‖²`` — and
+    keeps the best ``c * amax_scale``.  Clipping below amax trades a few
+    saturated outliers for a finer grid on the bulk, which wins exactly when
+    the activation mass says the bulk matters more.
+    """
+    act_sq = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=0)   # (K,)
+
+    def observer(pw: PackedWeight) -> jax.Array:
+        base = amax_scales(pw)
+        axes = _reduce_axes(pw)
+        v = pw.values.astype(jnp.float32)
+        w = act_sq[_slot_columns(pw)]                  # per-slot weight
+        errs = []
+        for c in grid:
+            s = _expand(pw, base * c)
+            deq = jnp.clip(jnp.round(v / s), -QMAX, QMAX) * s
+            errs.append(jnp.sum(jnp.square(deq - v) * w, axis=axes))
+        errs = jnp.stack(errs)                         # (|grid|, *units)
+        best = jnp.argmin(errs, axis=0)
+        ratios = jnp.asarray(grid, jnp.float32)[best]
+        return base * ratios
+
+    return observer

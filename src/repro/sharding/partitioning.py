@@ -15,7 +15,6 @@ the largest replicated dimension over 'data' (opt_state_specs).
 from __future__ import annotations
 
 import re
-import warnings
 from typing import Optional
 
 import jax
@@ -146,13 +145,27 @@ def _block_packed_specs(kind: str, extra: int):
 
 def packed_weight_specs(pw: PackedWeight, kind: str) -> PackedWeight:
     """Structural PartitionSpecs for a PackedWeight node, returned in the
-    same PackedWeight container so spec/sharding trees mirror the params."""
+    same PackedWeight container so spec/sharding trees mirror the params.
+
+    Quantized nodes (``repro.quant``) shard the ``scales`` child alongside
+    ``values``: the scale axes are a prefix of the value axes (per output
+    row for xwT, per row-block × group × row for block), so column-parallel
+    shards the same leading output axis and row-parallel leaves scales
+    replicated (per-row xwT scales have no group axis to split)."""
     extra = len(pw.stack_dims)
     if pw.layout == LAYOUT_BLOCK:
         spec, ag_spec = _block_packed_specs(kind, extra)
-        return pw.replace(values=spec, indices=spec, active_groups=ag_spec)
+        repl = {"values": spec, "indices": spec, "active_groups": ag_spec}
+        if pw.qdtype is not None:
+            core = (["model", None, None] if kind == "col" else [None] * 3)
+            repl["scales"] = P(*([None] * extra + core))
+        return pw.replace(**repl)
     spec = _packed_spec(kind, extra)
-    return pw.replace(values=spec, indices=spec)
+    repl = {"values": spec, "indices": spec}
+    if pw.qdtype is not None:
+        repl["scales"] = P(*([None] * extra
+                             + (["model"] if kind == "col" else [None])))
+    return pw.replace(**repl)
 
 
 def _is_legacy_packed(node) -> bool:
@@ -178,16 +191,10 @@ def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
             kind = linear_kind(p, attn_kv_replicated=attn_kv_replicated)
             return packed_weight_specs(leaf, kind)
         if _is_legacy_packed(leaf):
-            # deprecation-boundary: old {values, indices, shape, _sparse_*}
-            # dicts still shard like their PackedWeight equivalent
-            warnings.warn(
-                "sharding a legacy packed dict; convert with "
-                "launch.pack_tree to get PackedWeight nodes",
-                DeprecationWarning, stacklevel=2)
-            kind = linear_kind(p, attn_kv_replicated=attn_kv_replicated)
-            spec = _packed_spec(kind,
-                                getattr(leaf["values"], "ndim", 3) - 3)
-            return dict(leaf, values=spec, indices=spec)
+            raise ValueError(
+                f"legacy packed {{values, indices, shape}} dict at {p!r} is "
+                "no longer supported; pack with launch.pack_tree to get "
+                "PackedWeight nodes")
         if not hasattr(leaf, "ndim"):
             return P()  # Static metadata
         nd = leaf.ndim

@@ -14,13 +14,15 @@ shard.  ``save_async`` stages device-to-host transfers immediately and
 writes on a background thread (training continues).
 
 Typed nodes: :class:`~repro.core.sparsity.PackedWeight` nodes (values /
-indices — plus active_groups for the block layout — leaves with static
-``{cfg, dense_shape, layout, block_geom}`` aux) and
+indices — plus active_groups for the block layout and scales for quantized
+weights — leaves with static ``{cfg, dense_shape, layout, block_geom,
+qdtype}`` aux) and
 :class:`Static` metadata are recorded in the manifest's ``nodes`` table, and
 restore patches the manifest's aux back over the template — so a packed
 model round-trips save → elastic-restore with its full
-:class:`SparsityConfig` (including k-reconfiguration) even if the restoring
-process rebuilt its template with different static metadata.
+:class:`SparsityConfig` (including k-reconfiguration) and quantization tag
+even if the restoring process rebuilt its template with different static
+metadata.
 """
 
 from __future__ import annotations
@@ -84,6 +86,8 @@ def _node_entries(tree, prefix=""):
                  "layout": tree.layout}
         if tree.block_geom is not None:
             entry["block_geom"] = list(tree.block_geom)
+        if tree.qdtype is not None:
+            entry["qdtype"] = tree.qdtype
         out.append(entry)
     elif isinstance(tree, Static):
         out.append({"path": prefix, "kind": "static",
@@ -105,11 +109,14 @@ def _patch_nodes(tree, by_path, prefix=""):
         if e is not None and e["kind"] == "packed_weight":
             cfg = SparsityConfig(**e["cfg"])
             geom = e.get("block_geom")
+            qdtype = e.get("qdtype")   # absent in pre-quant manifests
             return PackedWeight(tree.values, tree.indices, cfg=cfg,
                                 dense_shape=tuple(e["dense_shape"]),
                                 layout=e["layout"],
                                 active_groups=tree.active_groups,
-                                block_geom=tuple(geom) if geom else None)
+                                block_geom=tuple(geom) if geom else None,
+                                scales=tree.scales if qdtype else None,
+                                qdtype=qdtype)
         return tree
     if isinstance(tree, Static):
         e = by_path.get(prefix)

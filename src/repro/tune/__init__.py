@@ -28,6 +28,7 @@ from repro.tune.autotune import (
     autotune_spmm,
     autotune_xwT,
     autotune_xwT_block,
+    autotune_xwT_q8,
     enumerate_candidates,
     estimate_cycles,
     measure,
@@ -55,11 +56,12 @@ from repro.tune.registry import (
 __all__ = [
     "DEFAULT_VMEM_BUDGET", "KernelVariant", "Problem", "TuneCache",
     "TuneResult", "TunedConfig", "autotune_spmm", "autotune_xwT",
-    "autotune_xwT_block", "backend_names", "current_platform",
-    "default_cache", "enumerate_candidates", "estimate_cycles",
-    "get_variant", "heuristic_default", "measure", "problem_key",
-    "prune_candidates", "register_variant", "resolve_spmm", "resolve_xwT",
-    "resolve_xwT_block", "set_default_cache", "variants_for", "vmem_bytes",
+    "autotune_xwT_block", "autotune_xwT_q8", "backend_names",
+    "current_platform", "default_cache", "enumerate_candidates",
+    "estimate_cycles", "get_variant", "heuristic_default", "measure",
+    "problem_key", "prune_candidates", "register_variant", "resolve_spmm",
+    "resolve_xwT", "resolve_xwT_block", "resolve_xwT_q8",
+    "set_default_cache", "variants_for", "vmem_bytes",
 ]
 
 
@@ -70,6 +72,15 @@ def resolve_xwT(x_shape, w_shape, cfg: SparsityConfig, dtype) -> TunedConfig:
     from tracers — only static metadata is consulted.
     """
     p = Problem.for_xwT(x_shape, w_shape, cfg, dtype)
+    return default_cache().resolve(p)
+
+
+def resolve_xwT_q8(x_shape, w_shape, cfg: SparsityConfig,
+                   dtype) -> TunedConfig:
+    """Static (backend, params) choice for ``backend="auto"`` dispatch of an
+    int8-quantized xwT weight — its own ``xwT_q8`` cache key, so float and
+    quantized tunings coexist.  Never measures."""
+    p = Problem.for_xwT(x_shape, w_shape, cfg, dtype, quantized=True)
     return default_cache().resolve(p)
 
 
@@ -92,14 +103,14 @@ def autotune_packed_tree(params, batch: int, dtype=None, *,
     """Pre-tune every distinct packed-weight matmul shape in a param pytree.
 
     Walks ``params`` for :class:`~repro.core.sparsity.PackedWeight` nodes
-    (as produced by ``launch.pack_tree``) and runs :func:`autotune_xwT`
-    (or :func:`autotune_xwT_block` for block-layout nodes) once per distinct
-    (O, K, pattern[, block geometry]) — all read from the type's static aux
-    data, k-reconfiguration included — with a dummy activation batch of
-    ``batch`` rows, so a subsequent jit trace with ``backend="auto"``
-    resolves every layer from measured entries instead of heuristics.
-    Returns {problem_key: TuneResult}.  Legacy packed dicts are converted
-    through the deprecation shim.
+    (as produced by ``launch.pack_tree``) and runs :func:`autotune_xwT` /
+    :func:`autotune_xwT_q8` (or :func:`autotune_xwT_block`, which covers
+    both float and quantized block nodes) once per distinct
+    (O, K, pattern[, block geometry], qdtype) — all read from the type's
+    static aux data, k-reconfiguration included — with a dummy activation
+    batch of ``batch`` rows, so a subsequent jit trace with
+    ``backend="auto"`` resolves every layer from measured entries instead
+    of heuristics.  Returns {problem_key: TuneResult}.
     """
     import jax.numpy as jnp
     import numpy as np
@@ -115,9 +126,11 @@ def autotune_packed_tree(params, batch: int, dtype=None, *,
             stack = pw.stack_dims
             if stack:   # layer-stacked: tune one slice (scan applies 2-D)
                 first = (0,) * len(stack)
-                pw = pw.replace(values=pw.values[first],
-                                indices=pw.indices[first],
-                                active_groups=pw.active_groups[first])
+                pw = pw.replace(
+                    values=pw.values[first], indices=pw.indices[first],
+                    active_groups=pw.active_groups[first],
+                    scales=(pw.scales[first] if pw.scales is not None
+                            else None))
             p = Problem.for_xwT_block((batch, k), pw, dtype)
             key = problem_key(p)
             if key in seen:
@@ -126,34 +139,38 @@ def autotune_packed_tree(params, batch: int, dtype=None, *,
                 np.random.default_rng(0).standard_normal((batch, k)), dtype)
             seen[key] = autotune_xwT_block(x, pw, persist=persist, **tune_kw)
             return
-        vals, idxs = pw.values, pw.indices
+        quant = pw.qdtype is not None
+        vals, idxs, scls = pw.values, pw.indices, pw.scales
         if vals.ndim > 3:   # layer-stacked: tune one slice
             vals = vals.reshape(-1, *vals.shape[-2:])[:o]
             idxs = idxs.reshape(-1, *idxs.shape[-2:])[:o]
-        p = Problem.for_xwT((batch, k), (o, k), pw.cfg, dtype)
+            if quant:
+                scls = scls.reshape(-1)[:o]
+        p = Problem.for_xwT((batch, k), (o, k), pw.cfg, dtype,
+                            quantized=quant)
         key = problem_key(p)
         if key in seen:
             return
         x = jnp.asarray(
             np.random.default_rng(0).standard_normal((batch, k)), dtype)
-        seen[key] = autotune_xwT(x, vals, idxs, pw.cfg, (o, k),
-                                 persist=persist, **tune_kw)
+        if quant:
+            seen[key] = autotune_xwT_q8(x, vals, idxs, scls, pw.cfg, (o, k),
+                                        persist=persist, **tune_kw)
+        else:
+            seen[key] = autotune_xwT(x, vals, idxs, pw.cfg, (o, k),
+                                     persist=persist, **tune_kw)
 
     def visit(node):
         if isinstance(node, PackedWeight):
             tune_one(node)
         elif isinstance(node, dict):
             if "values" in node and "shape" in node:
-                import warnings
-
-                warnings.warn(
-                    "autotuning a legacy packed dict; convert with "
-                    "launch.pack_tree to get PackedWeight nodes",
-                    DeprecationWarning, stacklevel=3)
-                tune_one(PackedWeight.from_legacy(node))
-            else:
-                for v in node.values():
-                    visit(v)
+                raise ValueError(
+                    "legacy packed {values, indices, shape} dicts are no "
+                    "longer supported; pack with launch.pack_tree to get "
+                    "PackedWeight nodes")
+            for v in node.values():
+                visit(v)
 
     visit(params)
     return seen

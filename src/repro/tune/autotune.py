@@ -65,19 +65,27 @@ def vmem_bytes(problem: Problem, variant: str, params: Dict[str, int]) -> int:
     eb = _dtype_bytes(problem.dtype)
     n, m, _ = problem.sparsity
     ne = problem.cfg.n_effective
-    if problem.op == "xwT":
+    # quantized ops stream int8 values (+ a small fp32 scale per row) while
+    # activations/scatter stay in the activation dtype (w8a16)
+    quant = problem.op.endswith("_q8")
+    vb = 1 if quant else eb
+    if problem.op in ("xwT", "xwT_q8"):
         bb = params.get("block_b", 128)
         bo = params.get("block_o", 128)
         x_blk = bb * m * eb
-        w_blk = bo * ne * (eb + 4)          # values + int32 indices
+        w_blk = bo * ne * (vb + 4)          # values + int32 indices
+        if quant:
+            w_blk += bo * 4                 # per-row scales
         out_blk = bb * bo * 4               # fp32 accumulator
         scatter = bo * m * eb
-    elif problem.op == "xwT_block":
+    elif problem.op in ("xwT_block", "xwT_block_q8"):
         # block_r is pack-time geometry (Problem.block_r), not a tile param.
         br = problem.block_r or 128
         bc = params.get("cd_block", 256)
         x_blk = m * bc * eb                 # gathered B (= xᵀ) block
-        w_blk = br * ne * (eb + 4)
+        w_blk = br * ne * (vb + 4)
+        if quant:
+            w_blk += br * 4                 # per-(group, row) scales
         out_blk = br * bc * 4
         scatter = br * m * eb
     else:  # spmm / block_spmm
@@ -102,12 +110,12 @@ def _schedule_cycles(problem: Problem, block_cols: int) -> int:
 def estimate_cycles(problem: Problem, params: Dict[str, int]) -> int:
     """Rank a tile candidate with the perfmodel DeMM schedule + a per-grid-
     step dispatch overhead (favors fewer, fatter tiles at equal schedule)."""
-    if problem.op == "xwT":
+    if problem.op in ("xwT", "xwT_q8"):
         block_cols = params.get("block_b", 128)
         row_tiles = -(-problem.out // max(1, params.get("block_o", 128)))
         col_tiles = -(-problem.rows // max(1, block_cols))
         inner = problem.groups
-    elif problem.op == "xwT_block":
+    elif problem.op in ("xwT_block", "xwT_block_q8"):
         block_cols = params.get("cd_block", 256)
         row_tiles = -(-problem.out // max(1, problem.block_r or 128))
         col_tiles = -(-problem.rows // max(1, block_cols))
@@ -281,24 +289,54 @@ def autotune_xwT(x: jax.Array, values: jax.Array, indices: jax.Array,
                      cache=cache, persist=persist)
 
 
+def autotune_xwT_q8(x: jax.Array, values: jax.Array, indices: jax.Array,
+                    scales: jax.Array, cfg: SparsityConfig,
+                    w_shape: Tuple[int, int], *,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                    max_measure: int = 8, warmup: int = 2, iters: int = 5,
+                    cache: Optional[TuneCache] = None,
+                    persist: bool = True) -> TuneResult:
+    """Tune ``y = x @ W_q8ᵀ`` (int8 values + per-output-row scales); keyed
+    under the distinct ``xwT_q8`` op so float entries are never shadowed."""
+    from repro.tune.registry import get_variant
+
+    problem = Problem.for_xwT(x.shape, w_shape, cfg, x.dtype, quantized=True)
+
+    def make_thunk(c: Candidate):
+        v = get_variant("xwT_q8", c.backend)
+        jf = jax.jit(lambda xx, vv, ii, ss: v.call(
+            xx, vv, ii, ss, cfg, tuple(w_shape), **c.params))
+        return lambda: jf(x, values, indices, scales)
+
+    return _autotune(problem, make_thunk, vmem_budget=vmem_budget,
+                     max_measure=max_measure, warmup=warmup, iters=iters,
+                     cache=cache, persist=persist)
+
+
 def autotune_xwT_block(x: jax.Array, pw, *,
                        vmem_budget: int = DEFAULT_VMEM_BUDGET,
                        max_measure: int = 8, warmup: int = 2, iters: int = 5,
                        cache: Optional[TuneCache] = None,
                        persist: bool = True) -> TuneResult:
     """Tune ``y = x @ W^T`` for a block-layout
-    :class:`~repro.core.sparsity.PackedWeight` (geometry and pattern come
-    from the type's static aux data).  All ``xwT_block`` variants are
-    dispatchable, so the winner is directly selectable by ``backend="auto"``.
+    :class:`~repro.core.sparsity.PackedWeight` (geometry, pattern, and
+    quantization come from the type's static aux data — a quantized node
+    tunes the ``xwT_block_q8`` op).  All block variants are dispatchable, so
+    the winner is directly selectable by ``backend="auto"``.
     """
     from repro.tune.registry import get_variant
 
     problem = Problem.for_xwT_block(x.shape, pw, x.dtype)
     cfg, w_shape = pw.cfg, tuple(pw.dense_shape)
     values, indices, active_groups = pw.values, pw.indices, pw.active_groups
+    scales = pw.scales
 
     def make_thunk(c: Candidate):
-        v = get_variant("xwT_block", c.backend)
+        v = get_variant(problem.op, c.backend)
+        if scales is not None:
+            jf = jax.jit(lambda xx, vv, ii, ag, ss: v.call(
+                xx, vv, ii, ag, ss, cfg, w_shape, **c.params))
+            return lambda: jf(x, values, indices, active_groups, scales)
         jf = jax.jit(lambda xx, vv, ii, ag: v.call(
             xx, vv, ii, ag, cfg, w_shape, **c.params))
         return lambda: jf(x, values, indices, active_groups)

@@ -24,6 +24,12 @@ Ops and uniform signatures
                 of time by ``core.sparsity.pack_block`` (values/indices
                 (RB, A_max, block_r, Ne) + active_groups (RB, A_max)), fully
                 dispatchable under jit (no host repacking).
+``xwT_q8``    : call(x, values, indices, scales, cfg, w_shape, **params)
+                -> (B, O) — int8 values + per-output-row scales (O,)
+                (repro.quant); kernels dequantize in-register (w8a16).
+``xwT_block_q8``: call(x, values, indices, active_groups, scales, cfg,
+                w_shape, **params) -> (B, O) — the quantized two-level
+                layout, scales (RB, A_max, block_r).
 
 A :class:`Problem` is the static description of one matmul instance — shapes,
 dtype, sparsity pattern, platform — and is everything a variant needs to
@@ -39,7 +45,7 @@ import jax
 
 from repro.core.sparsity import SparsityConfig
 
-OPS = ("xwT", "spmm", "xwT_block")
+OPS = ("xwT", "spmm", "xwT_block", "xwT_q8", "xwT_block_q8")
 
 
 def current_platform() -> str:
@@ -89,8 +95,13 @@ class Problem:
 
     @classmethod
     def for_xwT(cls, x_shape, w_shape, cfg: SparsityConfig, dtype,
-                platform: Optional[str] = None) -> "Problem":
-        return cls(op="xwT", rows=int(x_shape[0]), out=int(w_shape[0]),
+                platform: Optional[str] = None, *,
+                quantized: bool = False) -> "Problem":
+        """``dtype`` is the *activation* dtype; quantized problems (int8
+        weights, w8a16 kernels) are a distinct op — and therefore distinct
+        tuning-cache keys — from their float twins."""
+        return cls(op="xwT_q8" if quantized else "xwT",
+                   rows=int(x_shape[0]), out=int(w_shape[0]),
                    k=int(x_shape[1]), dtype=jax.numpy.dtype(dtype).name,
                    sparsity=(cfg.n, cfg.m, cfg.k),
                    platform=platform or current_platform())
@@ -106,12 +117,14 @@ class Problem:
     @classmethod
     def for_xwT_block(cls, x_shape, pw, dtype,
                       platform: Optional[str] = None) -> "Problem":
-        """Problem for a block-layout PackedWeight serving matmul; geometry
-        and pattern are read from the type's static aux data."""
+        """Problem for a block-layout PackedWeight serving matmul; geometry,
+        pattern, and quantization are read from the type's static aux data
+        (a quantized node is the distinct ``xwT_block_q8`` op)."""
         o, k = pw.dense_shape
         block_r, a_max = pw.block_geom
         cfg = pw.cfg
-        return cls(op="xwT_block", rows=int(x_shape[0]), out=int(o),
+        op = "xwT_block_q8" if pw.qdtype is not None else "xwT_block"
+        return cls(op=op, rows=int(x_shape[0]), out=int(o),
                    k=int(k), dtype=jax.numpy.dtype(dtype).name,
                    sparsity=(cfg.n, cfg.m, cfg.k),
                    platform=platform or current_platform(),
@@ -365,6 +378,75 @@ def _register_builtin_variants():
                              or p.dense_flops <= _INTERPRET_FLOP_LIMIT),
         description="scalar-prefetch block-gather Pallas kernel over the "
                     "ahead-of-time two-level packing (interpret on CPU)"))
+
+    # ---- int8 quantized ops (repro.quant): w8a16 dequant-in-register ------
+    # Variant names mirror the float ops so heuristic_default's platform
+    # preferences ("pallas" / "block_spmm" on TPU) apply unchanged.
+    from repro.kernels.demm_q8 import (demm_block_spmm_q8_pallas,
+                                       demm_xwT_q8_pallas)
+
+    def xwT_q8_ref_call(x, values, indices, scales, cfg, w_shape, **_):
+        return kref.xwT_q8_ref(x, values, indices, scales, cfg, w_shape)
+
+    def xwT_q8_pallas_call(x, values, indices, scales, cfg, w_shape, *,
+                           interpret, block_b=128, block_o=128, **_):
+        return demm_xwT_q8_pallas(x, values, indices, scales, cfg,
+                                  block_b=block_b, block_o=block_o,
+                                  interpret=interpret)
+
+    register_variant(KernelVariant(
+        op="xwT_q8", name="reference", call=xwT_q8_ref_call,
+        param_space=lambda p: {}, default_params=lambda p: {},
+        supported=lambda p: True,
+        description="pure-jnp dequantize + decompress + matmul (XLA path)"))
+    register_variant(KernelVariant(
+        op="xwT_q8", name="pallas",
+        call=lambda *a, **kw: xwT_q8_pallas_call(*a, interpret=False, **kw),
+        param_space=xwT_tiles, default_params=xwT_defaults,
+        supported=lambda p: p.platform == "tpu",
+        description="fused Pallas TPU kernel, int8 weights dequantized "
+                    "in-register (w8a16)"))
+    register_variant(KernelVariant(
+        op="xwT_q8", name="pallas_interpret",
+        call=lambda *a, **kw: xwT_q8_pallas_call(*a, interpret=True, **kw),
+        param_space=xwT_tiles, default_params=xwT_defaults,
+        supported=lambda p: p.dense_flops <= _INTERPRET_FLOP_LIMIT,
+        description="int8 Pallas kernel in interpret mode (CPU checks)"))
+
+    def xwT_block_q8_ref_call(x, values, indices, active_groups, scales,
+                              cfg, w_shape, **_):
+        o, _k = w_shape
+        return kref.block_spmm_q8_ref(active_groups, values, indices,
+                                      scales, x.T, cfg, int(o)).T
+
+    def xwT_block_q8_pallas_call(x, values, indices, active_groups, scales,
+                                 cfg, w_shape, *, interpret, cd_block=256,
+                                 **_):
+        o, _k = w_shape
+        b = x.T                                   # (K, B): paper orientation
+        cd = b.shape[1]
+        cd_block = min(cd_block, cd)
+        if cd % cd_block:
+            cd_block = cd                         # ragged batch: one tile
+        return demm_block_spmm_q8_pallas(active_groups, values, indices,
+                                         scales, b, cfg, r=int(o),
+                                         cd_block=int(cd_block),
+                                         interpret=interpret).T
+
+    register_variant(KernelVariant(
+        op="xwT_block_q8", name="reference", call=xwT_block_q8_ref_call,
+        param_space=lambda p: {}, default_params=lambda p: {},
+        supported=lambda p: True,
+        description="pure-jnp dequantize + two-level scatter-add + matmul"))
+    register_variant(KernelVariant(
+        op="xwT_block_q8", name="block_spmm",
+        call=lambda *a, **kw: xwT_block_q8_pallas_call(
+            *a, interpret=current_platform() != "tpu", **kw),
+        param_space=xwT_block_tiles, default_params=xwT_block_defaults,
+        supported=lambda p: (p.platform == "tpu"
+                             or p.dense_flops <= _INTERPRET_FLOP_LIMIT),
+        description="scalar-prefetch block-gather Pallas kernel over the "
+                    "quantized two-level packing (w8a16; interpret on CPU)"))
 
 
 _register_builtin_variants()

@@ -237,67 +237,41 @@ def test_checkpoint_manifest_is_authoritative_for_sparsity():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims
+# Legacy dict conventions: shims dropped after one release; every consumer
+# now fails with a clear ValueError pointing at pack_tree / init_linear.
 # ---------------------------------------------------------------------------
 
-def test_legacy_packed_dict_shim_warns_and_works():
+def test_legacy_packed_dict_rejected_everywhere():
     params, pw = _pw()
     legacy = {"values": pw.values, "indices": pw.indices,
               "shape": Static(pw.dense_shape),
               "_sparse_m": Static(CFG.m), "_sparse_n": Static(CFG.n)}
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
-    with pytest.warns(DeprecationWarning):
-        y = apply_linear(legacy, x, mode="packed")
-    np.testing.assert_allclose(np.asarray(y),
-                               np.asarray(sl.apply(pw, x,
-                                                   ExecPolicy(mode="packed"))),
-                               rtol=1e-5, atol=1e-5)
-
-
-def test_legacy_bare_packed_dict_with_explicit_cfg():
-    """The oldest pack_params output ({values, indices, shape} with no
-    _sparse_* metadata) still works when the caller passes cfg, and a
-    layout-changing cfg is rejected with a clear error."""
-    params, pw = _pw()
-    legacy = {"values": pw.values, "indices": pw.indices,
-              "shape": Static(pw.dense_shape)}
-    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
-    with pytest.warns(DeprecationWarning):
-        y = sl.apply_packed(legacy, x, CFG)
-    np.testing.assert_allclose(
-        np.asarray(y),
-        np.asarray(sl.apply(pw, x, ExecPolicy(mode="packed"))),
-        rtol=1e-5, atol=1e-5)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="packed layout"):
-            sl.apply_packed(legacy, x, SparsityConfig(4, 16))
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="_sparse_n"):
-            sl.apply_packed(legacy, x)   # no cfg anywhere
-
-
-def test_param_specs_shards_legacy_packed_dicts():
+    with pytest.raises(ValueError, match="pack_tree"):
+        apply_linear(legacy, x, mode="packed")
+    with pytest.raises(ValueError, match="pack_tree"):
+        sl.apply_packed(legacy, x, CFG)
+    from repro.launch.pack_tree import pack_tree
+    with pytest.raises(ValueError, match="pack_tree"):
+        pack_tree({"mlp": {"gate": legacy}})
+    from repro import tune
+    with pytest.raises(ValueError, match="pack_tree"):
+        tune.autotune_packed_tree({"mlp": {"gate": legacy}}, 4)
     from repro.sharding import partitioning as part
-
-    _, pw = _pw()
-    legacy = {"values": pw.values, "indices": pw.indices,
-              "shape": Static(pw.dense_shape),
-              "_sparse_m": Static(CFG.m), "_sparse_n": Static(CFG.n)}
-    with pytest.warns(DeprecationWarning):
-        specs = part.param_specs({"mlp": {"gate": legacy}})
-    assert specs["mlp"]["gate"]["values"] == P("model", None, None)
+    with pytest.raises(ValueError, match="pack_tree"):
+        part.param_specs({"mlp": {"gate": legacy}})
 
 
-def test_legacy_masked_metadata_shim_warns():
+def test_legacy_masked_metadata_rejected():
     params, _ = _pw()
     legacy = {"w": params["w"], "_sparse_m": Static(CFG.m),
               "_sparse_n": Static(CFG.n)}
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
-    with pytest.warns(DeprecationWarning):
-        y = apply_linear(legacy, x)
-    np.testing.assert_allclose(np.asarray(y),
-                               np.asarray(sl.apply_masked(params, x, CFG)),
-                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="init_linear"):
+        apply_linear(legacy, x)
+    # non-dict / non-PackedWeight params keep a TypeError
+    with pytest.raises(TypeError, match="PackedWeight"):
+        sl.apply_packed(params["w"], x)
 
 
 # ---------------------------------------------------------------------------
