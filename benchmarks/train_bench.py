@@ -1,0 +1,172 @@
+"""Training-step benchmark: packed-vs-dense step time (``repro.sparsetrain``).
+
+Measures one reduced-config model under the training execution modes the
+subsystem adds, emitting ``BENCH_train.json`` (uploaded as a CI artifact by
+the ``train-smoke`` job):
+
+* ``dense``            — plain dense training step (the baseline).
+* ``masked_premask``   — straight-through N:M premasking (the pre-existing
+  sparse-training path).
+* ``sparsify``         — scheduled masks (``sparsetrain.masks``) applied in
+  the step; mask refresh cost is excluded (it amortizes over
+  ``update_every`` steps and is reported separately).
+* ``sparsify_qat``     — scheduled masks + int8 fake-quant (``ste.py``).
+* ``packed_finetune_xwT`` / ``packed_finetune_block`` — a value-only
+  fine-tuning step *directly on the packed form* (grad through
+  ``ExecPolicy(mode="packed")`` via the custom_vjps of
+  ``sparsetrain.vjp``), the sparse-fine-tune scenario the vjp coverage
+  unlocks.  Measured on a single representative layer matmul, not the full
+  model, since packed execution composes per-layer.
+
+CPU wall-times are indicative (the CI artifact tracks relative drift, not
+absolute TPU performance).
+
+    PYTHONPATH=src python benchmarks/train_bench.py [--quick] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import sparse_linear as sl
+from repro.core.sparse_linear import ExecPolicy
+from repro.core.sparsity import SparsityConfig, pack_block, random_sparse_dense
+from repro.data.pipeline import DataConfig, global_batch
+from repro.models.families import build_model
+from repro.optim import adamw
+from repro.sparsetrain import init_mask_state, parse_schedule
+from repro.train.train_loop import make_train_step
+
+DEFAULT_OUT = "BENCH_train.json"
+
+
+def _time(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3   # ms
+
+
+def bench_model_steps(arch: str, batch: int, seq: int, warmup: int,
+                      iters: int):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=100, warmup_steps=5)
+    opt = adamw.init(opt_cfg, params)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                          global_batch=batch)
+    b = global_batch(data_cfg, 0)
+
+    sched = parse_schedule("2:16", 100)
+    masks = init_mask_state(params, sched, 60)["masks"]   # final phase
+
+    cases = []
+
+    def add(name, step_fn, *extra):
+        fn = jax.jit(step_fn)
+        ms = _time(lambda: fn(params, opt, b, 0, *extra), warmup=warmup,
+                   iters=iters)
+        cases.append({"name": name, "step_ms": round(ms, 3)})
+        print(f"  {name:24s} {ms:9.2f} ms/step")
+
+    add("dense", make_train_step(model, opt_cfg,
+                                 policy=ExecPolicy(mode="dense")))
+    add("masked_premask", make_train_step(model, opt_cfg))
+    add("sparsify", make_train_step(model, opt_cfg), masks)
+    add("sparsify_qat",
+        make_train_step(model, opt_cfg, fake_quant="int8"), masks)
+
+    # mask-refresh cost (amortized over schedule.update_every steps)
+    from repro.sparsetrain.masks import build_masks
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(jax.tree.leaves(
+        build_masks(params, sched, len(sched.phases) - 1))[0])
+    refresh_ms = (time.perf_counter() - t0) * 1e3
+    print(f"  {'mask_refresh (1x)':24s} {refresh_ms:9.2f} ms "
+          f"(every {sched.update_every} steps)")
+    return cfg, cases, refresh_ms, sched.update_every
+
+
+def bench_packed_finetune(warmup: int, iters: int):
+    """Value-only fine-tuning grad step directly on the packed forms."""
+    cfg = SparsityConfig(8, 128)
+    rng = np.random.default_rng(0)
+    o, k, bsz = 256, 512, 64
+    w = jnp.asarray(random_sparse_dense(rng, o, k, cfg))
+    x = jnp.asarray(rng.standard_normal((bsz, k)), jnp.float32)
+    y_t = jnp.asarray(rng.standard_normal((bsz, o)), jnp.float32)
+    pol = ExecPolicy(mode="packed")
+    out = []
+    for layout, pw in (("xwT", sl.pack_params({"w": w}, cfg)),
+                       ("block", pack_block(w, cfg))):
+        @jax.jit
+        def step(values, pw=pw):
+            def loss(v):
+                y = sl.apply(pw.replace(values=v), x, pol)
+                return jnp.mean((y - y_t) ** 2)
+
+            g = jax.grad(loss)(values)
+            return values - 1e-3 * g
+
+        ms = _time(step, pw.values, warmup=warmup, iters=iters)
+        out.append({"name": f"packed_finetune_{layout}",
+                    "step_ms": round(ms, 3)})
+        print(f"  packed_finetune_{layout:18s} {ms:9.2f} ms/step "
+              f"({o}x{k}, batch {bsz})")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer iters, smaller batch")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    if args.quick:
+        args.batch, args.seq, args.warmup, args.iters = 2, 32, 1, 3
+
+    print(f"train-step benchmark: arch={args.arch} (reduced) "
+          f"batch={args.batch} seq={args.seq}")
+    cfg, cases, refresh_ms, update_every = bench_model_steps(
+        args.arch, args.batch, args.seq, args.warmup, args.iters)
+    cases += bench_packed_finetune(args.warmup, args.iters)
+
+    by_name = {c["name"]: c["step_ms"] for c in cases}
+    dense = by_name["dense"]
+    blob = {
+        "meta": {"arch": cfg.name, "reduced": True, "batch": args.batch,
+                 "seq": args.seq, "iters": args.iters,
+                 "platform": jax.default_backend(),
+                 "jax": jax.__version__,
+                 "mask_refresh_ms": round(refresh_ms, 3),
+                 "mask_update_every": update_every},
+        "cases": cases,
+        "ratios_vs_dense": {c["name"]: round(c["step_ms"] / dense, 3)
+                            for c in cases},
+    }
+    with open(args.out, "w") as f:
+        json.dump(blob, f, indent=2)
+    print(f"wrote {args.out} (sparsify/dense = "
+          f"{blob['ratios_vs_dense']['sparsify']}, sparsify_qat/dense = "
+          f"{blob['ratios_vs_dense']['sparsify_qat']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Alias package: ``python -m launch.train`` → ``repro.launch.train``.
+
+The canonical drivers live under ``repro.launch``; this forwarding package
+keeps the shorter ``-m launch.<driver>`` spelling working when ``src`` is
+on PYTHONPATH.
+"""

@@ -1,0 +1,6 @@
+"""Forwarder for ``python -m launch.serve`` (see ``repro.launch.serve``)."""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

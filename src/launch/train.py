@@ -1,0 +1,6 @@
+"""Forwarder for ``python -m launch.train`` (see ``repro.launch.train``)."""
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -281,6 +281,20 @@ QDTYPE_INT8 = "int8"
 QDTYPES = (QDTYPE_INT8,)
 
 
+def expand_scales(scales: jax.Array, values: jax.Array) -> jax.Array:
+    """Broadcast per-unit quantization scales over the packed value axes.
+
+    The single home for the rank rule every dequant site shares
+    (``repro.quant``, the kernels' references, ``sparsetrain.vjp``): the
+    scale shape is a prefix of the values shape, so units owning one
+    trailing axis (per-group xwT, the block layout's per-(row-block, group,
+    row)) add one axis and per-row xwT units add two.
+    """
+    if scales.ndim == values.ndim - 1:
+        return scales[..., None]
+    return scales[..., None, None]
+
+
 class PackedWeight:
     """A packed relaxed-N:M sparse weight as a registered JAX pytree.
 
@@ -304,7 +318,8 @@ class PackedWeight:
     Quantization (``repro.quant``): when ``qdtype`` is set (static aux, e.g.
     ``"int8"``) the ``values`` child holds quantized integers and a fourth
     traced child ``scales`` carries the symmetric dequantization scales —
-    ``(*stack, O)`` float32 (per output row) for ``xwT``,
+    ``(*stack, O)`` float32 (per output row, the default) or
+    ``(*stack, O, G)`` (per group) for ``xwT``,
     ``(*stack, RB, A_max, block_r)`` (per row-block × group × row) for
     ``block``.  The dense weight is ``scales ⊙ values`` broadcast over the
     packed axes; kernels dequantize in-register (w8a16).
@@ -376,14 +391,18 @@ class PackedWeight:
                         f"(*, {dense_shape[1] // cfg.m}, {cfg.n_effective})")
         sshape = getattr(scales, "shape", None)
         if qdtype is not None and sshape is not None and vshape is not None:
-            want = (tuple(vshape[:-1]) if layout == LAYOUT_BLOCK
-                    else tuple(vshape[:-2]))
-            if tuple(sshape) != want:
+            if layout == LAYOUT_BLOCK:
+                want = (tuple(vshape[:-1]),)
+            else:
+                # xwT grants two granularities (repro.quant): per output
+                # row (*stack, O) or per (row, group) (*stack, O, G).
+                want = (tuple(vshape[:-2]), tuple(vshape[:-1]))
+            if tuple(sshape) not in want:
                 raise ValueError(
                     f"scales shape {tuple(sshape)} does not match values "
                     f"{tuple(vshape)} for the {layout!r} layout: expected "
-                    f"{want} (per output row for xwT, per row-block × group "
-                    f"× row for block)")
+                    f"one of {want} (per output row / per group for xwT, "
+                    f"per row-block × group × row for block)")
         self.values = values
         self.indices = indices
         self.cfg = cfg
@@ -448,13 +467,14 @@ class PackedWeight:
 
     def dequantized_values(self) -> jax.Array:
         """The values child with quantization scales applied (float32 for a
-        quantized weight; the raw values otherwise)."""
+        quantized weight; the raw values otherwise).  The scale shape is a
+        prefix of the values shape, so per-row vs per-group xwT scales (and
+        the block layout's per-(row-block, group, row) scales) are told
+        apart by rank alone."""
         if self.qdtype is None:
             return self.values
         vals = self.values.astype(jnp.float32)
-        if self.layout == LAYOUT_BLOCK:
-            return vals * self.scales[..., None]
-        return vals * self.scales[..., None, None]
+        return vals * expand_scales(self.scales, vals)
 
     def to_dense(self) -> jax.Array:
         """Scatter back to the dense weight (dequantizing if needed),

@@ -16,7 +16,9 @@ matmul, so the fused body costs one extra VPU multiply per tile:
 
   * xwT:   scales are per output row ``(O,)`` → S rows scale by
     ``scales[o]`` (passed as an ``(O, 1)`` operand so the BlockSpec stays
-    2-D).
+    2-D).  Per-group scales ``(O, G)`` (``repro.quant`` granularity
+    ``"per_group"``) cost the same: grid step ``g`` reads column ``g`` of
+    the scales operand instead of column 0.
   * block: scales are per (row-block, group, row) ``(RB, A_max, block_r)``
     → the ``(block_r, M)`` scatter tile scales row-wise per grid step, and
     the level-1 active-group prefetch (the decoupled address stream) is
@@ -78,7 +80,7 @@ def demm_xwT_q8_pallas(
     x: jax.Array,           # (Bx, K) dense activations
     values: jax.Array,      # (O, G, N) int8 packed weight
     indices: jax.Array,     # (O, G, N) int32
-    scales: jax.Array,      # (O,) float32 per-output-row scales
+    scales: jax.Array,      # (O,) per-row or (O, G) per-group f32 scales
     cfg: SparsityConfig,
     *,
     block_b: int = DEFAULT_BLOCK_B,
@@ -90,17 +92,24 @@ def demm_xwT_q8_pallas(
     m = cfg.m
     assert k == g * m, (k, g, m)
     assert n == cfg.n_effective, (n, cfg)
-    assert scales.shape == (o,), (scales.shape, o)
+    assert scales.shape in ((o,), (o, g)), (scales.shape, values.shape)
+    per_group = scales.ndim == 2
     block_b = min(block_b, bx)
     block_o = min(block_o, o)
     x = _pad_to(x, 0, block_b)
     values = _pad_to(values, 0, block_o)
     indices = _pad_to(indices, 0, block_o)
-    scales2d = _pad_to(scales.reshape(o, 1), 0, block_o)
+    # Per-row scales ride as an (O, 1) operand so the BlockSpec stays 2-D;
+    # per-group scales ride as (O, G) and grid step gg picks its column —
+    # the kernel body sees a (block_o, 1) tile either way.
+    scales2d = _pad_to(scales if per_group else scales.reshape(o, 1), 0,
+                       block_o)
     bxp, op = x.shape[0], values.shape[0]
 
     grid = (bxp // block_b, op // block_o, g)
     kernel = functools.partial(_xwT_q8_kernel, m=m, n=n)
+    scales_map = ((lambda i, j, gg: (j, gg)) if per_group
+                  else (lambda i, j, gg: (j, 0)))
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -108,7 +117,7 @@ def demm_xwT_q8_pallas(
             pl.BlockSpec((block_b, m), lambda i, j, gg: (i, gg)),
             pl.BlockSpec((block_o, 1, n), lambda i, j, gg: (j, gg, 0)),
             pl.BlockSpec((block_o, 1, n), lambda i, j, gg: (j, gg, 0)),
-            pl.BlockSpec((block_o, 1), lambda i, j, gg: (j, 0)),
+            pl.BlockSpec((block_o, 1), scales_map),
         ],
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, gg: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bxp, op), jnp.float32),

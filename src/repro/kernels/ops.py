@@ -16,13 +16,18 @@ Backend dispatch routes through the ``repro.tune`` kernel registry:
 New variants registered via ``repro.tune.register_variant`` become valid
 backend strings here with no further changes.
 
-Gradients (custom_vjp on the xwT op):
+Gradients:
   dL/dx       = dy @ W_dense
   dL/dvalues  = gather of (dyᵀ x) at the packed index positions — i.e. the
                 gradient of a sparse weight exists only at its non-zero
                 coordinates, which is what keeps DeMM serving and sparse
                 fine-tuning consistent.
-  indices are non-differentiable.
+  indices / active_groups are non-differentiable.
+
+The ``xwT`` custom_vjp lives here; the ``xwT_block`` / ``xwT_q8`` /
+``xwT_block_q8`` ops route through ``repro.sparsetrain.vjp`` (dequant-and-
+scatter backward through the jnp references), so ``jax.grad`` through
+``ExecPolicy(mode="packed")`` is legal for every layout (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -55,8 +60,10 @@ def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
     ``core.sparsity.pack_block``) run the scalar-prefetch block-spmm family.
     A quantized node (``pw.qdtype`` set, see ``repro.quant``) routes to the
     ``xwT_q8`` / ``xwT_block_q8`` twins, whose kernels dequantize the int8
-    values in-register (w8a16); the quantized xwT path is forward-only
-    (serving) — fine-tune on the float packed form and re-quantize.
+    values in-register (w8a16); under ``jax.grad`` the quantized ops
+    propagate exact dx (through the dequantized weight) and dL/dscales,
+    while the int8 values stay non-differentiable — fine-tune values on the
+    float packed form and re-quantize (``repro.sparsetrain``).
     The sparsity config (including k-reconfiguration), dense shape, block
     geometry, and qdtype come from the type's static aux data, so call
     sites never re-derive them from loose dict keys.  ``pw`` must be
@@ -94,22 +101,25 @@ def demm_matmul_block(x: jax.Array, pw: PackedWeight,
     Dispatch routes through the ``xwT_block`` op of the ``repro.tune``
     registry (``xwT_block_q8`` for a quantized node); ``backend="auto"``
     resolves per (shape, dtype, pattern, block geometry, platform) through
-    the tuning cache.
+    the tuning cache.  Both ops carry a custom_vjp
+    (``repro.sparsetrain.vjp``), so this path is legal inside ``jax.grad``.
     """
     from repro import tune
+    from repro.sparsetrain import vjp as st_vjp
 
     params = {}
     if backend == "auto":
         choice = tune.resolve_xwT_block(x.shape, pw, x.dtype)
         backend, params = choice.backend, choice.params
+    ptuple = tuple(sorted(params.items()))
     if pw.qdtype is not None:
-        variant = tune.get_variant("xwT_block_q8", backend)
-        return variant.call(x, pw.values, pw.indices, pw.active_groups,
-                            pw.scales, pw.cfg, tuple(pw.dense_shape),
-                            **params)
-    variant = tune.get_variant("xwT_block", backend)
-    return variant.call(x, pw.values, pw.indices, pw.active_groups, pw.cfg,
-                        tuple(pw.dense_shape), **params)
+        return st_vjp.xwT_block_q8_grad(x, pw.values, pw.indices,
+                                        pw.active_groups, pw.scales, pw.cfg,
+                                        tuple(pw.dense_shape), backend,
+                                        ptuple)
+    return st_vjp.xwT_block_grad(x, pw.values, pw.indices, pw.active_groups,
+                                 pw.cfg, tuple(pw.dense_shape), backend,
+                                 ptuple)
 
 
 def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):
@@ -157,21 +167,24 @@ demm_matmul_xwT.defvjp(_xwT_fwd, _xwT_bwd)
 
 def demm_matmul_xwT_q8(x, values, indices, scales, cfg: SparsityConfig,
                        w_shape, backend: str = "reference"):
-    """y = x @ W_q8ᵀ; int8 values (O, G, Ne) + per-output-row scales (O,).
+    """y = x @ W_q8ᵀ; int8 values (O, G, Ne) + scales (O,) per output row or
+    (O, G) per group (``repro.quant`` granularities).
 
-    Serving-only (no custom_vjp): the int8 values are not a differentiable
-    parameterization — train/fine-tune on the float packed form and
-    re-quantize with ``repro.quant.quantize_packed``.
+    Carries a custom_vjp (``repro.sparsetrain.vjp``): dx and dL/dscales are
+    exact; the int8 values are not a differentiable parameterization —
+    fine-tune values on the float packed form and re-quantize with
+    ``repro.quant.quantize_packed``.
     """
     from repro import tune
+    from repro.sparsetrain import vjp as st_vjp
 
     params = {}
     if backend == "auto":
         choice = tune.resolve_xwT_q8(x.shape, w_shape, cfg, x.dtype)
         backend, params = choice.backend, choice.params
-    variant = tune.get_variant("xwT_q8", backend)
-    return variant.call(x, values, indices, scales, cfg, tuple(w_shape),
-                        **params)
+    return st_vjp.xwT_q8_grad(x, values, indices, scales, cfg,
+                              tuple(w_shape), backend,
+                              tuple(sorted(params.items())))
 
 
 def demm_spmm(values, indices, b, cfg: SparsityConfig, a_shape,

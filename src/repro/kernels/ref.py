@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import SparsityConfig, unpack, unpack_block
+from repro.core.sparsity import (SparsityConfig, expand_scales, unpack,
+                                 unpack_block)
 
 
 def spmm_ref(values: jax.Array, indices: jax.Array, b: jax.Array,
@@ -46,8 +47,9 @@ def block_spmm_ref(active_groups, values, indices, b, cfg: SparsityConfig,
 
 def xwT_q8_ref(x: jax.Array, values: jax.Array, indices: jax.Array,
                scales: jax.Array, cfg: SparsityConfig, w_shape) -> jax.Array:
-    """y = x @ W_q8ᵀ with per-output-row scales (O,): dequant + float ref."""
-    vals = values.astype(jnp.float32) * scales[:, None, None]
+    """y = x @ W_q8ᵀ with per-output-row (O,) or per-group (O, G) scales:
+    dequant + float ref."""
+    vals = values.astype(jnp.float32) * expand_scales(scales, values)
     return xwT_ref(x, vals, indices, cfg, w_shape)
 
 

@@ -49,19 +49,23 @@ def _pack_sparse_linear(node, cfg, layout=LAYOUT_XWT, *, block_r=None,
 
 
 def pack_tree(params, layout: str = LAYOUT_XWT, *, block_r=None, a_max=None,
-              quantize: Optional[str] = None, observer=None):
+              quantize: Optional[str] = None, observer=None,
+              granularity: str = "per_row"):
     """Convert every sparse linear in ``params`` to a PackedWeight.
 
     ``quantize`` (e.g. ``"int8"``) quantizes each packed node on the fly;
     ``observer`` is the optional calibration hook forwarded to
-    ``repro.quant.quantize_packed`` (e.g. ``quant.activation_calibration``).
+    ``repro.quant.quantize_packed`` (e.g. ``quant.activation_calibration``)
+    and ``granularity`` the xwT scale unit (``per_row`` | ``per_group``).
     Already-packed nodes pass through (and are quantized if requested).
     """
     def q(pw: PackedWeight) -> PackedWeight:
         if quantize is None or pw.qdtype is not None:
             return pw
         from repro.quant import quantize_packed
-        return quantize_packed(pw, quantize, observer=observer)
+        gran = "per_row" if pw.layout == LAYOUT_BLOCK else granularity
+        return quantize_packed(pw, quantize, observer=observer,
+                               granularity=gran)
 
     if isinstance(params, PackedWeight):
         return q(params)
@@ -77,16 +81,18 @@ def pack_tree(params, layout: str = LAYOUT_XWT, *, block_r=None, a_max=None,
                 return q(_pack_sparse_linear(params, cfg, layout,
                                              block_r=block_r, a_max=a_max))
         return {k: pack_tree(v, layout, block_r=block_r, a_max=a_max,
-                             quantize=quantize, observer=observer)
+                             quantize=quantize, observer=observer,
+                             granularity=granularity)
                 for k, v in params.items()}
     return params
 
 
 def pack_tree_shapes(model, param_shapes, layout: str = LAYOUT_XWT, *,
                      block_r=None, a_max=None,
-                     quantize: Optional[str] = None):
+                     quantize: Optional[str] = None,
+                     granularity: str = "per_row"):
     """ShapeDtypeStruct tree of the packed params (no allocation)."""
     return jax.eval_shape(
         lambda p: pack_tree(p, layout, block_r=block_r, a_max=a_max,
-                            quantize=quantize),
+                            quantize=quantize, granularity=granularity),
         param_shapes)

@@ -7,10 +7,16 @@
 before serving: the decode matmuls then stream only packed bytes.
 ``--quantize int8`` additionally quantizes the packed values to symmetric
 int8 (``repro.quant``) — the decode matmuls then stream int8 bytes and
-dequantize in-register (w8a16 kernels).  ``--backend auto`` resolves every
-packed matmul through the ``repro.tune`` registry + cache; ``--autotune``
-pre-measures tile configs for the decode shapes first (results persist in
-the tuning cache for later runs).
+dequantize in-register (w8a16 kernels); ``--quantize-granularity
+per_group`` refines the xwT scales from per-row to per-(row, group).
+``--backend auto`` resolves every packed matmul through the ``repro.tune``
+registry + cache; ``--autotune`` pre-measures tile configs for the decode
+shapes first (results persist in the tuning cache for later runs).
+
+``--ckpt-dir`` restores trained params from a ``launch/train.py``
+checkpoint before packing — the serve half of the dense → prune →
+train/QAT → pack → serve pipeline (a ``--sparsify`` run's final checkpoint
+has its masks baked in, so it packs losslessly).
 """
 
 from __future__ import annotations
@@ -26,6 +32,37 @@ from repro.core.sparse_linear import ExecPolicy
 from repro.launch.pack_tree import pack_tree
 from repro.models.families import build_model
 from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
+
+
+def run_serve(model, params, vocab_size: int, *, packed: bool = True,
+              layout: str = "xwT", quantize=None,
+              granularity: str = "per_row", backend: str = "reference",
+              autotune: bool = False, requests: int = 8, slots: int = 4,
+              max_new: int = 16, max_len: int = 128, seed: int = 0):
+    """Pack (optionally) and serve ``requests`` random prompts; returns the
+    drained :class:`ServeEngine`.  The reusable core of ``main()`` — the
+    end-to-end examples call this directly with their own trained params.
+    """
+    mode = "masked"
+    if packed:
+        params = pack_tree(params, layout=layout, quantize=quantize,
+                           granularity=granularity)
+        mode = "packed"
+    policy = ExecPolicy(mode=mode, backend=backend)
+    engine = ServeEngine(model, params,
+                         ServeConfig(num_slots=slots, max_len=max_len),
+                         policy=policy, autotune=autotune and packed)
+    rng = np.random.default_rng(seed)
+    for i in range(requests):
+        prompt = rng.integers(0, vocab_size, rng.integers(4, 12),
+                              dtype=np.int32)
+        engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=max_new))
+    t0 = time.time()
+    engine.run_until_drained()
+    # decode-only wall time (packing / engine build / autotune excluded),
+    # so reported tok/s stays comparable across runs and releases
+    engine.drain_seconds = time.time() - t0
+    return engine
 
 
 def main():
@@ -44,6 +81,19 @@ def main():
                     help="quantize the packed values (repro.quant): int8 "
                          "symmetric with traced scales, served by the "
                          "w8a16 xwT_q8/xwT_block_q8 kernels")
+    ap.add_argument("--quantize-granularity",
+                    choices=("per_row", "per_group"), default="per_row",
+                    help="xwT scale unit for --quantize (block is always "
+                         "per row-block × group × row)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore trained params from this launch/train.py "
+                         "checkpoint directory before packing (--packed "
+                         "then serves the trained sparse model)")
+    ap.add_argument("--ckpt-step", type=int, default=None,
+                    help="checkpoint step to restore (default: latest)")
+    ap.add_argument("--full", action="store_true",
+                    help="serve the full (non-reduced) config — match this "
+                         "to how the checkpoint was trained")
     # valid backends come from the registry, so variants added via
     # repro.tune.register_variant are immediately servable
     from repro import tune
@@ -76,36 +126,56 @@ def main():
                         else "")
                      + f" (valid: {sorted(valid)} or 'auto')")
 
-    cfg = get_arch(args.arch).reduced()
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    mode = "masked"
-    if args.packed:
-        params = pack_tree(params, layout=args.layout,
-                           quantize=args.quantize)
-        mode = "packed"
-    policy = ExecPolicy(mode=mode, backend=args.backend)
-    engine = ServeEngine(model, params,
-                         ServeConfig(num_slots=args.slots,
-                                     max_len=args.max_len),
-                         policy=policy,
-                         autotune=args.autotune and args.packed)
+    if args.ckpt_dir:
+        from repro.train import checkpoint as ckpt
 
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, rng.integers(4, 12),
-                              dtype=np.int32)
-        engine.submit(Request(uid=i, prompt=prompt,
-                              max_new_tokens=args.max_new))
+        step = (args.ckpt_step if args.ckpt_step is not None
+                else ckpt.latest_step(args.ckpt_dir))
+        if step is None:
+            ap.error(f"--ckpt-dir {args.ckpt_dir} holds no checkpoints")
+        try:
+            restored = ckpt.restore({"params": params}, args.ckpt_dir,
+                                    step)["params"]
+        except KeyError as e:
+            ap.error(
+                f"checkpoint {args.ckpt_dir} step {step} is missing leaf "
+                f"{e} of the {cfg.name} param tree — was it trained with a "
+                "different --arch?")
+        # checkpoint.restore trusts the manifest's shapes; fail here with a
+        # pointer at the config mismatch instead of deep inside a matmul
+        mismatch = [
+            f"  {jax.tree_util.keystr(path)}: checkpoint "
+            f"{tuple(b.shape)} vs model {tuple(a.shape)}"
+            for (path, a), b in zip(
+                jax.tree_util.tree_flatten_with_path(params)[0],
+                jax.tree.leaves(restored))
+            if hasattr(a, "shape") and tuple(a.shape) != tuple(b.shape)]
+        if mismatch:
+            ap.error(
+                f"checkpoint {args.ckpt_dir} step {step} does not fit the "
+                f"{'full' if args.full else 'reduced'} {cfg.name} config "
+                "(was it trained with the other of --full/--reduced, or a "
+                "different --arch?):\n" + "\n".join(mismatch[:8]))
+        params = restored
+        print(f"restored params from {args.ckpt_dir} step {step}")
 
-    t0 = time.time()
-    ticks = engine.run_until_drained()
-    dt = time.time() - t0
+    engine = run_serve(model, params, cfg.vocab_size, packed=args.packed,
+                       layout=args.layout, quantize=args.quantize,
+                       granularity=args.quantize_granularity,
+                       backend=args.backend, autotune=args.autotune,
+                       requests=args.requests, slots=args.slots,
+                       max_new=args.max_new, max_len=args.max_len)
+    dt = engine.drain_seconds
+    mode = "packed" if args.packed else "masked"
     total_tokens = sum(len(r.output) for r in engine.completed)
     tag = mode if not args.quantize else f"{mode}+{args.quantize}"
-    print(f"served {len(engine.completed)} requests, {total_tokens} tokens, "
-          f"{ticks} engine ticks in {dt:.1f}s "
-          f"({total_tokens/max(dt,1e-9):.1f} tok/s, mode={tag})")
+    print(f"served {len(engine.completed)} requests, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens/max(dt,1e-9):.1f} tok/s, mode={tag})")
     for r in engine.completed[:3]:
         print(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
               f"-> {r.output[:8]}")

@@ -3,10 +3,24 @@
     PYTHONPATH=src python -m repro.launch.train --arch gemma3_1b \
         --steps 200 --batch 8 --seq 256 --reduced --ckpt-dir /tmp/ckpt
 
+Sparsity-aware training (``repro.sparsetrain``)::
+
+    PYTHONPATH=src python -m repro.launch.train --sparsify 8:128 --qat int8
+
+``--sparsify`` drives a gradual magnitude-pruning schedule (default
+3-phase anneal dense → N:2M → N:M; explicit phases via
+``dense@0,8:256@50,8:128@150``) whose mask state rides every checkpoint;
+``--qat int8`` adds straight-through fake quantization on the serving int8
+grid.  The final checkpoint has the masks baked in (weights satisfy their
+N:M patterns exactly), so it packs + serves directly::
+
+    PYTHONPATH=src python -m repro.launch.serve --ckpt-dir /tmp/repro_ckpt \
+        --packed --quantize int8 --backend auto
+
 On the CPU container this runs REDUCED configs on a single device (the
-multi-device production mesh is exercised by the dry-run); on a real TPU
-fleet the same driver runs full configs by dropping --reduced and letting
-``--mesh`` pick the production mesh.
+default when no ``--full`` is given off-TPU; the multi-device production
+mesh is exercised by the dry-run); on a real TPU fleet the same driver runs
+full configs with ``--full`` and lets ``--mesh`` pick the production mesh.
 """
 
 from __future__ import annotations
@@ -39,6 +53,23 @@ def add_frontend_inputs(cfg, batch, rng):
     return batch
 
 
+def verify_final_masks(params) -> int:
+    """Assert every sparse linear satisfies its stored N:M pattern exactly
+    (call after ``SparseTrainer.finalize``).  Returns the node count."""
+    from repro.core.sparsity import satisfies_pattern
+    from repro.sparsetrain.masks import map_sparse_nodes
+
+    def check(node, cfg):
+        w = node["w"]
+        flat = w.reshape(-1, w.shape[-1])
+        assert bool(satisfies_pattern(flat, cfg)), (
+            f"final mask violates {cfg.pattern_name()}")
+        return True
+
+    return sum(x is True for x in
+               jax.tree.leaves(map_sparse_nodes(params, check)))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm_3b")
@@ -47,30 +78,78 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (the default off-TPU)")
+    ap.add_argument("--full", action="store_true",
+                    help="force the full config even on CPU")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compression", choices=["topk", "int8"], default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    # --- sparsity-aware training (repro.sparsetrain) ---
+    ap.add_argument("--sparsify", default=None, metavar="SCHEDULE",
+                    help="gradual N:M sparsification: a target pattern "
+                         "('8:128', '8:128:2') for the default dense → "
+                         "N:2M → N:M anneal, or explicit phases "
+                         "('dense@0,8:256@50,8:128@150')")
+    ap.add_argument("--sparsify-update-every", type=int, default=25,
+                    help="within-phase magnitude-mask refresh cadence")
+    ap.add_argument("--sparsify-freeze-after", type=int, default=None,
+                    help="stop mask refreshes from this step on (default: "
+                         "90%% of --steps, so the final support settles "
+                         "before baking)")
+    ap.add_argument("--qat", choices=("int8",), default=None,
+                    help="straight-through fake quantization on the int8 "
+                         "serving grid (requires --sparsify)")
+    ap.add_argument("--qat-granularity", choices=("per_row", "per_group"),
+                    default="per_row")
     args = ap.parse_args()
+    if args.qat and not args.sparsify:
+        ap.error("--qat rides the sparsify training path; add --sparsify")
+    if args.reduced and args.full:
+        ap.error("--reduced and --full are mutually exclusive")
+    # Reduced by default only on CPU (this container): GPU/TPU runs keep
+    # the full config unless --reduced is given explicitly.
+    reduced = args.reduced or (not args.full
+                               and jax.default_backend() == "cpu")
 
     cfg = get_arch(args.arch)
-    if args.reduced:
+    if reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params)
                    if hasattr(x, "size"))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"sparsity={cfg.sparsity.pattern_name() if cfg.sparsity else None}")
+          f"sparsity={cfg.sparsity.pattern_name() if cfg.sparsity else None}"
+          f"{' (reduced)' if reduced else ''}")
 
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
                                 warmup_steps=max(args.steps // 20, 5),
                                 compression=args.compression)
     opt_state = adamw.init(opt_cfg, params)
-    step_fn = jax.jit(make_train_step(
-        model, opt_cfg, num_microbatches=args.microbatches,
-        policy=ExecPolicy(mode="masked")))
+
+    trainer = None
+    if args.sparsify:
+        from repro.sparsetrain import SparseTrainRecipe, SparseTrainer
+        from repro.sparsetrain.masks import parse_schedule
+
+        schedule = parse_schedule(args.sparsify, args.steps,
+                                  update_every=args.sparsify_update_every,
+                                  freeze_after=args.sparsify_freeze_after)
+        print("sparsify schedule: " + schedule.spec()
+              + (f"  qat={args.qat}/{args.qat_granularity}" if args.qat
+                 else ""))
+        recipe = SparseTrainRecipe(schedule=schedule, qat=args.qat,
+                                   qat_granularity=args.qat_granularity)
+        trainer = SparseTrainer(model, opt_cfg, recipe,
+                                num_microbatches=args.microbatches)
+        trainer.init_state(params)
+        step_fn = trainer.train_step
+    else:
+        step_fn = jax.jit(make_train_step(
+            model, opt_cfg, num_microbatches=args.microbatches,
+            policy=ExecPolicy(mode="masked")))
 
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch)
@@ -78,16 +157,19 @@ def main():
     sup = TrainingSupervisor(
         SupervisorConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
         step_fn, data_cfg,
-        to_batch=lambda b: add_frontend_inputs(cfg, b, rng))
+        to_batch=lambda b: add_frontend_inputs(cfg, b, rng),
+        extra_state=trainer)
 
     t0 = time.time()
-    losses = []
+    # keyed by step (not append-ordered) so supervisor restarts replaying
+    # steps overwrite instead of duplicating entries
+    loss_by_step = {}
 
     orig_step = sup.train_step
 
     def logging_step(p, o, b, s):
         p, o, m = orig_step(p, o, b, s)
-        losses.append(float(m["loss"]))
+        loss_by_step[s] = float(m["loss"])
         if s % args.log_every == 0:
             print(f"step {s:5d} loss {float(m['loss']):.4f} "
                   f"gnorm {float(m['grad_norm']):.3f} "
@@ -98,9 +180,36 @@ def main():
     sup.train_step = logging_step
     params, opt_state, metrics, restarts = sup.run(params, opt_state,
                                                    args.steps)
-    print(f"done: final loss {losses[-1]:.4f} (first {losses[0]:.4f}), "
+    first, last = loss_by_step[0], loss_by_step[max(loss_by_step)]
+    print(f"done: final loss {last:.4f} (first {first:.4f}), "
           f"restarts={restarts}")
-    assert losses[-1] < losses[0], "training must reduce loss"
+    if trainer is None:
+        assert last < first, "training must reduce loss"
+    else:
+        # Pruning phases cause transient loss spikes, so a very short
+        # schedule may end above its dense-warmup start; require learning
+        # relative to init OR recovery within the final (serving-pattern)
+        # phase.
+        t_final = min(trainer.recipe.schedule.phases[-1].start,
+                      max(loss_by_step))
+        assert last < first or last < loss_by_step[t_final], (
+            "training must reduce loss (vs step 0 or vs the final "
+            "sparsity phase's start)")
+
+    if trainer is not None:
+        from repro.train import checkpoint as ckpt
+
+        # Bake the final masks (hard zeros) so the committed checkpoint
+        # satisfies the N:M patterns exactly and packs losslessly for
+        # launch/serve.py --ckpt-dir ... --packed [--quantize int8].
+        params = trainer.finalize(params)
+        n_sparse = verify_final_masks(params)
+        ckpt.save({"params": params, "opt": opt_state,
+                   "extra": trainer.extra_state()},
+                  args.ckpt_dir, args.steps)
+        print(f"final masks verified on {n_sparse} sparse linears "
+              f"(N:M satisfied exactly); baked checkpoint re-saved at "
+              f"step {args.steps}")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,14 @@
 
 Granularity follows the packed layout (DESIGN.md §10):
 
-* ``xwT``    — one scale per output row: ``scales (*stack, O)``.  The row is
-  the reduction unit of the serving matmul ``y = x @ Wᵀ``, so a per-row
-  scale folds into the kernel as a single multiply on the (rows, M) scatter
-  matrix.
+* ``xwT``    — default one scale per output row: ``scales (*stack, O)``.
+  The row is the reduction unit of the serving matmul ``y = x @ Wᵀ``, so a
+  per-row scale folds into the kernel as a single multiply on the (rows, M)
+  scatter matrix.  ``granularity="per_group"`` refines this to one scale
+  per (row, M-group): ``scales (*stack, O, G)`` — each group's Ne values
+  share one exponent, which matters exactly when a row mixes large and
+  small groups (the kernel cost is unchanged: the scatter tile of grid step
+  ``g`` scales by column ``g`` of the scales operand instead of column 0).
 * ``block``  — one scale per (row-block, active-group slot, row):
   ``scales (*stack, RB, A_max, block_r)``.  Per-group scales are finer than
   per-row (each group's Ne values share one exponent) and line up with the
@@ -36,6 +40,7 @@ from repro.core.sparsity import (
     QDTYPE_INT8,
     QDTYPES,
     PackedWeight,
+    expand_scales,
 )
 
 QMAX = 127.0
@@ -44,43 +49,57 @@ CLIP_GRID = (1.0, 0.95, 0.9, 0.85, 0.8)
 
 _EPS = 1e-12
 
+GRANULARITIES = ("per_row", "per_group")
 
-def _reduce_axes(pw: PackedWeight):
+
+def _check_granularity(pw: PackedWeight, granularity: str):
+    if granularity not in GRANULARITIES:
+        raise ValueError(f"unknown granularity {granularity!r}; expected "
+                         f"one of {GRANULARITIES}")
+    if granularity == "per_group" and pw.layout == LAYOUT_BLOCK:
+        raise ValueError(
+            "granularity only applies to the xwT layout; block scales are "
+            "already per (row-block, group, row)")
+
+
+def _reduce_axes(pw: PackedWeight, granularity: str = "per_row"):
     """Packed axes reduced away by one scale unit."""
-    return (-1,) if pw.layout == LAYOUT_BLOCK else (-2, -1)
+    if pw.layout == LAYOUT_BLOCK or granularity == "per_group":
+        return (-1,)
+    return (-2, -1)
 
 
-def amax_scales(pw: PackedWeight) -> jax.Array:
+def amax_scales(pw: PackedWeight,
+                granularity: str = "per_row") -> jax.Array:
     """Data-free calibration: ``amax / 127`` per scale unit (float32).
 
     Zero rows (fully padded slots) get a scale of ``1/127`` so the divide
     stays finite; their values are all 0 and quantize to 0 regardless.
     """
+    _check_granularity(pw, granularity)
     amax = jnp.max(jnp.abs(pw.values.astype(jnp.float32)),
-                   axis=_reduce_axes(pw))
+                   axis=_reduce_axes(pw, granularity))
     return jnp.where(amax > _EPS, amax, 1.0) / QMAX
 
 
-def _expand(pw: PackedWeight, scales: jax.Array) -> jax.Array:
-    """Broadcast per-unit scales over the packed value axes."""
-    if pw.layout == LAYOUT_BLOCK:
-        return scales[..., None]
-    return scales[..., None, None]
-
-
 def _quantize_values(pw: PackedWeight, scales: jax.Array) -> jax.Array:
-    q = jnp.round(pw.values.astype(jnp.float32) / _expand(pw, scales))
+    q = jnp.round(pw.values.astype(jnp.float32)
+                  / expand_scales(scales, pw.values))
     return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
 
 
 def quantize_packed(pw: PackedWeight, qdtype: str = QDTYPE_INT8, *,
-                    observer: Optional[Callable] = None) -> PackedWeight:
+                    observer: Optional[Callable] = None,
+                    granularity: str = "per_row") -> PackedWeight:
     """Quantize a float packed weight to ``qdtype`` (int8 today).
 
     ``observer`` maps the float ``PackedWeight`` to per-unit scales (see
     :func:`activation_calibration`); by default the cheap data-free
-    :func:`amax_scales` pass is used.  Returns a new ``PackedWeight`` with
-    int8 ``values``, a float32 ``scales`` child, and the ``qdtype`` aux tag;
+    :func:`amax_scales` pass is used.  ``granularity`` picks the scale unit
+    for the xwT layout — ``per_row`` (``scales (*stack, O)``, the default)
+    or ``per_group`` (``(*stack, O, G)``); an observer's output shape wins
+    over ``granularity``.  Returns a new ``PackedWeight`` with int8
+    ``values``, a float32 ``scales`` child, and the ``qdtype`` aux tag;
     ``indices``/``active_groups`` and all static aux are shared unchanged.
     """
     if qdtype not in QDTYPES:
@@ -88,8 +107,9 @@ def quantize_packed(pw: PackedWeight, qdtype: str = QDTYPE_INT8, *,
     if pw.qdtype is not None:
         raise ValueError(f"weight is already quantized ({pw.qdtype!r}); "
                          "dequantize_packed first to re-calibrate")
+    _check_granularity(pw, granularity)
     scales = (observer(pw) if observer is not None
-              else amax_scales(pw)).astype(jnp.float32)
+              else amax_scales(pw, granularity)).astype(jnp.float32)
     return pw.replace(values=_quantize_values(pw, scales), scales=scales,
                       qdtype=qdtype)
 
@@ -103,16 +123,21 @@ def dequantize_packed(pw: PackedWeight) -> PackedWeight:
 
 
 def quantize_tree(params, qdtype: str = QDTYPE_INT8, *,
-                  observer: Optional[Callable] = None):
+                  observer: Optional[Callable] = None,
+                  granularity: str = "per_row"):
     """Quantize every :class:`PackedWeight` node of a params pytree
     (as produced by ``launch.pack_tree``); everything else passes through.
-    Already-quantized nodes are left untouched."""
+    Already-quantized nodes are left untouched.  ``granularity`` applies to
+    xwT-layout nodes (block nodes are inherently per-group)."""
     if isinstance(params, PackedWeight):
         if params.qdtype is not None:
             return params
-        return quantize_packed(params, qdtype, observer=observer)
+        gran = ("per_row" if params.layout == LAYOUT_BLOCK else granularity)
+        return quantize_packed(params, qdtype, observer=observer,
+                               granularity=gran)
     if isinstance(params, dict):
-        return {k: quantize_tree(v, qdtype, observer=observer)
+        return {k: quantize_tree(v, qdtype, observer=observer,
+                                 granularity=granularity)
                 for k, v in params.items()}
     return params
 
@@ -135,7 +160,8 @@ def _slot_columns(pw: PackedWeight) -> jax.Array:
 
 
 def activation_calibration(x: jax.Array,
-                           grid: Sequence[float] = CLIP_GRID) -> Callable:
+                           grid: Sequence[float] = CLIP_GRID,
+                           granularity: str = "per_row") -> Callable:
     """Observer factory: pick per-unit clip ratios from sample activations.
 
     ``x`` is a small ``(B, K)`` batch drawn from the serving distribution.
@@ -152,13 +178,13 @@ def activation_calibration(x: jax.Array,
     act_sq = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=0)   # (K,)
 
     def observer(pw: PackedWeight) -> jax.Array:
-        base = amax_scales(pw)
-        axes = _reduce_axes(pw)
+        base = amax_scales(pw, granularity)
+        axes = _reduce_axes(pw, granularity)
         v = pw.values.astype(jnp.float32)
         w = act_sq[_slot_columns(pw)]                  # per-slot weight
         errs = []
         for c in grid:
-            s = _expand(pw, base * c)
+            s = expand_scales(base * c, pw.values)
             deq = jnp.clip(jnp.round(v / s), -QMAX, QMAX) * s
             errs.append(jnp.sum(jnp.square(deq - v) * w, axis=axes))
         errs = jnp.stack(errs)                         # (|grid|, *units)

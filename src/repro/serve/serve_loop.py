@@ -13,12 +13,15 @@ then reads only packed bytes (see DESIGN.md §6).  ``backend='auto'``
 resolves each packed matmul through the ``repro.tune`` registry/cache; pass
 ``autotune=True`` to pre-measure tile configs for every packed weight shape
 before the decode step is compiled (DESIGN.md §8).  The legacy
-``mode=``/``backend=`` kwargs are still accepted and folded into a policy.
+``mode=``/``backend=`` kwargs are still accepted and folded into a policy,
+but emit a DeprecationWarning and will be removed after one release
+(matching the PR 4 shim-removal policy) — pass ``policy=ExecPolicy(...)``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Callable, List, Optional
 
@@ -49,6 +52,13 @@ class ServeEngine:
                  mode=None, backend=None, autotune=False):
         from repro.core.sparse_linear import resolve_policy
 
+        if mode is not None or backend is not None:
+            warnings.warn(
+                "ServeEngine(mode=..., backend=...) is deprecated; pass "
+                "policy=ExecPolicy(mode=..., backend=...) instead (the "
+                "legacy kwargs will be removed after one release, matching "
+                "the PR 4 shim-removal policy)",
+                DeprecationWarning, stacklevel=2)
         policy = resolve_policy(policy, mode, backend)
         self.model = model
         self.params = params

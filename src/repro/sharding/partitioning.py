@@ -149,9 +149,11 @@ def packed_weight_specs(pw: PackedWeight, kind: str) -> PackedWeight:
 
     Quantized nodes (``repro.quant``) shard the ``scales`` child alongside
     ``values``: the scale axes are a prefix of the value axes (per output
-    row for xwT, per row-block × group × row for block), so column-parallel
-    shards the same leading output axis and row-parallel leaves scales
-    replicated (per-row xwT scales have no group axis to split)."""
+    row or per group for xwT, per row-block × group × row for block), so
+    column-parallel shards the same leading output axis; row-parallel
+    shards per-group xwT scales on their group axis (it tiles the
+    contraction dim exactly like the values' group axis) and leaves per-row
+    scales replicated (no group axis to split)."""
     extra = len(pw.stack_dims)
     if pw.layout == LAYOUT_BLOCK:
         spec, ag_spec = _block_packed_specs(kind, extra)
@@ -163,8 +165,13 @@ def packed_weight_specs(pw: PackedWeight, kind: str) -> PackedWeight:
     spec = _packed_spec(kind, extra)
     repl = {"values": spec, "indices": spec}
     if pw.qdtype is not None:
-        repl["scales"] = P(*([None] * extra
-                             + (["model"] if kind == "col" else [None])))
+        per_group = (getattr(pw.scales, "ndim", extra + 1) - extra) == 2
+        if per_group:
+            core = {"col": ["model", None], "row": [None, "model"]}.get(
+                kind, [None, None])
+        else:
+            core = ["model"] if kind == "col" else [None]
+        repl["scales"] = P(*([None] * extra + core))
     return pw.replace(**repl)
 
 

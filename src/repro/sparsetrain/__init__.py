@@ -1,0 +1,66 @@
+"""``repro.sparsetrain`` — sparsity-aware training for the DeMM formats.
+
+The train-side pillar of the dense → prune → train/QAT → pack → serve
+pipeline (DESIGN.md §11):
+
+  * :mod:`repro.sparsetrain.vjp`     — custom_vjp coverage for the
+    ``xwT_block`` / ``xwT_q8`` / ``xwT_block_q8`` registry ops, making
+    ``ExecPolicy(mode="packed")`` legal inside ``jax.grad`` for every
+    packed layout (``kernels/ops.py`` dispatches through it).
+  * :mod:`repro.sparsetrain.masks`   — gradual magnitude-pruning schedules
+    (dense → coarse-group N:2M → N:M, k-reconfiguration phases) with
+    deterministic, checkpointable mask state.
+  * :mod:`repro.sparsetrain.ste`     — straight-through fake quantization
+    matching ``repro.quant``'s serving numerics bit-for-bit.
+  * :mod:`repro.sparsetrain.qat`     — QAT application over the masked
+    training form (per-row / per-group int8 scales).
+  * :mod:`repro.sparsetrain.recipes` — :class:`SparseTrainer`, the
+    supervisor-compatible driver (``launch/train.py --sparsify ... --qat
+    int8``).
+"""
+
+from repro.sparsetrain.masks import (
+    SparsifyPhase,
+    SparsifySchedule,
+    anneal_schedule,
+    apply_mask_tree,
+    bake_masks,
+    build_masks,
+    init_mask_state,
+    map_sparse_nodes,
+    parse_pattern,
+    parse_schedule,
+    update_mask_state,
+)
+from repro.sparsetrain.qat import fake_quant_params
+from repro.sparsetrain.ste import fake_quant, fake_quant_weight
+
+
+def __getattr__(name):
+    # Lazy (PEP 562): recipes pulls in the training stack (train_loop →
+    # optim), which serving-side importers of this package — kernels/ops.py
+    # reaches sparsetrain.vjp on the first packed block/q8 matmul — must
+    # not pay for.
+    if name in ("SparseTrainRecipe", "SparseTrainer"):
+        from repro.sparsetrain import recipes
+
+        return getattr(recipes, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "SparsifyPhase",
+    "SparsifySchedule",
+    "SparseTrainRecipe",
+    "SparseTrainer",
+    "anneal_schedule",
+    "apply_mask_tree",
+    "bake_masks",
+    "build_masks",
+    "fake_quant",
+    "fake_quant_params",
+    "fake_quant_weight",
+    "init_mask_state",
+    "parse_pattern",
+    "parse_schedule",
+    "update_mask_state",
+]

@@ -1,0 +1,286 @@
+"""Gradual N:M sparsification schedules over ``core/pruning.py``.
+
+FlexSA / S2TA-style pruned-model training derives the accelerator's density
+target from a *schedule*, not a single projection: the model trains dense
+for a warmup, is pruned to a coarse relaxed pattern (larger groups — the
+paper's N:256), then annealed to the serving pattern (N:128), with the mask
+refreshed from weight magnitude every ``update_every`` steps (straight-
+through gradients keep pruned weights alive, so the pattern tracks the
+weights) and frozen late in training so the final weights settle on a fixed
+support.  Phase configs may also carry the paper's k-reconfiguration
+(``"8:128:2"`` = 16:128 served as 2 passes of 8:128) — the "simple
+reconfiguration" knob toward the denser 2:4 / 1:4 fine-grained patterns.
+
+Everything here is **host-driven and deterministic**: phase and refresh
+decisions are pure functions of the integer step, and the masks are pure
+functions of (weights, phase config) — so the supervisor's
+restore-and-replay fault tolerance reproduces the uninterrupted mask
+trajectory bitwise.  The mask state rides the checkpoint through
+``train/checkpoint.py`` (see ``recipes.SparseTrainer``).
+
+Per-node resolution: model layers adapt their group size to the contraction
+dim (``configs.base.choose_group``), so a schedule phase is resolved
+against each node's own :class:`SparsityConfig`:
+
+* the **final** phase always resolves to the node's stored config — the
+  pattern the model will be packed and served at;
+* an intermediate phase applies verbatim where its group size divides the
+  node's contraction dim, and falls back to a density-matched pattern at
+  the node's native group size otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.pruning import straight_through_mask
+from repro.core.sparsity import SparsityConfig, prune_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsifyPhase:
+    """One schedule phase: from ``start`` (inclusive) the masks follow
+    ``cfg`` (``None`` = dense warmup, no masking)."""
+
+    start: int
+    cfg: Optional[SparsityConfig] = None
+
+    def name(self) -> str:
+        if self.cfg is None:
+            return f"dense@{self.start}"
+        n, m, k = self.cfg.n, self.cfg.m, self.cfg.k
+        pat = f"{n}:{m}" if k == 1 else f"{n}:{m}:{k}"
+        return f"{pat}@{self.start}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsifySchedule:
+    phases: Tuple[SparsifyPhase, ...]
+    update_every: int = 25            # within-phase magnitude-mask refresh
+    freeze_after: Optional[int] = None  # stop refreshing late in training
+
+    def __post_init__(self):
+        if not self.phases:
+            raise ValueError("schedule needs at least one phase")
+        starts = [p.start for p in self.phases]
+        if starts != sorted(starts) or len(set(starts)) != len(starts):
+            raise ValueError(f"phase starts must be strictly increasing, "
+                             f"got {starts}")
+        if self.phases[0].start != 0:
+            raise ValueError("the first phase must start at step 0")
+        if self.phases[-1].cfg is None:
+            raise ValueError("the final phase must carry a SparsityConfig "
+                             "(the pattern the model is packed at)")
+        if self.update_every < 1:
+            raise ValueError(f"update_every must be >= 1, "
+                             f"got {self.update_every}")
+
+    def phase_index(self, step: int) -> int:
+        idx = 0
+        for i, p in enumerate(self.phases):
+            if step >= p.start:
+                idx = i
+        return idx
+
+    def cfg_at(self, step: int) -> Optional[SparsityConfig]:
+        return self.phases[self.phase_index(step)].cfg
+
+    def spec(self) -> str:
+        """Canonical string form — checkpointed so a resume can verify it
+        is continuing the same schedule."""
+        phases = ",".join(p.name() for p in self.phases)
+        freeze = "-" if self.freeze_after is None else str(self.freeze_after)
+        return f"{phases}|every{self.update_every}|freeze{freeze}"
+
+
+def parse_pattern(s: str) -> SparsityConfig:
+    """``"8:128"`` or ``"8:128:2"`` (k-reconfiguration) → SparsityConfig."""
+    parts = s.split(":")
+    if len(parts) not in (2, 3):
+        raise ValueError(f"cannot parse sparsity pattern {s!r}; expected "
+                         "'n:m' or 'n:m:k'")
+    n, m = int(parts[0]), int(parts[1])
+    k = int(parts[2]) if len(parts) == 3 else 1
+    return SparsityConfig(n, m, k)
+
+
+def anneal_schedule(final_cfg: SparsityConfig, total_steps: int, *,
+                    warmup_frac: float = 0.15, target_frac: float = 0.5,
+                    freeze_frac: float = 0.9,
+                    update_every: int = 25) -> SparsifySchedule:
+    """The default 3-phase anneal: dense → N:2M (coarse groups) → N:M.
+
+    Doubling the group size first prunes to the *relaxed* coarse pattern
+    (any N positions per 2M columns) before tightening to the serving
+    group size — the dense → N:256 → N:128 trajectory of the paper's
+    relaxed range.  The mask freezes at ``freeze_frac`` of training so the
+    surviving weights fine-tune on a fixed support.
+    """
+    t1 = max(1, int(total_steps * warmup_frac))
+    t2 = max(t1 + 1, int(total_steps * target_frac))
+    coarse = SparsityConfig(final_cfg.n, final_cfg.m * 2, final_cfg.k)
+    return SparsifySchedule(
+        phases=(SparsifyPhase(0, None), SparsifyPhase(t1, coarse),
+                SparsifyPhase(t2, final_cfg)),
+        update_every=update_every,
+        freeze_after=max(t2 + 1, int(total_steps * freeze_frac)))
+
+
+def parse_schedule(spec: str, total_steps: int, *, update_every: int = 25,
+                   freeze_after: Optional[int] = None) -> SparsifySchedule:
+    """Build a schedule from a CLI spec.
+
+    ``"8:128"``                       → :func:`anneal_schedule` to 8:128.
+    ``"dense@0,8:256@50,8:128@150"``  → explicit phases (the final phase's
+    pattern is the serving target).
+
+    ``freeze_after`` stops within-phase mask refreshes from that step on.
+    For explicit phases it defaults to 90% of ``total_steps`` (past the
+    last phase start) so the final support settles before baking — pass a
+    value to override, or one beyond ``total_steps`` to disable.
+    """
+    if "@" not in spec:
+        sched = anneal_schedule(parse_pattern(spec), total_steps,
+                                update_every=update_every)
+        if freeze_after is not None:
+            sched = dataclasses.replace(sched, freeze_after=freeze_after)
+        return sched
+    phases = []
+    for part in spec.split(","):
+        pat, _, start = part.partition("@")
+        if not start:
+            raise ValueError(f"phase {part!r} needs an '@step' suffix")
+        cfg = None if pat.strip() == "dense" else parse_pattern(pat.strip())
+        phases.append(SparsifyPhase(int(start), cfg))
+    if phases and phases[-1].start >= total_steps:
+        raise ValueError(
+            f"final phase starts at step {phases[-1].start} but the run is "
+            f"only {total_steps} steps — the serving pattern would never "
+            "apply (and the final bake would fail); extend --steps or move "
+            "the phase earlier")
+    if freeze_after is None:
+        freeze_after = max(phases[-1].start + 1, int(total_steps * 0.9))
+    return SparsifySchedule(phases=tuple(phases), update_every=update_every,
+                            freeze_after=freeze_after)
+
+
+# ---------------------------------------------------------------------------
+# Per-node phase resolution
+# ---------------------------------------------------------------------------
+
+def node_phase_cfg(phase_cfg: Optional[SparsityConfig],
+                   node_cfg: SparsityConfig, kdim: int,
+                   is_final: bool) -> Optional[SparsityConfig]:
+    """Resolve a schedule phase against one layer's stored config."""
+    if phase_cfg is None:
+        return None
+    if is_final:
+        return node_cfg
+    if kdim % phase_cfg.m == 0:
+        return phase_cfg
+    ne = min(node_cfg.m, max(1, round(phase_cfg.density * node_cfg.m)))
+    return SparsityConfig(ne, node_cfg.m, 1)
+
+
+# ---------------------------------------------------------------------------
+# Mask-state tree (mirrors the params pytree)
+# ---------------------------------------------------------------------------
+
+def _is_sparse_node(node) -> bool:
+    from repro.core.sparse_linear import node_sparsity
+
+    return (isinstance(node, dict) and "w" in node
+            and node_sparsity(node) is not None)
+
+
+def map_sparse_nodes(params, fn):
+    """Mirror ``params``: ``fn(node, cfg)`` at sparse linears, None at
+    everything else (so the result checkpoints as a plain pytree).  The
+    single home for the sparse-node traversal convention — fold over it
+    instead of re-walking the tree."""
+    from repro.core.sparse_linear import node_sparsity
+
+    if _is_sparse_node(params):
+        return fn(params, node_sparsity(params))
+    if isinstance(params, dict):
+        return {k: map_sparse_nodes(v, fn) for k, v in params.items()}
+    return None
+
+
+def build_masks(params, schedule: SparsifySchedule, phase: int):
+    """Magnitude top-N:M masks for every sparse linear at ``phase``.
+
+    Dense-phase masks are all-ones (straight-through identity), so one
+    jitted train step serves the whole schedule — only mask *contents*
+    change across phases, never the pytree structure.
+    """
+    phase_cfg = schedule.phases[phase].cfg
+    is_final = phase == len(schedule.phases) - 1
+
+    def one(node, cfg):
+        w = node["w"]
+        pcfg = node_phase_cfg(phase_cfg, cfg, int(w.shape[-1]), is_final)
+        if pcfg is None:
+            return jnp.ones(w.shape, bool)
+        flat = w.reshape(-1, w.shape[-1])
+        return prune_mask(flat, pcfg).reshape(w.shape)
+
+    return map_sparse_nodes(params, one)
+
+
+def apply_mask_tree(params, masks):
+    """Straight-through masking of every sparse linear with its entry of a
+    :func:`build_masks` tree (the gradient reaches the dense weight
+    unmasked, so pruned weights can re-enter on the next refresh)."""
+    if _is_sparse_node(params):
+        return dict(params, w=straight_through_mask(params["w"], masks))
+    if isinstance(params, dict):
+        return {k: apply_mask_tree(v, masks[k]) for k, v in params.items()}
+    return params
+
+
+def bake_masks(params, masks):
+    """Permanently zero the pruned weights (the pre-packing projection:
+    after baking, every sparse linear satisfies its mask's pattern
+    exactly and packs losslessly)."""
+    if _is_sparse_node(params):
+        w = params["w"]
+        return dict(params, w=w * masks.astype(w.dtype))
+    if isinstance(params, dict):
+        return {k: bake_masks(v, masks[k]) for k, v in params.items()}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Mask state: the checkpointable schedule position
+# ---------------------------------------------------------------------------
+
+def init_mask_state(params, schedule: SparsifySchedule, step: int = 0):
+    phase = schedule.phase_index(step)
+    return {"masks": build_masks(params, schedule, phase),
+            "phase": jnp.asarray(phase, jnp.int32),
+            "last_update": jnp.asarray(step, jnp.int32)}
+
+
+def update_mask_state(params, state, schedule: SparsifySchedule, step: int):
+    """Deterministic host-side mask refresh.  Returns ``(state, changed)``.
+
+    A refresh happens on phase transitions (always — the schedule must
+    advance even after ``freeze_after``) and every ``update_every`` steps
+    within a sparse phase until ``freeze_after``.
+    """
+    phase = schedule.phase_index(step)
+    cur = int(state["phase"])
+    frozen = (schedule.freeze_after is not None
+              and step >= schedule.freeze_after)
+    due = phase != cur or (
+        not frozen and schedule.phases[phase].cfg is not None
+        and step - int(state["last_update"]) >= schedule.update_every)
+    if not due:
+        return state, False
+    return {"masks": build_masks(params, schedule, phase),
+            "phase": jnp.asarray(phase, jnp.int32),
+            "last_update": jnp.asarray(step, jnp.int32)}, True

@@ -1,0 +1,51 @@
+"""Quantization-aware training over the masked-sparse training form.
+
+``fake_quant_params`` walks a params tree that has **already been masked**
+(``masks.apply_mask_tree`` / ``train_loop.premask_params``) and replaces
+every sparse linear's weight by its straight-through fake-quantized image
+(``ste.fake_quant_weight``).  The forward pass then computes exactly what
+``pack_tree(..., quantize="int8")`` will serve — same amax scales, same
+round-to-nearest-even, same ±127 clip — while gradients pass straight
+through to the dense weight (see ``ste.py`` for the contract argument and
+DESIGN.md §11 for the table).
+
+Only *sparse* linears are fake-quantized: they are the nodes ``pack_tree``
+packs and ``quant.quantize_tree`` quantizes, so QAT mirrors the serving
+conversion exactly — dense projections (norms, embeddings, routers) serve
+in full precision and train in full precision.
+
+``granularity`` picks the scale unit for the (xwT-layout) serving form:
+``per_row`` (default) or ``per_group`` — matching
+``quant.quantize_packed(granularity=...)``.
+"""
+
+from __future__ import annotations
+
+from repro.sparsetrain.ste import GRANULARITIES, fake_quant_weight
+
+QAT_DTYPES = ("int8",)
+
+
+def validate_qat(qdtype, granularity: str = "per_row"):
+    if qdtype is not None and qdtype not in QAT_DTYPES:
+        raise ValueError(f"unknown QAT dtype {qdtype!r}; expected one of "
+                         f"{QAT_DTYPES}")
+    if granularity not in GRANULARITIES:
+        raise ValueError(f"unknown QAT granularity {granularity!r}; "
+                         f"expected one of {GRANULARITIES}")
+
+
+def fake_quant_params(params, granularity: str = "per_row"):
+    """Fake-quantize every sparse linear weight of a (masked) params tree."""
+    from repro.core.sparse_linear import node_sparsity
+
+    if isinstance(params, dict):
+        if "w" in params:
+            cfg = node_sparsity(params)
+            if cfg is not None:
+                w = params["w"]
+                return dict(params, w=fake_quant_weight(
+                    w, m=cfg.m, granularity=granularity))
+        return {k: fake_quant_params(v, granularity) for k, v in
+                params.items()}
+    return params

@@ -1,0 +1,102 @@
+"""Straight-through fake quantization matching ``repro.quant`` numerics.
+
+QAT works by running the *serving* arithmetic in the forward pass while
+keeping full-precision weights and straight-through gradients in the
+backward pass.  For the numerics to be worth anything, the fake-quant here
+must be bit-identical to what ``quant.quantize_packed`` serves — same scale
+formula (``amax / 127`` with the same zero-row guard), same rounding
+(``jnp.round``, round-half-to-even), same clip (±127).  Because packing
+keeps exactly the non-zero (masked) entries of each row/group, the amax of
+a *masked dense* row equals the amax of its packed values — so fake-quant
+on the masked training weight and real quantization of the packed serving
+weight produce the same grid (DESIGN.md §11, the QAT↔serve contract;
+asserted in tests/test_sparsetrain.py).
+
+Granularities mirror ``repro.quant`` for the xwT layout:
+
+* ``per_row``   — one scale per output row (the serving default).
+* ``per_group`` — one scale per (row, M-group), matching
+  ``quantize_packed(..., granularity="per_group")``.
+
+Gradients: the round is straight-through (identity); the clip masks
+gradients of saturated weights (standard QAT behaviour — a weight pinned at
+±127 stops receiving gradient pressure to grow); the scale is treated as a
+constant (``stop_gradient`` on the amax), matching the data-free
+calibration that recomputes it from the weights at pack time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+_EPS = 1e-12  # identical zero-row guard to repro.quant.amax_scales
+
+GRANULARITIES = ("per_row", "per_group")
+
+
+@jax.custom_vjp
+def ste_round(x: jax.Array) -> jax.Array:
+    """round-to-nearest-even with a straight-through (identity) gradient."""
+    return jnp.round(x)
+
+
+def _round_fwd(x):
+    return jnp.round(x), None
+
+
+def _round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_round_fwd, _round_bwd)
+
+
+def amax_scale(w: jax.Array, axis, keepdims: bool = True) -> jax.Array:
+    """``amax / 127`` over ``axis`` with the quantizer's zero-row guard
+    (all-zero units get scale 1/127 so the divide stays finite)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis,
+                   keepdims=keepdims)
+    return jnp.where(amax > _EPS, amax, 1.0) / QMAX
+
+
+def fake_quant(w: jax.Array, scales: jax.Array) -> jax.Array:
+    """Quantize-dequantize ``w`` on the int8 grid defined by ``scales``
+    (broadcastable to ``w``), straight-through backward.
+
+    The clip is *inclusive* straight-through: a weight landing exactly on
+    ±127 (every row/group max does, under amax scales) keeps its full
+    gradient — ``jnp.clip`` would halve it at the tie — while weights
+    strictly beyond the grid (possible under clip-search observers) get
+    zero, the standard QAT saturation behaviour."""
+    s = jax.lax.stop_gradient(scales.astype(jnp.float32))
+    r = ste_round(w.astype(jnp.float32) / s)
+    q = jnp.where(jnp.abs(r) <= QMAX, r,
+                  jax.lax.stop_gradient(jnp.clip(r, -QMAX, QMAX)))
+    return (q * s).astype(w.dtype)
+
+
+def fake_quant_weight(w: jax.Array, *, m: int = 0,
+                      granularity: str = "per_row") -> jax.Array:
+    """Fake-quantize a (…, O, K) dense weight on the grid its packed form
+    will serve at.
+
+    ``per_row`` scales over the full contraction dim K; ``per_group`` needs
+    the sparsity group size ``m`` and scales per (row, M-group) — exactly
+    the units :func:`repro.quant.amax_scales` uses on the packed layout.
+    """
+    if granularity not in GRANULARITIES:
+        raise ValueError(f"unknown granularity {granularity!r}; expected "
+                         f"one of {GRANULARITIES}")
+    if granularity == "per_row":
+        return fake_quant(w, amax_scale(w, axis=-1))
+    if m <= 0:
+        raise ValueError("per_group fake quantization needs the sparsity "
+                         "group size m")
+    if w.shape[-1] % m:
+        raise ValueError(f"contraction dim {w.shape[-1]} not divisible by "
+                         f"group size m={m}")
+    wg = w.reshape(*w.shape[:-1], w.shape[-1] // m, m)
+    out = fake_quant(wg, amax_scale(wg, axis=-1))
+    return out.reshape(w.shape)

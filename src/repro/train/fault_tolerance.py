@@ -37,16 +37,26 @@ class TrainingSupervisor:
     """Drives (params, opt_state) through ``train_step`` with restarts."""
 
     def __init__(self, cfg: SupervisorConfig, train_step: Callable,
-                 data_cfg: DataConfig, to_batch: Optional[Callable] = None):
+                 data_cfg: DataConfig, to_batch: Optional[Callable] = None,
+                 extra_state=None):
+        """``extra_state`` (optional) is any object with an
+        ``extra_state() -> pytree`` / ``load_extra_state(pytree)`` pair
+        (e.g. ``sparsetrain.SparseTrainer``): its tree is saved under the
+        checkpoint's ``extra`` key and pushed back on restore, so stateful
+        schedules (pruning masks, QAT observers) survive restarts with the
+        same bitwise-replay guarantee as params."""
         self.cfg = cfg
         self.train_step = train_step
         self.data_cfg = data_cfg
         self.to_batch = to_batch or (lambda b: b)
+        self.extra = extra_state
         self.restarts = 0
         self.pending_save = None
 
     def _save(self, state, step):
         tree = {"params": state[0], "opt": state[1]}
+        if self.extra is not None:
+            tree["extra"] = self.extra.extra_state()
         if self.cfg.async_save:
             if self.pending_save is not None:
                 self.pending_save.result()
@@ -58,9 +68,12 @@ class TrainingSupervisor:
         step = ckpt.latest_step(self.cfg.ckpt_dir)
         if step is None:
             return template_state, 0
-        tree = ckpt.restore({"params": template_state[0],
-                             "opt": template_state[1]},
-                            self.cfg.ckpt_dir, step, shardings)
+        template = {"params": template_state[0], "opt": template_state[1]}
+        if self.extra is not None:
+            template["extra"] = self.extra.extra_state()
+        tree = ckpt.restore(template, self.cfg.ckpt_dir, step, shardings)
+        if self.extra is not None:
+            self.extra.load_extra_state(tree["extra"])
         return (tree["params"], tree["opt"]), step
 
     def run(self, params, opt_state, num_steps: int,

@@ -68,9 +68,24 @@ def premask_params(params):
 
 def make_train_step(model, opt_cfg: adamw.AdamWConfig, *,
                     num_microbatches: int = 1, policy=None, mode=None,
-                    backend=None, donate: bool = True, premask: bool = True):
-    from repro.core.sparse_linear import resolve_policy
+                    backend=None, donate: bool = True, premask: bool = True,
+                    fake_quant=None, qat_granularity: str = "per_row"):
+    """Build a jittable ``train_step(params, opt_state, batch, step,
+    masks=None)``.
 
+    ``masks`` (optional, a ``sparsetrain.masks.build_masks`` tree) replaces
+    the per-step top-k premasking with externally scheduled masks — the
+    gradual-sparsification path of ``repro.sparsetrain``: the schedule
+    driver refreshes the mask tree on its own cadence and the step just
+    applies it straight-through.  ``fake_quant`` (e.g. ``"int8"``) adds
+    QAT: after masking, every sparse weight is fake-quantized on the int8
+    grid its packed serving form will use (``sparsetrain.qat``), at
+    ``qat_granularity`` (``per_row`` | ``per_group``).
+    """
+    from repro.core.sparse_linear import resolve_policy
+    from repro.sparsetrain.qat import validate_qat
+
+    validate_qat(fake_quant, qat_granularity)
     policy = resolve_policy(policy, mode, backend)
     mode = policy.mode
     # With premasking, the per-microbatch model runs in dense mode.
@@ -83,10 +98,22 @@ def make_train_step(model, opt_cfg: adamw.AdamWConfig, *,
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def train_step(params, opt_state, batch, step):
+    def train_step(params, opt_state, batch, step, masks=None):
         del step  # schedule uses opt_state.step
         use_premask = premask and mode == "masked"
-        if use_premask:
+        if masks is not None:
+            if not use_premask:
+                raise ValueError(
+                    "scheduled masks need mode='masked' with premask=True "
+                    "(the inner model must run dense so the mask is applied "
+                    "exactly once)")
+            from repro.sparsetrain.masks import apply_mask_tree
+
+            # scheduled masking: same one-masking-site semantics as
+            # premasking, but the mask comes from the sparsify schedule
+            # instead of a per-step top-k.
+            fwd_params = apply_mask_tree(params, masks)
+        elif use_premask:
             # mask once per step; the straight-through vjp of the mask is
             # the identity, so gradients w.r.t. the masked params ARE the
             # straight-through gradients for the dense params — no vjp
@@ -94,6 +121,10 @@ def make_train_step(model, opt_cfg: adamw.AdamWConfig, *,
             fwd_params = premask_params(params)
         else:
             fwd_params = params
+        if fake_quant is not None:
+            from repro.sparsetrain import qat
+
+            fwd_params = qat.fake_quant_params(fwd_params, qat_granularity)
 
         if num_microbatches == 1:
             (loss, metrics), grads = grad_fn(fwd_params, batch)

@@ -256,6 +256,50 @@ def test_param_specs_shard_scales_alongside_values():
     assert bspecs["mlp"]["gate"].values == P("model", None, None, None)
     assert bspecs["mlp"]["gate"].scales == P("model", None, None)
     assert bspecs["mlp"]["down"].scales == P(None, None, None)
+    # per-group xwT scales (O, G) shard the group axis under row-parallel —
+    # it tiles the contraction dim exactly like the values' group axis
+    gtree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)}},
+                      quantize="int8", granularity="per_group")
+    gspecs = part.param_specs(gtree)
+    assert gspecs["mlp"]["gate"].scales == P("model", None)
+    assert gspecs["mlp"]["down"].scales == P(None, "model")
+
+
+@pytest.mark.parametrize("batch", [5, 8])
+def test_xwT_q8_per_group_scales(batch):
+    """Per-group xwT granularity: scales (O, G), tighter error than
+    per-row, full backend parity (reference / Pallas / auto)."""
+    params, pw = _pw(o=16, k=64)
+    q = quantize_packed(pw, granularity="per_group")
+    assert q.scales.shape == (16, 4)
+    # per-group error bound: every value errs <= its group scale / 2
+    err = jnp.abs(q.dequantized_values() - pw.values)
+    assert bool(jnp.all(err <= 0.5 * q.scales[..., None] * (1 + 1e-6)))
+    # per-group grids are never coarser than the row grid
+    qr = quantize_packed(pw)
+    assert bool(jnp.all(q.scales <= qr.scales[:, None] * (1 + 1e-6)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, 64))
+    ys = {}
+    for backend in ("reference", "pallas_interpret", "auto"):
+        ys[backend] = np.asarray(sl.apply(
+            q, x, ExecPolicy(mode="packed", backend=backend)))
+    np.testing.assert_allclose(ys["reference"], ys["pallas_interpret"],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ys["reference"], ys["auto"],
+                               rtol=1e-4, atol=1e-5)
+    # matches the dequantized dense weight exactly (the oracle)
+    np.testing.assert_allclose(
+        ys["reference"], np.asarray(jnp.dot(x, q.to_dense().T)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_per_group_granularity_validation():
+    _, bpw = _block_pw()
+    with pytest.raises(ValueError, match="granularity"):
+        quantize_packed(bpw, granularity="per_group")   # block: already
+    params, pw = _pw()
+    with pytest.raises(ValueError, match="granularity"):
+        quantize_packed(pw, granularity="per_tensor")
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_arch
+from repro.core.sparse_linear import ExecPolicy
 from repro.launch.pack_tree import pack_tree
 from repro.models.families import build_model
 from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
@@ -98,7 +99,7 @@ def test_packed_serving_matches_masked(engine_setup):
     outs = {}
     for mode, p in (("masked", params), ("packed", pack_tree(params))):
         eng = ServeEngine(model, p, ServeConfig(num_slots=1, max_len=32),
-                          mode=mode)
+                          policy=ExecPolicy(mode=mode))
         eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
         eng.run_until_drained()
         outs[mode] = eng.completed[0].output
@@ -118,3 +119,17 @@ def test_eos_terminates(engine_setup):
                        max_new_tokens=10, eos_id=first))
     eng.run_until_drained()
     assert eng.completed[0].output == [first]
+
+
+def test_legacy_mode_backend_kwargs_warn(engine_setup):
+    """The mode=/backend= shim still works but is on the PR 4 removal
+    policy: one release of DeprecationWarning, then a ValueError."""
+    cfg, model, params = engine_setup
+    with pytest.warns(DeprecationWarning, match="policy=ExecPolicy"):
+        eng = ServeEngine(model, params,
+                          ServeConfig(num_slots=1, max_len=32),
+                          mode="masked", backend="reference")
+    assert eng.policy.mode == "masked"
+    with pytest.warns(DeprecationWarning):
+        ServeEngine(model, params, ServeConfig(num_slots=1, max_len=32),
+                    backend="reference")

@@ -1,0 +1,423 @@
+"""``repro.sparsetrain`` tests: packed-vs-dense gradient parity for every
+layout (xwT, block, q8 — ragged and scan-stacked shapes), the QAT↔serve
+numerics contract, gradual-sparsification schedules, and checkpoint resume
+mid-schedule preserving mask/scale state."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core import sparse_linear as sl
+from repro.core.sparse_linear import ExecPolicy
+from repro.core.sparsity import (
+    SparsityConfig,
+    pack_block,
+    pack_block_stacked,
+    prune,
+    random_sparse_dense,
+    satisfies_pattern,
+)
+from repro.data.pipeline import DataConfig
+from repro.models.families import build_model
+from repro.optim import adamw
+from repro.quant import quantize_packed
+from repro.sparsetrain import (
+    SparseTrainRecipe,
+    SparseTrainer,
+    anneal_schedule,
+    apply_mask_tree,
+    build_masks,
+    fake_quant_weight,
+    init_mask_state,
+    parse_pattern,
+    parse_schedule,
+    update_mask_state,
+)
+from repro.sparsetrain.masks import SparsifySchedule, node_phase_cfg
+from repro.train.fault_tolerance import (
+    SupervisorConfig,
+    TrainingSupervisor,
+    inject_failure_once,
+)
+from repro.train.train_loop import make_train_step
+
+CFG = SparsityConfig(2, 16)
+PACKED = ExecPolicy(mode="packed")
+
+
+def _data(key=0, o=24, k=64, b=5):
+    """Ragged (non-tile-multiple) shapes on purpose."""
+    rng = np.random.default_rng(key)
+    w = jnp.asarray(random_sparse_dense(rng, o, k, CFG))
+    x = jnp.asarray(rng.standard_normal((b, k)), jnp.float32)
+    dy = jnp.asarray(rng.standard_normal((b, o)), jnp.float32)
+    return w, x, dy
+
+
+def _dense_grads(w, x, dy):
+    def loss(wd, xx):
+        return jnp.sum(jnp.dot(xx, wd.T) * dy)
+
+    return jax.grad(loss, argnums=(0, 1))(w, x)
+
+
+# ---------------------------------------------------------------------------
+# Gradient parity: packed-vs-dense for every layout (acceptance <= 1e-4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["xwT", "block"])
+def test_float_packed_grad_parity(layout):
+    w, x, dy = _data()
+    pw = (pack_block(w, CFG, block_r=8) if layout == "block"
+          else sl.pack_params({"w": w}, CFG))
+    gw_d, gx_d = _dense_grads(w, x, dy)
+
+    gx = jax.grad(lambda xx: jnp.sum(sl.apply(pw, xx, PACKED) * dy))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-5)
+
+    gv = jax.grad(lambda v: jnp.sum(
+        sl.apply(pw.replace(values=v), x, PACKED) * dy))(pw.values)
+    # the packed-weight gradient must equal the dense gradient gathered at
+    # the packed coordinates — scatter it back to dense and compare on the
+    # support
+    g_dense = pw.replace(values=gv).to_dense()
+    support = (pw.to_dense() != 0).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(g_dense),
+                               np.asarray(gw_d * support),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_block_padded_slots_receive_no_gradient():
+    """Under-full groups pad with zero values; their gradient must stay 0
+    or fine-tuning would densify the pattern."""
+    w, x, dy = _data(key=3)
+    pw = pack_block(w, CFG, block_r=8)
+    gv = jax.grad(lambda v: jnp.sum(
+        sl.apply(pw.replace(values=v), x, PACKED) * dy))(pw.values)
+    assert bool(jnp.all(jnp.where(pw.values == 0, gv == 0, True)))
+
+
+@pytest.mark.parametrize("layout", ["xwT", "block"])
+def test_stacked_packed_grad_parity(layout):
+    """Scan-stacked weights (L, ...) — the model's per-layer slicing —
+    propagate per-slice gradients identical to the unstacked op."""
+    rng = np.random.default_rng(7)
+    ws = jnp.asarray(np.stack([random_sparse_dense(rng, 16, 32, CFG)
+                               for _ in range(3)]))
+    x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    if layout == "block":
+        pw = pack_block_stacked(ws, CFG, block_r=8)
+    else:
+        from repro.launch.pack_tree import pack_tree
+        from repro.core.sparsity import Static
+
+        pw = pack_tree({"w": ws, "sparsity": Static(CFG)})
+
+    def loss_stacked(values):
+        def body(carry, pw_slice):
+            return carry + jnp.sum(sl.apply(pw_slice, x, PACKED)), None
+
+        out, _ = jax.lax.scan(body, 0.0, pw.replace(values=values))
+        return out
+
+    gv = jax.grad(loss_stacked)(pw.values)
+    for i in range(3):
+        slice_pw = jax.tree.map(lambda a: a[i], pw)
+        gv_i = jax.grad(lambda v: jnp.sum(
+            sl.apply(slice_pw.replace(values=v), x, PACKED)))(slice_pw.values)
+        np.testing.assert_allclose(np.asarray(gv[i]), np.asarray(gv_i),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("granularity", ["per_row", "per_group"])
+def test_q8_grad_dx_parity_and_scale_gradient(granularity):
+    """Quantized xwT inside jax.grad: dx is exact against the dequantized
+    dense weight; dL/dscales matches finite differences."""
+    w, x, dy = _data(key=1)
+    q = quantize_packed(sl.pack_params({"w": w}, CFG),
+                        granularity=granularity)
+    wd = q.to_dense()
+    gx = jax.grad(lambda xx: jnp.sum(sl.apply(q, xx, PACKED) * dy))(x)
+    gx_d = jax.grad(lambda xx: jnp.sum(jnp.dot(xx, wd.T) * dy))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-5)
+
+    loss_s = lambda s: jnp.sum(sl.apply(q.replace(scales=s), x, PACKED) * dy)
+    gs = jax.grad(loss_s)(q.scales)
+    assert gs.shape == q.scales.shape
+    idx = (0,) if granularity == "per_row" else (0, 1)
+    eps = 1e-3
+    fd = (loss_s(q.scales.at[idx].add(eps)) - loss_s(q.scales)) / eps
+    assert float(gs[idx]) == pytest.approx(float(fd), rel=1e-2, abs=1e-2)
+
+
+def test_block_q8_grad_dx_parity_and_scale_gradient():
+    w, x, dy = _data(key=2, o=32)
+    q = quantize_packed(pack_block(w, CFG, block_r=8))
+    wd = q.to_dense()
+    gx = jax.grad(lambda xx: jnp.sum(sl.apply(q, xx, PACKED) * dy))(x)
+    gx_d = jax.grad(lambda xx: jnp.sum(jnp.dot(xx, wd.T) * dy))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-5)
+    loss_s = lambda s: jnp.sum(sl.apply(q.replace(scales=s), x, PACKED) * dy)
+    gs = jax.grad(loss_s)(q.scales)
+    assert gs.shape == q.scales.shape
+    eps = 1e-3
+    fd = (loss_s(q.scales.at[0, 0, 1].add(eps)) - loss_s(q.scales)) / eps
+    assert float(gs[0, 0, 1]) == pytest.approx(float(fd), rel=1e-2, abs=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# QAT <-> serve numerics contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("granularity", ["per_row", "per_group"])
+def test_fake_quant_matches_served_quantization(granularity):
+    """STE fake-quant of the masked dense weight == dequantized image of
+    the packed int8 serving weight, bit for bit (same amax grid, same
+    rounding, same clip)."""
+    rng = np.random.default_rng(5)
+    w = prune(jnp.asarray(rng.standard_normal((24, 64)), jnp.float32), CFG)
+    fq = fake_quant_weight(w, m=CFG.m, granularity=granularity)
+    q = quantize_packed(sl.pack_params({"w": w}, CFG),
+                        granularity=granularity)
+    np.testing.assert_array_equal(np.asarray(fq), np.asarray(q.to_dense()))
+
+
+def test_fake_quant_straight_through_gradient():
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    g = jax.grad(lambda ww: jnp.sum(fake_quant_weight(ww)))(w)
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(g))
+
+
+def test_fake_quant_error_bound():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    fq = fake_quant_weight(w)
+    bound = jnp.max(jnp.abs(w), axis=-1, keepdims=True) / 127 * 0.5
+    assert bool(jnp.all(jnp.abs(fq - w) <= bound * (1 + 1e-6)))
+
+
+# ---------------------------------------------------------------------------
+# Schedules and mask state
+# ---------------------------------------------------------------------------
+
+def test_parse_pattern_and_schedule():
+    assert parse_pattern("8:128") == SparsityConfig(8, 128, 1)
+    assert parse_pattern("8:128:2") == SparsityConfig(8, 128, 2)
+    with pytest.raises(ValueError, match="cannot parse"):
+        parse_pattern("8")
+
+    sched = parse_schedule("dense@0,2:32@4,2:16@10", 20, update_every=3)
+    assert [p.start for p in sched.phases] == [0, 4, 10]
+    assert sched.phases[0].cfg is None
+    assert sched.cfg_at(0) is None
+    assert sched.cfg_at(5) == SparsityConfig(2, 32)
+    assert sched.cfg_at(100) == SparsityConfig(2, 16)
+    assert sched.phase_index(9) == 1 and sched.phase_index(10) == 2
+
+    auto = parse_schedule("8:128", 100)
+    assert auto.phases[0].cfg is None
+    assert auto.phases[1].cfg == SparsityConfig(8, 256, 1)  # coarse N:2M
+    assert auto.phases[-1].cfg == SparsityConfig(8, 128, 1)
+    assert auto.freeze_after == 90
+
+    # round-trips through the canonical spec string
+    assert parse_schedule("8:128:2", 100).phases[-1].cfg.k == 2
+
+
+def test_schedule_validation():
+    from repro.sparsetrain import SparsifyPhase
+
+    with pytest.raises(ValueError, match="start at step 0"):
+        SparsifySchedule(phases=(SparsifyPhase(5, CFG),))
+    with pytest.raises(ValueError, match="final phase"):
+        parse_schedule("dense@0", 10)
+    with pytest.raises(ValueError, match="increasing"):
+        parse_schedule("dense@0,2:16@5,2:32@5", 10)
+
+
+def test_node_phase_cfg_resolution():
+    node = SparsityConfig(2, 16)
+    # dense phase
+    assert node_phase_cfg(None, node, 64, False) is None
+    # final phase always snaps to the node's own (serving) config
+    assert node_phase_cfg(SparsityConfig(8, 128), node, 64, True) == node
+    # divisible: phase config applies verbatim
+    assert node_phase_cfg(SparsityConfig(2, 32), node, 64, False) == \
+        SparsityConfig(2, 32)
+    # not divisible: density-matched at the node's native group size
+    got = node_phase_cfg(SparsityConfig(3, 48), node, 64, False)
+    assert got.m == node.m and got.n_effective == 1  # round(16 * 3/48)
+
+
+def test_build_masks_phases_and_pattern():
+    cfg = get_arch("stablelm_3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = parse_schedule("dense@0,2:32@2,2:16@5", 12, update_every=2)
+
+    dense_masks = build_masks(params, sched, 0)
+    leaves = [m for m in jax.tree.leaves(dense_masks) if m is not None]
+    assert leaves and all(bool(jnp.all(m)) for m in leaves)
+
+    final_masks = build_masks(params, sched, 2)
+
+    def check(node, masks):
+        if isinstance(node, dict):
+            if "w" in node and sl.node_sparsity(node) is not None:
+                ncfg = sl.node_sparsity(node)
+                masked = node["w"] * masks.astype(node["w"].dtype)
+                flat = masked.reshape(-1, masked.shape[-1])
+                assert bool(satisfies_pattern(flat, ncfg))
+                return
+            for k in node:
+                check(node[k], masks[k] if isinstance(masks, dict) else None)
+
+    check(params, final_masks)
+
+
+def test_update_mask_state_cadence_and_freeze():
+    cfg = get_arch("stablelm_3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = parse_schedule("dense@0,2:32@2,2:16@5", 20, update_every=3)
+    sched = SparsifySchedule(phases=sched.phases, update_every=3,
+                             freeze_after=9)
+    state = init_mask_state(params, sched, 0)
+    assert int(state["phase"]) == 0
+
+    state, changed = update_mask_state(params, state, sched, 1)
+    assert not changed                       # dense phase, nothing to do
+    state, changed = update_mask_state(params, state, sched, 2)
+    assert changed and int(state["phase"]) == 1   # phase transition
+    state, changed = update_mask_state(params, state, sched, 4)
+    assert not changed                       # update_every=3 not yet due
+    state, changed = update_mask_state(params, state, sched, 5)
+    assert changed and int(state["phase"]) == 2   # next transition
+    state, changed = update_mask_state(params, state, sched, 8)
+    assert changed                           # within-phase refresh
+    state, changed = update_mask_state(params, state, sched, 11)
+    assert not changed                       # frozen at 9
+    # ...but a (hypothetical) later phase transition still applies while
+    # frozen: simulate by rewinding the recorded phase.
+    state["phase"] = jnp.asarray(1, jnp.int32)
+    state, changed = update_mask_state(params, state, sched, 12)
+    assert changed and int(state["phase"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Train-step integration + checkpoint resume mid-schedule
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("stablelm_3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_train_step_with_masks_and_qat(small_model):
+    cfg, model, params = small_model
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=10, warmup_steps=1)
+    opt = adamw.init(opt_cfg, params)
+    sched = parse_schedule("2:16", 10)
+    masks = init_mask_state(params, sched, 6)["masks"]   # sparse phase
+    step = jax.jit(make_train_step(model, opt_cfg, fake_quant="int8"))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+    }
+    losses = []
+    for i in range(6):
+        params, opt, m = step(params, opt, batch, i, masks)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
+
+
+def test_masks_require_premask_mode(small_model):
+    cfg, model, params = small_model
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=4, warmup_steps=1)
+    opt = adamw.init(opt_cfg, params)
+    sched = parse_schedule("2:16", 4)
+    masks = init_mask_state(params, sched, 3)["masks"]
+    step = make_train_step(model, opt_cfg, premask=False)
+    with pytest.raises(ValueError, match="premask"):
+        step(params, opt, {"tokens": jnp.zeros((2, 8), jnp.int32),
+                           "targets": jnp.zeros((2, 8), jnp.int32)},
+             0, masks)
+
+
+def _run_sparse_training(model, params, opt_cfg, data_cfg, ckpt_dir, steps,
+                         injector=None, qat=None):
+    sched = parse_schedule("dense@0,2:32@2,2:16@5", steps, update_every=3)
+    trainer = SparseTrainer(model, opt_cfg,
+                            SparseTrainRecipe(schedule=sched, qat=qat))
+    trainer.init_state(params)
+    opt = adamw.init(opt_cfg, params)
+    sup = TrainingSupervisor(
+        SupervisorConfig(ckpt_dir=ckpt_dir, ckpt_every=4),
+        trainer.train_step, data_cfg, extra_state=trainer)
+    p, o, m, restarts = sup.run(params, opt, steps,
+                                failure_injector=injector)
+    return p, trainer, restarts
+
+
+def test_resume_mid_schedule_bitwise(tmp_path, small_model):
+    """A failure + restore mid-schedule reproduces the uninterrupted
+    trajectory bitwise, mask state included (the checkpoint carries it)."""
+    cfg, model, params = small_model
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=12, warmup_steps=1)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4)
+
+    p_ok, tr_ok, r_ok = _run_sparse_training(
+        model, params, opt_cfg, data_cfg, str(tmp_path / "a"), 12)
+    p_f, tr_f, r_f = _run_sparse_training(
+        model, params, opt_cfg, data_cfg, str(tmp_path / "b"), 12,
+        injector=inject_failure_once(9))
+    assert r_ok == 0 and r_f == 1
+    for a, b in zip(jax.tree.leaves(p_ok), jax.tree.leaves(p_f)):
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # mask state (phase, refresh step, every mask) is identical too
+    assert int(tr_ok.state["phase"]) == int(tr_f.state["phase"])
+    assert int(tr_ok.state["last_update"]) == int(tr_f.state["last_update"])
+    for a, b in zip(jax.tree.leaves(tr_ok.state["masks"]),
+                    jax.tree.leaves(tr_f.state["masks"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_with_different_schedule_raises(tmp_path, small_model):
+    cfg, model, params = small_model
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=6, warmup_steps=1)
+    sched_a = parse_schedule("2:16", 6)
+    trainer_a = SparseTrainer(model, opt_cfg,
+                              SparseTrainRecipe(schedule=sched_a))
+    trainer_a.init_state(params)
+    sched_b = parse_schedule("2:16", 6, update_every=7)
+    trainer_b = SparseTrainer(model, opt_cfg,
+                              SparseTrainRecipe(schedule=sched_b))
+    with pytest.raises(ValueError, match="schedule"):
+        trainer_b.load_extra_state(trainer_a.extra_state())
+
+
+def test_finalize_bakes_masks_and_packs(small_model):
+    """finalize() makes the weights satisfy their patterns exactly, so
+    they pack losslessly and apply identically masked vs packed."""
+    cfg, model, params = small_model
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=4, warmup_steps=1)
+    sched = parse_schedule("2:16", 4)
+    trainer = SparseTrainer(model, opt_cfg,
+                            SparseTrainRecipe(schedule=sched))
+    trainer.init_state(params, step=3)       # already in the final phase
+    baked = trainer.finalize(params)
+    from repro.launch.train import verify_final_masks
+
+    assert verify_final_masks(baked) > 0
