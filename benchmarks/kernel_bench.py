@@ -143,12 +143,25 @@ def _zoo_cases(quick: bool):
 
 
 def _measure_thunk(thunk, warmup, iters):
-    from repro.tune import measure
-    return measure(thunk, warmup=warmup, iters=iters)
+    """Returns ``(first_call_s, steady_s)``: the first call pays jit
+    compilation, steady state is the min over ``iters`` fenced calls
+    (``repro.tune.measure``'s estimator) — reported separately so compile
+    time never pollutes the tuned-vs-dense steady-state ratios."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(thunk())
+    first = time.perf_counter() - t0
+    for _ in range(max(0, warmup - 1)):
+        jax.block_until_ready(thunk())
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk())
+        best = min(best, time.perf_counter() - t0)
+    return first, best
 
 
 def _case_entry(name, key, shape, t_dense, default, t_default, res,
-                verbose):
+                verbose, t_dense_compile=None, t_default_compile=None):
     """Shared tuned-vs-default-vs-dense record (one schema for every op —
     benchmarks/compare_bench.py parses these)."""
     # the default was measured twice (eagerly above and inside the tuner);
@@ -162,9 +175,13 @@ def _case_entry(name, key, shape, t_dense, default, t_default, res,
         "problem": key,
         "shape": shape,
         "dense_us": t_dense * 1e6,
+        "dense_compile_us": (None if t_dense_compile is None
+                             else t_dense_compile * 1e6),
         "default": {"backend": default.backend,
                     "params": default.params,
-                    "us": t_default * 1e6},
+                    "us": t_default * 1e6,
+                    "compile_us": (None if t_default_compile is None
+                                   else t_default_compile * 1e6)},
         "tuned": {"backend": res.best.backend,
                   "params": res.best.params,
                   "us": res.best.measured_us},
@@ -207,7 +224,8 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
 
         # 1. dense baseline (what serving pays without the paper's format)
         dense_mm = jax.jit(lambda xx, ww: xx @ ww.T)
-        t_dense = _measure_thunk(lambda: dense_mm(x, w_dense), warmup, iters)
+        t_dense_c, t_dense = _measure_thunk(
+            lambda: dense_mm(x, w_dense), warmup, iters)
 
         # 2. heuristic default dispatch (the pre-tuning hardcoded choice),
         #    jitted like the tuner measures and like serving dispatches
@@ -215,7 +233,7 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         dvar = tune.get_variant("xwT", default.backend)
         default_jf = jax.jit(lambda xx, vv, ii: dvar.call(
             xx, vv, ii, sp, (o, k), **default.params))
-        t_default = _measure_thunk(
+        t_default_c, t_default = _measure_thunk(
             lambda: default_jf(x, p.values, p.indices), warmup, iters)
 
         # 3. full autotune (defaults are always in the measured set, so
@@ -226,7 +244,8 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         results.append(_case_entry(
             name, key, {"out": o, "k": k, "batch": bt,
                         "pattern": sp.pattern_name()},
-            t_dense, default, t_default, res, verbose))
+            t_dense, default, t_default, res, verbose,
+            t_dense_compile=t_dense_c, t_default_compile=t_default_c))
 
     # --- two-level block layout (xwT_block dispatch) ----------------------
     for name, o, k, bt, sp in BLOCK_CASES[:1 if quick else None]:
@@ -241,13 +260,14 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         seen.add(key)
 
         dense_mm = jax.jit(lambda xx, ww: xx @ ww.T)
-        t_dense = _measure_thunk(lambda: dense_mm(x, w_dense), warmup, iters)
+        t_dense_c, t_dense = _measure_thunk(
+            lambda: dense_mm(x, w_dense), warmup, iters)
 
         default = tune.heuristic_default(problem)
         dvar = tune.get_variant("xwT_block", default.backend)
         default_jf = jax.jit(lambda xx, vv, ii, ag: dvar.call(
             xx, vv, ii, ag, sp, (o, k), **default.params))
-        t_default = _measure_thunk(
+        t_default_c, t_default = _measure_thunk(
             lambda: default_jf(x, pw.values, pw.indices, pw.active_groups),
             warmup, iters)
 
@@ -258,7 +278,8 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
             name, key, {"out": o, "k": k, "batch": bt,
                         "pattern": sp.pattern_name(),
                         "block_geom": list(pw.block_geom)},
-            t_dense, default, t_default, res, verbose))
+            t_dense, default, t_default, res, verbose,
+            t_dense_compile=t_dense_c, t_default_compile=t_default_c))
 
     # --- int8 quantized packed weights (repro.quant, w8a16 dispatch) ------
     from repro.quant import quantize_packed
@@ -279,13 +300,14 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         seen.add(key)
 
         dense_mm = jax.jit(lambda xx, ww: xx @ ww.T)
-        t_dense = _measure_thunk(lambda: dense_mm(x, w_dense), warmup, iters)
+        t_dense_c, t_dense = _measure_thunk(
+            lambda: dense_mm(x, w_dense), warmup, iters)
 
         default = tune.heuristic_default(problem)
         dvar = tune.get_variant("xwT_q8", default.backend)
         default_jf = jax.jit(lambda xx, vv, ii, ss: dvar.call(
             xx, vv, ii, ss, sp, (o, k), **default.params))
-        t_default = _measure_thunk(
+        t_default_c, t_default = _measure_thunk(
             lambda: default_jf(x, q.values, q.indices, q.scales),
             warmup, iters)
 
@@ -295,7 +317,8 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         results.append(_case_entry(
             name, key, {"out": o, "k": k, "batch": bt,
                         "pattern": sp.pattern_name(), "qdtype": "int8"},
-            t_dense, default, t_default, res, verbose))
+            t_dense, default, t_default, res, verbose,
+            t_dense_compile=t_dense_c, t_default_compile=t_default_c))
 
     for name, o, k, bt, sp in Q8_BLOCK_CASES:
         w_dense = jnp.asarray(prune(jnp.asarray(
@@ -309,13 +332,14 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         seen.add(key)
 
         dense_mm = jax.jit(lambda xx, ww: xx @ ww.T)
-        t_dense = _measure_thunk(lambda: dense_mm(x, w_dense), warmup, iters)
+        t_dense_c, t_dense = _measure_thunk(
+            lambda: dense_mm(x, w_dense), warmup, iters)
 
         default = tune.heuristic_default(problem)
         dvar = tune.get_variant("xwT_block_q8", default.backend)
         default_jf = jax.jit(lambda xx, vv, ii, ag, ss: dvar.call(
             xx, vv, ii, ag, ss, sp, (o, k), **default.params))
-        t_default = _measure_thunk(
+        t_default_c, t_default = _measure_thunk(
             lambda: default_jf(x, q.values, q.indices, q.active_groups,
                                q.scales), warmup, iters)
 
@@ -326,7 +350,10 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
             name, key, {"out": o, "k": k, "batch": bt,
                         "pattern": sp.pattern_name(),
                         "block_geom": list(q.block_geom), "qdtype": "int8"},
-            t_dense, default, t_default, res, verbose))
+            t_dense, default, t_default, res, verbose,
+            t_dense_compile=t_dense_c, t_default_compile=t_default_c))
+
+    from repro import obs
 
     blob = {
         "platform": tune.current_platform(),
@@ -334,6 +361,9 @@ def run_autotune(quick: bool = False, out_path: str = DEFAULT_OUT,
         "generated_by": "benchmarks/kernel_bench.py --autotune"
                         + (" --quick" if quick else ""),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        # host/python/jax provenance so two BENCH files are comparable
+        # (or visibly not) before comparing their numbers
+        "meta": obs.run_metadata(),
         "cases": results,
     }
     with open(out_path, "w") as f:

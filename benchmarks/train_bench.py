@@ -48,13 +48,20 @@ DEFAULT_OUT = "BENCH_train.json"
 
 
 def _time(fn, *args, warmup=2, iters=5):
-    for _ in range(warmup):
+    """Returns ``(first_call_ms, steady_ms)``: the first call pays jit
+    compilation (tracked separately so compile-time drift never shows up as
+    a step-time regression), steady state averages ``iters`` post-warmup
+    calls."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    first_ms = (time.perf_counter() - t0) * 1e3
+    for _ in range(max(0, warmup - 1)):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e3   # ms
+    return first_ms, (time.perf_counter() - t0) / iters * 1e3   # ms
 
 
 def bench_model_steps(arch: str, batch: int, seq: int, warmup: int,
@@ -75,10 +82,12 @@ def bench_model_steps(arch: str, batch: int, seq: int, warmup: int,
 
     def add(name, step_fn, *extra):
         fn = jax.jit(step_fn)
-        ms = _time(lambda: fn(params, opt, b, 0, *extra), warmup=warmup,
-                   iters=iters)
-        cases.append({"name": name, "step_ms": round(ms, 3)})
-        print(f"  {name:24s} {ms:9.2f} ms/step")
+        compile_ms, ms = _time(lambda: fn(params, opt, b, 0, *extra),
+                               warmup=warmup, iters=iters)
+        cases.append({"name": name, "step_ms": round(ms, 3),
+                      "compile_ms": round(compile_ms, 3)})
+        print(f"  {name:24s} {ms:9.2f} ms/step "
+              f"(compile {compile_ms:7.0f} ms)")
 
     add("dense", make_train_step(model, opt_cfg,
                                  policy=ExecPolicy(mode="dense")))
@@ -120,9 +129,10 @@ def bench_packed_finetune(warmup: int, iters: int):
             g = jax.grad(loss)(values)
             return values - 1e-3 * g
 
-        ms = _time(step, pw.values, warmup=warmup, iters=iters)
+        compile_ms, ms = _time(step, pw.values, warmup=warmup, iters=iters)
         out.append({"name": f"packed_finetune_{layout}",
-                    "step_ms": round(ms, 3)})
+                    "step_ms": round(ms, 3),
+                    "compile_ms": round(compile_ms, 3)})
         print(f"  packed_finetune_{layout:18s} {ms:9.2f} ms/step "
               f"({o}x{k}, batch {bsz})")
     return out
@@ -150,8 +160,12 @@ def main():
 
     by_name = {c["name"]: c["step_ms"] for c in cases}
     dense = by_name["dense"]
+    from repro import obs
+
     blob = {
-        "meta": {"arch": cfg.name, "reduced": True, "batch": args.batch,
+        # run_metadata first: the explicit keys below win on collision
+        "meta": {**obs.run_metadata(),
+                 "arch": cfg.name, "reduced": True, "batch": args.batch,
                  "seq": args.seq, "iters": args.iters,
                  "platform": jax.default_backend(),
                  "jax": jax.__version__,

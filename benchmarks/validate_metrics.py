@@ -1,0 +1,152 @@
+"""Validate a ``--metrics-out`` JSON snapshot (CI metrics-smoke gate).
+
+Checks a ``repro.obs`` metrics snapshot against
+``benchmarks/metrics_schema.json`` plus content requirements — the schema
+proves the *shape*, the ``--require-*`` flags prove the run actually
+*observed* something:
+
+    PYTHONPATH=src python benchmarks/validate_metrics.py serve_metrics.json \
+        --schema benchmarks/metrics_schema.json \
+        --require-counter serve_requests_completed_total \
+        --require-counter kernel_dispatch_total \
+        --require-histogram serve_decode_token_seconds
+
+``--require-counter NAME`` demands at least one entry of that family (any
+labels) with value > 0; ``--require-histogram NAME`` demands count > 0 and
+internal consistency (sum(counts) == count, len(counts) == len(buckets)+1).
+
+The validator implements the JSON-Schema subset the checked-in schema uses
+(type, required, properties, additionalProperties-as-schema, items,
+minimum, minItems) by hand — this container has no ``jsonschema`` package
+and the repo stays dependency-free.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "number": (int, float),
+    "integer": int,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def validate(instance, schema: dict, path: str = "$") -> list:
+    """Returns a list of 'path: message' error strings (empty == valid)."""
+    errors = []
+    t = schema.get("type")
+    if t is not None:
+        py = _TYPES[t]
+        ok = isinstance(instance, py)
+        if ok and t in ("number", "integer") and isinstance(instance, bool):
+            ok = False   # bool is an int subclass; JSON says it isn't
+        if not ok:
+            errors.append(f"{path}: expected {t}, got "
+                          f"{type(instance).__name__}")
+            return errors   # deeper checks would only cascade
+    if isinstance(instance, dict):
+        for key in schema.get("required", ()):
+            if key not in instance:
+                errors.append(f"{path}: missing required key {key!r}")
+        props = schema.get("properties", {})
+        for key, sub in props.items():
+            if key in instance:
+                errors += validate(instance[key], sub, f"{path}.{key}")
+        addl = schema.get("additionalProperties")
+        if isinstance(addl, dict):
+            for key, val in instance.items():
+                if key not in props:
+                    errors += validate(val, addl, f"{path}.{key}")
+    if isinstance(instance, list):
+        if "minItems" in schema and len(instance) < schema["minItems"]:
+            errors.append(f"{path}: has {len(instance)} items, needs >= "
+                          f"{schema['minItems']}")
+        items = schema.get("items")
+        if isinstance(items, dict):
+            for i, val in enumerate(instance):
+                errors += validate(val, items, f"{path}[{i}]")
+    if isinstance(instance, (int, float)) and not isinstance(instance, bool):
+        if "minimum" in schema and instance < schema["minimum"]:
+            errors.append(f"{path}: {instance} < minimum "
+                          f"{schema['minimum']}")
+    return errors
+
+
+def check_counter(snap: dict, name: str) -> list:
+    entries = [c for c in snap.get("counters", []) if c.get("name") == name]
+    if not entries:
+        return [f"required counter {name!r} is absent"]
+    if not any(c.get("value", 0) > 0 for c in entries):
+        return [f"required counter {name!r} never incremented "
+                f"(all {len(entries)} entries are 0)"]
+    return []
+
+
+def check_histogram(snap: dict, name: str) -> list:
+    errors = []
+    entries = [h for h in snap.get("histograms", [])
+               if h.get("name") == name]
+    if not entries:
+        return [f"required histogram {name!r} is absent"]
+    for h in entries:
+        label = f"{name}{h.get('labels') or ''}"
+        if len(h["counts"]) != len(h["buckets"]) + 1:
+            errors.append(f"{label}: len(counts)={len(h['counts'])} != "
+                          f"len(buckets)+1={len(h['buckets']) + 1}")
+        if sum(h["counts"]) != h["count"]:
+            errors.append(f"{label}: sum(counts)={sum(h['counts'])} != "
+                          f"count={h['count']}")
+    if not any(h.get("count", 0) > 0 for h in entries):
+        errors.append(f"required histogram {name!r} has no observations")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("snapshot", help="metrics JSON written by --metrics-out")
+    ap.add_argument("--schema", default="benchmarks/metrics_schema.json")
+    ap.add_argument("--require-counter", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless this counter family exists with a "
+                         "nonzero entry (repeatable)")
+    ap.add_argument("--require-histogram", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless this histogram family has "
+                         "observations and is internally consistent "
+                         "(repeatable)")
+    args = ap.parse_args(argv)
+
+    with open(args.snapshot) as f:
+        snap = json.load(f)
+    with open(args.schema) as f:
+        schema = json.load(f)
+
+    errors = validate(snap, schema)
+    for name in args.require_counter:
+        errors += check_counter(snap, name)
+    for name in args.require_histogram:
+        errors += check_histogram(snap, name)
+
+    if errors:
+        print(f"{args.snapshot}: INVALID ({len(errors)} errors)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"{args.snapshot}: ok ({len(snap.get('counters', []))} counters, "
+          f"{len(snap.get('gauges', []))} gauges, "
+          f"{len(snap.get('histograms', []))} histograms"
+          + (f"; required: {', '.join(args.require_counter + args.require_histogram)}"
+             if args.require_counter or args.require_histogram else "")
+          + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

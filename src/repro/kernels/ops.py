@@ -28,6 +28,15 @@ The ``xwT`` custom_vjp lives here; the ``xwT_block`` / ``xwT_q8`` /
 ``xwT_block_q8`` ops route through ``repro.sparsetrain.vjp`` (dequant-and-
 scatter backward through the jnp references), so ``jax.grad`` through
 ``ExecPolicy(mode="packed")`` is legal for every layout (DESIGN.md §11).
+
+Observability (``repro.obs``, DESIGN.md §12): every dispatch increments a
+``kernel_dispatch_total{op, backend}`` counter on the default registry and
+runs the selected variant under an ``obs.annotate("demm/<op>/<backend>")``
+scope.  Dispatch happens at jit-trace time, so the counters audit *which
+variant each traced matmul resolved to* (making ``backend="auto"``
+decisions inspectable) at zero steady-state cost, and the named scopes make
+the lowered Pallas kernels show up named in TensorBoard/perfetto traces
+(``obs.profile``).
 """
 
 from __future__ import annotations
@@ -49,6 +58,16 @@ from repro.core.sparsity import (
 # Baseline backends always registered; `repro.tune.backend_names("xwT")` has
 # the live list (plus "auto", resolved through the tuning cache).
 BACKENDS = ("reference", "pallas", "pallas_interpret", "auto")
+
+
+def _count_dispatch(op: str, backend: str):
+    """Trace-time dispatch audit counter (op, resolved backend)."""
+    from repro import obs
+
+    obs.metrics().counter(
+        "kernel_dispatch_total",
+        help="DeMM matmul dispatches per (registry op, resolved backend)",
+        op=op, backend=backend).inc()
 
 
 def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
@@ -104,7 +123,7 @@ def demm_matmul_block(x: jax.Array, pw: PackedWeight,
     the tuning cache.  Both ops carry a custom_vjp
     (``repro.sparsetrain.vjp``), so this path is legal inside ``jax.grad``.
     """
-    from repro import tune
+    from repro import obs, tune
     from repro.sparsetrain import vjp as st_vjp
 
     params = {}
@@ -112,25 +131,31 @@ def demm_matmul_block(x: jax.Array, pw: PackedWeight,
         choice = tune.resolve_xwT_block(x.shape, pw, x.dtype)
         backend, params = choice.backend, choice.params
     ptuple = tuple(sorted(params.items()))
-    if pw.qdtype is not None:
-        return st_vjp.xwT_block_q8_grad(x, pw.values, pw.indices,
-                                        pw.active_groups, pw.scales, pw.cfg,
-                                        tuple(pw.dense_shape), backend,
-                                        ptuple)
-    return st_vjp.xwT_block_grad(x, pw.values, pw.indices, pw.active_groups,
-                                 pw.cfg, tuple(pw.dense_shape), backend,
-                                 ptuple)
+    op = "xwT_block_q8" if pw.qdtype is not None else "xwT_block"
+    _count_dispatch(op, backend)
+    with obs.annotate(f"demm/{op}/{backend}"):
+        if pw.qdtype is not None:
+            return st_vjp.xwT_block_q8_grad(x, pw.values, pw.indices,
+                                            pw.active_groups, pw.scales,
+                                            pw.cfg, tuple(pw.dense_shape),
+                                            backend, ptuple)
+        return st_vjp.xwT_block_grad(x, pw.values, pw.indices,
+                                     pw.active_groups, pw.cfg,
+                                     tuple(pw.dense_shape), backend, ptuple)
 
 
 def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):
-    from repro import tune
+    from repro import obs, tune
 
     params = {}
     if backend == "auto":
         choice = tune.resolve_xwT(x.shape, w_shape, cfg, x.dtype)
         backend, params = choice.backend, choice.params
     variant = tune.get_variant("xwT", backend)
-    return variant.call(x, values, indices, cfg, tuple(w_shape), **params)
+    _count_dispatch("xwT", backend)
+    with obs.annotate(f"demm/xwT/{backend}"):
+        return variant.call(x, values, indices, cfg, tuple(w_shape),
+                            **params)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -175,22 +200,24 @@ def demm_matmul_xwT_q8(x, values, indices, scales, cfg: SparsityConfig,
     fine-tune values on the float packed form and re-quantize with
     ``repro.quant.quantize_packed``.
     """
-    from repro import tune
+    from repro import obs, tune
     from repro.sparsetrain import vjp as st_vjp
 
     params = {}
     if backend == "auto":
         choice = tune.resolve_xwT_q8(x.shape, w_shape, cfg, x.dtype)
         backend, params = choice.backend, choice.params
-    return st_vjp.xwT_q8_grad(x, values, indices, scales, cfg,
-                              tuple(w_shape), backend,
-                              tuple(sorted(params.items())))
+    _count_dispatch("xwT_q8", backend)
+    with obs.annotate(f"demm/xwT_q8/{backend}"):
+        return st_vjp.xwT_q8_grad(x, values, indices, scales, cfg,
+                                  tuple(w_shape), backend,
+                                  tuple(sorted(params.items())))
 
 
 def demm_spmm(values, indices, b, cfg: SparsityConfig, a_shape,
               backend: str = "reference"):
     """C = A_sparse @ B (paper orientation)."""
-    from repro import tune
+    from repro import obs, tune
 
     params = {}
     if backend == "auto":
@@ -201,4 +228,7 @@ def demm_spmm(values, indices, b, cfg: SparsityConfig, a_shape,
         raise ValueError(
             f"backend {backend!r} is measure-only (host repacking); use it "
             "through repro.tune.autotune_spmm or call its kernel directly")
-    return variant.call(values, indices, b, cfg, tuple(a_shape), **params)
+    _count_dispatch("spmm", backend)
+    with obs.annotate(f"demm/spmm/{backend}"):
+        return variant.call(values, indices, b, cfg, tuple(a_shape),
+                            **params)

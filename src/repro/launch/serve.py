@@ -17,16 +17,26 @@ shapes first (results persist in the tuning cache for later runs).
 checkpoint before packing — the serve half of the dense → prune →
 train/QAT → pack → serve pipeline (a ``--sparsify`` run's final checkpoint
 has its masks baked in, so it packs losslessly).
+
+Observability (``repro.obs``, DESIGN.md §12): ``--metrics-out m.json``
+writes the process-wide metrics snapshot after the drain (request/token
+counters, queue-wait/decode-latency histograms, kernel-dispatch and
+tune-cache counters; a ``.prom`` suffix selects Prometheus text
+exposition), ``--trace-out t.jsonl`` dumps the JSONL event trace, and
+``--profile-dir d/`` wraps serving in a jax profiler trace for
+TensorBoard/perfetto with every DeMM kernel named via ``obs.annotate``.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ARCH_IDS, get_arch
 from repro.core.sparse_linear import ExecPolicy
 from repro.launch.pack_tree import pack_tree
@@ -106,6 +116,16 @@ def main():
     ap.add_argument("--autotune", action="store_true",
                     help="pre-measure tile configs for the packed decode "
                          "shapes (implies --backend auto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot here after the drain "
+                         "(.prom/.txt => Prometheus text exposition, "
+                         "anything else => JSON)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the JSONL event trace (request lifecycle "
+                         "spans/events, autotune measurements) here")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax profiler trace of the serve run "
+                         "into this directory (TensorBoard/perfetto)")
     args = ap.parse_args()
     if args.autotune:
         args.backend = "auto"
@@ -126,6 +146,7 @@ def main():
                         else "")
                      + f" (valid: {sorted(valid)} or 'auto')")
 
+    log = obs.get_logger("launch.serve")
     cfg = get_arch(args.arch)
     if not args.full:
         cfg = cfg.reduced()
@@ -162,23 +183,35 @@ def main():
                 "(was it trained with the other of --full/--reduced, or a "
                 "different --arch?):\n" + "\n".join(mismatch[:8]))
         params = restored
-        print(f"restored params from {args.ckpt_dir} step {step}")
+        log.info("restored params", ckpt_dir=args.ckpt_dir, step=step)
 
-    engine = run_serve(model, params, cfg.vocab_size, packed=args.packed,
-                       layout=args.layout, quantize=args.quantize,
-                       granularity=args.quantize_granularity,
-                       backend=args.backend, autotune=args.autotune,
-                       requests=args.requests, slots=args.slots,
-                       max_new=args.max_new, max_len=args.max_len)
+    profile_ctx = (obs.profile(args.profile_dir) if args.profile_dir
+                   else contextlib.nullcontext())
+    with profile_ctx:
+        engine = run_serve(model, params, cfg.vocab_size, packed=args.packed,
+                           layout=args.layout, quantize=args.quantize,
+                           granularity=args.quantize_granularity,
+                           backend=args.backend, autotune=args.autotune,
+                           requests=args.requests, slots=args.slots,
+                           max_new=args.max_new, max_len=args.max_len)
     dt = engine.drain_seconds
     mode = "packed" if args.packed else "masked"
     total_tokens = sum(len(r.output) for r in engine.completed)
     tag = mode if not args.quantize else f"{mode}+{args.quantize}"
-    print(f"served {len(engine.completed)} requests, {total_tokens} tokens "
-          f"in {dt:.1f}s ({total_tokens/max(dt,1e-9):.1f} tok/s, mode={tag})")
+    log.info("served", requests=len(engine.completed), tokens=total_tokens,
+             seconds=round(dt, 3),
+             tok_s=round(total_tokens / max(dt, 1e-9), 1), mode=tag)
     for r in engine.completed[:3]:
-        print(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
-              f"-> {r.output[:8]}")
+        log.info(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
+                 f"-> {r.output[:8]}")
+    if args.metrics_out:
+        engine.metrics.write(args.metrics_out)
+        log.info("wrote metrics snapshot", path=args.metrics_out)
+    if args.trace_out:
+        engine.metrics.trace.write(args.trace_out)
+        log.info("wrote event trace", path=args.trace_out)
+    if args.profile_dir:
+        log.info("wrote profiler trace", dir=args.profile_dir)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,11 @@ On the CPU container this runs REDUCED configs on a single device (the
 default when no ``--full`` is given off-TPU; the multi-device production
 mesh is exercised by the dry-run); on a real TPU fleet the same driver runs
 full configs with ``--full`` and lets ``--mesh`` pick the production mesh.
+
+``--metrics-out m.json`` writes the ``repro.obs`` metrics snapshot after
+training (step-time and checkpoint-duration histograms, restart/failure
+counters, kernel-dispatch counters; DESIGN.md §12).  Step logs go through
+the structured logger — ``REPRO_LOG_JSON=1`` switches them to JSON lines.
 """
 
 from __future__ import annotations
@@ -32,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ARCH_IDS, get_arch
 from repro.data.pipeline import DataConfig, global_batch
 from repro.core.sparse_linear import ExecPolicy
@@ -103,6 +109,11 @@ def main():
                          "serving grid (requires --sparsify)")
     ap.add_argument("--qat-granularity", choices=("per_row", "per_group"),
                     default="per_row")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot (step-time/checkpoint "
+                         "histograms, restart counters, kernel-dispatch "
+                         "counters) here after training; .prom/.txt => "
+                         "Prometheus text, else JSON")
     args = ap.parse_args()
     if args.qat and not args.sparsify:
         ap.error("--qat rides the sparsify training path; add --sparsify")
@@ -113,6 +124,7 @@ def main():
     reduced = args.reduced or (not args.full
                                and jax.default_backend() == "cpu")
 
+    log = obs.get_logger("launch.train")
     cfg = get_arch(args.arch)
     if reduced:
         cfg = cfg.reduced()
@@ -120,9 +132,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params)
                    if hasattr(x, "size"))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"sparsity={cfg.sparsity.pattern_name() if cfg.sparsity else None}"
-          f"{' (reduced)' if reduced else ''}")
+    log.info("arch", name=cfg.name, params_m=round(n_params / 1e6, 1),
+             sparsity=(cfg.sparsity.pattern_name() if cfg.sparsity
+                       else None),
+             reduced=reduced)
 
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
                                 warmup_steps=max(args.steps // 20, 5),
@@ -137,9 +150,9 @@ def main():
         schedule = parse_schedule(args.sparsify, args.steps,
                                   update_every=args.sparsify_update_every,
                                   freeze_after=args.sparsify_freeze_after)
-        print("sparsify schedule: " + schedule.spec()
-              + (f"  qat={args.qat}/{args.qat_granularity}" if args.qat
-                 else ""))
+        log.info("sparsify schedule", spec=schedule.spec(),
+                 **({"qat": f"{args.qat}/{args.qat_granularity}"}
+                    if args.qat else {}))
         recipe = SparseTrainRecipe(schedule=schedule, qat=args.qat,
                                    qat_granularity=args.qat_granularity)
         trainer = SparseTrainer(model, opt_cfg, recipe,
@@ -171,18 +184,18 @@ def main():
         p, o, m = orig_step(p, o, b, s)
         loss_by_step[s] = float(m["loss"])
         if s % args.log_every == 0:
-            print(f"step {s:5d} loss {float(m['loss']):.4f} "
-                  f"gnorm {float(m['grad_norm']):.3f} "
-                  f"lr {float(m['lr']):.2e} "
-                  f"({(time.time()-t0):.1f}s)")
+            log.info(f"step {s:5d}", loss=round(float(m["loss"]), 4),
+                     gnorm=round(float(m["grad_norm"]), 3),
+                     lr=float(f"{float(m['lr']):.2e}"),
+                     elapsed_s=round(time.time() - t0, 1))
         return p, o, m
 
     sup.train_step = logging_step
     params, opt_state, metrics, restarts = sup.run(params, opt_state,
                                                    args.steps)
     first, last = loss_by_step[0], loss_by_step[max(loss_by_step)]
-    print(f"done: final loss {last:.4f} (first {first:.4f}), "
-          f"restarts={restarts}")
+    log.info("done", final_loss=round(last, 4), first_loss=round(first, 4),
+             restarts=restarts)
     if trainer is None:
         assert last < first, "training must reduce loss"
     else:
@@ -207,9 +220,12 @@ def main():
         ckpt.save({"params": params, "opt": opt_state,
                    "extra": trainer.extra_state()},
                   args.ckpt_dir, args.steps)
-        print(f"final masks verified on {n_sparse} sparse linears "
-              f"(N:M satisfied exactly); baked checkpoint re-saved at "
-              f"step {args.steps}")
+        log.info("final masks verified; baked checkpoint re-saved",
+                 sparse_linears=n_sparse, step=args.steps)
+
+    if args.metrics_out:
+        sup.metrics.write(args.metrics_out)
+        log.info("wrote metrics snapshot", path=args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,73 @@
+"""Opt-in kernel profiling hooks.
+
+``annotate(name)`` wraps a region in ``jax.named_scope`` — zero steady-state
+cost: named scopes only exist at trace time, where they stamp the HLO ops
+(and therefore the Pallas kernel launches lowered from them) with a
+hierarchical name.  The kernel dispatch path wraps every DeMM matmul in
+``demm/<op>/<backend>`` scopes, so a TensorBoard/perfetto trace shows which
+registry variant each kernel launch came from.
+
+Inside an active :func:`profile` window, ``annotate`` additionally opens a
+``jax.profiler.TraceAnnotation`` so host-side work (dispatch, autotune
+measurement) shows up on the profiler timeline too.  ``profile(trace_dir)``
+brackets the region with ``jax.profiler.start_trace``/``stop_trace`` and
+dumps the trace directory for TensorBoard (``tensorboard --logdir
+<trace_dir>``) or perfetto::
+
+    with obs.profile("/tmp/serve_trace"):
+        engine.run_until_drained()
+
+``launch/serve.py --profile-dir DIR`` is the CLI spelling.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def profiling_active() -> bool:
+    """True inside a :func:`profile` window (in this thread)."""
+    return getattr(_state, "depth", 0) > 0
+
+
+@contextlib.contextmanager
+def profile(trace_dir=None, *, enabled: bool = True):
+    """Activate the profiling hooks for the enclosed region.
+
+    With ``trace_dir`` set, a jax profiler trace is captured and dumped
+    there (Pallas kernels appear under their ``annotate`` names).  Without
+    it, only the host-side ``TraceAnnotation`` behavior of :func:`annotate`
+    is switched on — useful when an external profiler is already attached.
+    """
+    if not enabled:
+        yield
+        return
+    import jax
+
+    if trace_dir:
+        jax.profiler.start_trace(str(trace_dir))
+    _state.depth = getattr(_state, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _state.depth -= 1
+        if trace_dir:
+            jax.profiler.stop_trace()
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Name the enclosed computation: always a ``jax.named_scope`` (HLO op
+    names → named kernels in profiler traces), plus a host
+    ``TraceAnnotation`` when a :func:`profile` window is active."""
+    import jax
+
+    with jax.named_scope(name):
+        if profiling_active():
+            with jax.profiler.TraceAnnotation(name):
+                yield
+        else:
+            yield

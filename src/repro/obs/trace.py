@@ -1,0 +1,144 @@
+"""JSONL event tracing: point events and duration spans.
+
+An :class:`EventTrace` is an in-memory ring of JSON-able event dicts with
+monotonic timestamps, optionally streamed to a JSONL sink as they happen.
+Two record shapes:
+
+* point events — ``trace.event("request_submit", uid=3)`` →
+  ``{"name": ..., "ts": <monotonic s>, "wall": <epoch s>, ...attrs}``
+* spans — ``with trace.span("request", uid=3): ...`` (or manual
+  ``s = trace.span(...); ...; s.end()``) → one event with ``"ph": "span"``,
+  ``ts`` at span *start*, and ``"dur"`` seconds.
+
+Timestamps come from ``time.monotonic()`` so orderings and durations are
+immune to wall-clock steps; ``wall`` is carried for cross-host correlation
+only.  The ring is bounded (default 64k events) so a long-running server
+cannot grow without limit — attach a file sink (``EventTrace(path=...)`` or
+``set_sink``) to keep everything.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Iterator, List, Optional
+
+
+class Span:
+    """A duration measurement; emits one span event on :meth:`end`.
+
+    Usable as a context manager or via explicit ``end()`` (the serve engine
+    opens a request span at submit and ends it at completion, ticks apart).
+    ``end()`` is idempotent — the first call wins.
+    """
+
+    __slots__ = ("_trace", "name", "attrs", "t0", "wall0", "ended")
+
+    def __init__(self, trace: "EventTrace", name: str, attrs: dict):
+        self._trace = trace
+        self.name = name
+        self.attrs = attrs
+        self.t0 = time.monotonic()
+        self.wall0 = time.time()
+        self.ended = False
+
+    def event(self, name: str, **attrs):
+        """A point event tagged as belonging to this span."""
+        return self._trace.event(name, span=self.name, **{**self.attrs,
+                                                          **attrs})
+
+    def end(self, **attrs) -> Optional[dict]:
+        if self.ended:
+            return None
+        self.ended = True
+        rec = {"name": self.name, "ph": "span", "ts": self.t0,
+               "wall": self.wall0, "dur": time.monotonic() - self.t0,
+               **self.attrs, **attrs}
+        self._trace._emit(rec)
+        return rec
+
+    def __enter__(self) -> "Span":
+        return self
+
+    def __exit__(self, *exc):
+        self.end()
+        return False
+
+
+class EventTrace:
+    """Bounded in-memory event ring with an optional JSONL file sink."""
+
+    def __init__(self, path: Optional[str] = None, max_events: int = 65536):
+        self._lock = threading.Lock()
+        self._events: deque = deque(maxlen=max_events)
+        self._file = None
+        if path:
+            self.set_sink(path)
+
+    # -- recording ----------------------------------------------------------
+
+    def _emit(self, rec: dict):
+        with self._lock:
+            self._events.append(rec)
+            if self._file is not None:
+                self._file.write(json.dumps(rec, default=str) + "\n")
+                self._file.flush()
+
+    def event(self, name: str, **attrs) -> dict:
+        rec = {"name": name, "ts": time.monotonic(), "wall": time.time(),
+               **attrs}
+        self._emit(rec)
+        return rec
+
+    def span(self, name: str, **attrs) -> Span:
+        return Span(self, name, attrs)
+
+    # -- access / persistence -----------------------------------------------
+
+    @property
+    def events(self) -> List[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def named(self, name: str) -> List[dict]:
+        return [e for e in self.events if e.get("name") == name]
+
+    def clear(self):
+        with self._lock:
+            self._events.clear()
+
+    def set_sink(self, path: Optional[str]):
+        """Stream every subsequent event to ``path`` as JSON lines (append);
+        ``None`` detaches the sink."""
+        with self._lock:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+            if path:
+                d = os.path.dirname(path)
+                if d:
+                    os.makedirs(d, exist_ok=True)
+                self._file = open(path, "a")
+
+    def write(self, path: str) -> int:
+        """Dump the buffered events to ``path`` as JSONL; returns #events.
+        (Events already streamed by a sink are not deduplicated — use one
+        mechanism or the other per file.)"""
+        events = self.events
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            for rec in events:
+                f.write(json.dumps(rec, default=str) + "\n")
+        return len(events)
+
+    def __len__(self):
+        with self._lock:
+            return len(self._events)
+
+    def __iter__(self) -> Iterator[dict]:
+        return iter(self.events)

@@ -16,11 +16,21 @@ before the decode step is compiled (DESIGN.md §8).  The legacy
 ``mode=``/``backend=`` kwargs are still accepted and folded into a policy,
 but emit a DeprecationWarning and will be removed after one release
 (matching the PR 4 shim-removal policy) — pass ``policy=ExecPolicy(...)``.
+
+Observability (``repro.obs``, DESIGN.md §12): the engine instruments the
+full request lifecycle on its :class:`~repro.obs.MetricsRegistry` (the
+process default unless ``metrics=`` is given) — queue wait
+submit→first-claim, per-token decode latency, time-to-first-token, tick
+duration histograms; slot-occupancy and tokens/sec gauges; request/token
+counters — and emits ``request_submit`` / ``request_claim`` /
+``request_first_token`` / ``request_complete`` events plus one ``request``
+span per request on the registry's event trace.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from collections import deque
 from typing import Callable, List, Optional
@@ -28,6 +38,8 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 
 @dataclasses.dataclass
@@ -38,6 +50,11 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the engine:
     output: Optional[list] = None
+    # lifecycle timestamps (time.monotonic seconds), filled by the engine:
+    submit_ts: Optional[float] = None
+    claim_ts: Optional[float] = None
+    first_token_ts: Optional[float] = None
+    complete_ts: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -49,7 +66,7 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, model, params, cfg: ServeConfig, *, policy=None,
-                 mode=None, backend=None, autotune=False):
+                 mode=None, backend=None, autotune=False, metrics=None):
         from repro.core.sparse_linear import resolve_policy
 
         if mode is not None or backend is not None:
@@ -89,10 +106,44 @@ class ServeEngine:
         self._fed: List[int] = [0] * cfg.num_slots    # prompt tokens fed
         self._next_tok = np.zeros((cfg.num_slots, 1), np.int32)
         self.completed: List[Request] = []
+        # -- observability (instruments fetched once; per-tick cost is a few
+        #    histogram observes, noise next to the jitted decode step) ------
+        self.metrics = metrics if metrics is not None else obs.metrics()
+        m = self.metrics
+        self.trace = m.trace
+        self._spans = {}                              # uid -> open Span
+        self._m_submitted = m.counter(
+            "serve_requests_submitted_total", help="requests accepted")
+        self._m_completed = m.counter(
+            "serve_requests_completed_total", help="requests fully decoded")
+        self._m_tokens = m.counter(
+            "serve_tokens_total", help="generated (decode) tokens")
+        self._m_prefill = m.counter(
+            "serve_prefill_tokens_total", help="prompt tokens prefilled")
+        self._m_queue_wait = m.histogram(
+            "serve_queue_wait_seconds", help="submit -> first slot claim")
+        self._m_ttft = m.histogram(
+            "serve_time_to_first_token_seconds",
+            help="submit -> first generated token")
+        self._m_tok_lat = m.histogram(
+            "serve_decode_token_seconds",
+            help="decode-step latency per generated token")
+        self._m_tick = m.histogram(
+            "serve_tick_seconds", help="full engine tick duration")
+        self._m_slots = m.gauge(
+            "serve_slots_active", help="occupied decode slots")
+        self._m_tps = m.gauge(
+            "serve_tokens_per_second",
+            help="decode throughput of the last run_until_drained window")
 
     def submit(self, req: Request):
         req.output = []
+        req.submit_ts = time.monotonic()
         self.queue.append(req)
+        self._m_submitted.inc()
+        self._spans[req.uid] = self.trace.span("request", uid=req.uid)
+        self.trace.event("request_submit", uid=req.uid,
+                         prompt_len=len(req.prompt))
 
     def _claim_slots(self):
         for i in range(self.cfg.num_slots):
@@ -102,6 +153,9 @@ class ServeEngine:
                 self._fed[i] = 0
                 self._reset_slot(i)
                 self._next_tok[i, 0] = req.prompt[0]
+                req.claim_ts = time.monotonic()
+                self._m_queue_wait.observe(req.claim_ts - req.submit_ts)
+                self.trace.event("request_claim", uid=req.uid, slot=i)
 
     def _reset_slot(self, i):
         """Restore slot ``i``'s state region from the initial template.
@@ -122,12 +176,18 @@ class ServeEngine:
     def step(self) -> int:
         """One engine tick = one decode step for the whole batch.
         Returns the number of active slots."""
+        t_tick = time.perf_counter()
         self._claim_slots()
-        if not any(r is not None for r in self.active):
+        n_active = sum(r is not None for r in self.active)
+        self._m_slots.set(n_active)
+        if not n_active:
             return 0
+        t0 = time.perf_counter()
         logits, self.state = self._step(self.params, self.state,
                                         jnp.asarray(self._next_tok))
-        logits = np.asarray(logits[:, 0], np.float32)
+        logits = np.asarray(logits[:, 0], np.float32)   # device sync
+        step_dt = time.perf_counter() - t0
+        now = time.monotonic()
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -135,22 +195,43 @@ class ServeEngine:
             if self._fed[i] < len(req.prompt):
                 # still prefilling: feed the next prompt token
                 self._next_tok[i, 0] = req.prompt[self._fed[i]]
+                self._m_prefill.inc()
                 continue
             tok = int(np.argmax(logits[i]))
             req.output.append(tok)
             self._next_tok[i, 0] = tok
+            self._m_tokens.inc()
+            self._m_tok_lat.observe(step_dt)
+            if len(req.output) == 1:
+                req.first_token_ts = now
+                self._m_ttft.observe(now - req.submit_ts)
+                self.trace.event("request_first_token", uid=req.uid)
             done = (len(req.output) >= req.max_new_tokens or
                     (req.eos_id is not None and tok == req.eos_id) or
                     int(self.state["pos"][i]) >= self.cfg.max_len - 1)
             if done:
+                req.complete_ts = now
                 self.completed.append(req)
                 self.active[i] = None
+                self._m_completed.inc()
+                self.trace.event("request_complete", uid=req.uid,
+                                 tokens=len(req.output))
+                span = self._spans.pop(req.uid, None)
+                if span is not None:
+                    span.end(tokens=len(req.output))
+        self._m_slots.set(sum(r is not None for r in self.active))
+        self._m_tick.observe(time.perf_counter() - t_tick)
         return sum(r is not None for r in self.active)
 
     def run_until_drained(self, max_ticks: int = 10000):
         ticks = 0
+        t0 = time.perf_counter()
+        tok0 = self._m_tokens.value
         while (self.queue or any(r is not None for r in self.active)) \
                 and ticks < max_ticks:
             self.step()
             ticks += 1
+        dt = time.perf_counter() - t0
+        if dt > 0:
+            self._m_tps.set((self._m_tokens.value - tok0) / dt)
         return ticks

@@ -11,6 +11,14 @@ and elastic re-meshing.
 * ``elastic_restore`` — restore a checkpoint onto a *different* mesh (e.g.
   after losing a data-parallel slice): shardings are recomputed for the new
   mesh and ``checkpoint.restore`` reshards transparently.
+
+Observability (``repro.obs``, DESIGN.md §12): the supervisor observes a
+step-time histogram, restart/failure counters, and checkpoint save/restore
+duration histograms on its :class:`~repro.obs.MetricsRegistry` (the process
+default unless ``metrics=`` is given), with ``checkpoint_save`` /
+``restart`` trace events; :class:`StragglerMonitor` folds its per-host EWMA
+state and each :class:`StragglerReport` into the same registry (per-host
+gauges + flagged count) instead of keeping the report purely bespoke.
 """
 
 from __future__ import annotations
@@ -21,6 +29,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.data.pipeline import DataConfig, global_batch
 from repro.train import checkpoint as ckpt
 
@@ -38,7 +47,7 @@ class TrainingSupervisor:
 
     def __init__(self, cfg: SupervisorConfig, train_step: Callable,
                  data_cfg: DataConfig, to_batch: Optional[Callable] = None,
-                 extra_state=None):
+                 extra_state=None, metrics=None):
         """``extra_state`` (optional) is any object with an
         ``extra_state() -> pytree`` / ``load_extra_state(pytree)`` pair
         (e.g. ``sparsetrain.SparseTrainer``): its tree is saved under the
@@ -52,8 +61,27 @@ class TrainingSupervisor:
         self.extra = extra_state
         self.restarts = 0
         self.pending_save = None
+        self.metrics = metrics if metrics is not None else obs.metrics()
+        m = self.metrics
+        self._m_step_time = m.histogram(
+            "train_step_seconds", help="wall time per training step")
+        self._m_steps = m.counter(
+            "train_steps_total", help="completed training steps")
+        self._m_restarts = m.counter(
+            "train_restarts_total", help="checkpoint-restore restarts")
+        self._m_failures = m.counter(
+            "train_failures_total", help="step failures caught")
+        self._m_ckpt_save = m.histogram(
+            "train_checkpoint_save_seconds",
+            help="checkpoint save duration (submission time if async)")
+        self._m_ckpt_restore = m.histogram(
+            "train_checkpoint_restore_seconds",
+            help="checkpoint restore duration")
+        self._m_ckpt_saves = m.counter(
+            "train_checkpoint_saves_total", help="checkpoints written")
 
     def _save(self, state, step):
+        t0 = time.perf_counter()
         tree = {"params": state[0], "opt": state[1]}
         if self.extra is not None:
             tree["extra"] = self.extra.extra_state()
@@ -63,17 +91,26 @@ class TrainingSupervisor:
             self.pending_save = ckpt.save_async(tree, self.cfg.ckpt_dir, step)
         else:
             ckpt.save(tree, self.cfg.ckpt_dir, step)
+        dt = time.perf_counter() - t0
+        self._m_ckpt_save.observe(dt)
+        self._m_ckpt_saves.inc()
+        self.metrics.trace.event("checkpoint_save", step=step, seconds=dt,
+                                 asynchronous=self.cfg.async_save)
 
     def _restore(self, template_state, shardings=None):
         step = ckpt.latest_step(self.cfg.ckpt_dir)
         if step is None:
             return template_state, 0
+        t0 = time.perf_counter()
         template = {"params": template_state[0], "opt": template_state[1]}
         if self.extra is not None:
             template["extra"] = self.extra.extra_state()
         tree = ckpt.restore(template, self.cfg.ckpt_dir, step, shardings)
         if self.extra is not None:
             self.extra.load_extra_state(tree["extra"])
+        dt = time.perf_counter() - t0
+        self._m_ckpt_restore.observe(dt)
+        self.metrics.trace.event("checkpoint_restore", step=step, seconds=dt)
         return (tree["params"], tree["opt"]), step
 
     def run(self, params, opt_state, num_steps: int,
@@ -87,17 +124,24 @@ class TrainingSupervisor:
             try:
                 if failure_injector is not None:
                     failure_injector(step)
+                t0 = time.perf_counter()
                 batch = self.to_batch(global_batch(self.data_cfg, step))
                 p, o, metrics = self.train_step(state[0], state[1], batch,
                                                 step)
                 state = (p, o)
+                self._m_step_time.observe(time.perf_counter() - t0)
+                self._m_steps.inc()
                 step += 1
                 if step % self.cfg.ckpt_every == 0 or step == num_steps:
                     self._save(state, step)
-            except _InjectedFailure:
+            except _InjectedFailure as e:
+                self._m_failures.inc()
                 self.restarts += 1
                 if self.restarts > self.cfg.max_restarts:
                     raise
+                self._m_restarts.inc()
+                self.metrics.trace.event("restart", step=step,
+                                         reason=str(e)[:200])
                 state, step = self._restore(state)
         if self.pending_save is not None:
             self.pending_save.result()
@@ -135,14 +179,26 @@ class StragglerMonitor:
     """EWMA per-host step times; flags hosts slower than threshold×median.
 
     On a real deployment the per-host times come from the coordinator's
-    heartbeats; here they are fed in directly (and by the tests)."""
+    heartbeats; here they are fed in directly (and by the tests).
+
+    State is folded into the metrics registry: every ``record`` updates a
+    per-host ``train_host_step_seconds`` EWMA gauge, every ``report``
+    updates ``train_straggler_median_step_seconds`` /
+    ``train_stragglers_flagged`` — so straggler status ships in the same
+    ``--metrics-out`` snapshot as everything else instead of living only in
+    ad-hoc :class:`StragglerReport` objects."""
 
     def __init__(self, num_hosts: int, alpha: float = 0.3,
-                 threshold: float = 1.5):
+                 threshold: float = 1.5, metrics=None):
         self.ewma = np.zeros(num_hosts)
         self.seen = np.zeros(num_hosts, bool)
         self.alpha = alpha
         self.threshold = threshold
+        self.metrics = metrics if metrics is not None else obs.metrics()
+        self._m_hosts = [
+            self.metrics.gauge("train_host_step_seconds",
+                               help="per-host step-time EWMA", host=str(i))
+            for i in range(num_hosts)]
 
     def record(self, host_times):
         host_times = np.asarray(host_times, float)
@@ -151,6 +207,8 @@ class StragglerMonitor:
                              self.alpha * host_times +
                              (1 - self.alpha) * self.ewma)
         self.seen[:] = True
+        for g, v in zip(self._m_hosts, self.ewma):
+            g.set(float(v))
 
     def report(self) -> StragglerReport:
         med = float(np.median(self.ewma))
@@ -161,6 +219,14 @@ class StragglerMonitor:
             int(i): (round(float(med / self.ewma[i]), 2) if i in flagged
                      else 1.0)
             for i in range(len(self.ewma))}
+        self.metrics.gauge("train_straggler_median_step_seconds",
+                           help="fleet median of the per-host EWMA").set(med)
+        self.metrics.gauge("train_stragglers_flagged",
+                           help="hosts slower than threshold x median").set(
+            len(flagged))
+        if flagged:
+            self.metrics.trace.event("stragglers_flagged", hosts=flagged,
+                                     median_seconds=med)
         return StragglerReport(flagged, med, suggestion)
 
 

@@ -234,6 +234,12 @@ def _autotune(problem: Problem,
               make_thunk: Callable[[Candidate], Callable[[], jax.Array]],
               *, vmem_budget: int, max_measure: int, warmup: int, iters: int,
               cache: Optional[TuneCache], persist: bool) -> TuneResult:
+    from repro import obs
+
+    m = obs.metrics()
+    measurements = m.counter("tune_autotune_measurements_total",
+                             help="candidate kernels timed by autotune",
+                             op=problem.op)
     cands = enumerate_candidates(problem)
     keep = prune_candidates(problem, cands, vmem_budget=vmem_budget,
                             max_measure=max_measure)
@@ -243,9 +249,16 @@ def _autotune(problem: Problem,
         try:
             c.measured_s = measure(make_thunk(c), warmup=warmup, iters=iters)
             c.status = "measured"
+            measurements.inc()
         except Exception as e:  # noqa: BLE001 — an unmeasurable candidate
             c.status = "error"  # (e.g. unsupported tiling) is skipped, not fatal
             c.note = f"{type(e).__name__}: {e}"[:200]
+        # one trace event per candidate: the autotune audit trail a tuned
+        # cache entry can be traced back to
+        m.trace.event("autotune_measure", op=problem.op, backend=c.backend,
+                      params=dict(c.params), status=c.status,
+                      us=(None if c.measured_s is None
+                          else c.measured_s * 1e6))
     measured = [c for c in keep if c.status == "measured"
                 and c.backend not in measure_only]
     if not measured:
@@ -255,6 +268,8 @@ def _autotune(problem: Problem,
     best_c = min(measured, key=lambda c: c.measured_s)
     best = TunedConfig(backend=best_c.backend, params=dict(best_c.params),
                        measured_us=best_c.measured_s * 1e6, source="tuned")
+    m.trace.event("autotune_select", op=problem.op, backend=best.backend,
+                  params=dict(best.params), us=best.measured_us)
     cache = cache or default_cache()
     cache.put(problem, best, persist=persist)
     return TuneResult(problem=problem, best=best, candidates=cands)

@@ -13,6 +13,14 @@ always resolvable — tuning only ever *improves* the choice.
 
 The JSON file carries a schema version; a version bump (or any key-scheme
 change) invalidates stale entries instead of misreading them.
+
+Observability (``repro.obs``, DESIGN.md §12): every :meth:`TuneCache.resolve`
+increments ``tune_cache_hits_total`` / ``tune_cache_misses_total`` (labeled
+by op) on the default registry, and :meth:`TuneCache.load` counts file loads
+and entries — so a serving run's ``--metrics-out`` snapshot shows exactly
+how its ``backend="auto"`` decisions were sourced.  Saves are atomic via a
+*uniquely named* temp file + ``os.replace``, so concurrent bench/CI runs
+sharing one cache path cannot interleave partial writes.
 """
 
 from __future__ import annotations
@@ -20,10 +28,17 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import tempfile
 import threading
 from typing import Dict, Optional, Tuple
 
 from repro.tune.registry import Problem, variants_for
+
+
+def _counter(name: str, help_text: str = "", **labels):
+    from repro import obs
+
+    return obs.metrics().counter(name, help=help_text, **labels)
 
 SCHEMA_VERSION = 1
 
@@ -107,21 +122,36 @@ class TuneCache:
                     n += 1
                 except (KeyError, TypeError):
                     continue
-            return n
+        _counter("tune_cache_loads_total",
+                 "cache files loaded from disk").inc()
+        _counter("tune_cache_entries_loaded_total",
+                 "tuning entries merged from disk").inc(n)
+        return n
 
     def save(self):
         with self._lock:
             if not self.path:
                 return
-            d = os.path.dirname(self.path)
-            if d:
-                os.makedirs(d, exist_ok=True)
+            d = os.path.dirname(self.path) or "."
+            os.makedirs(d, exist_ok=True)
             blob = {"version": SCHEMA_VERSION,
                     "entries": {k: v.to_json() for k, v in self._mem.items()}}
-            tmp = self.path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(blob, f, indent=2, sort_keys=True)
-            os.replace(tmp, self.path)
+            # Unique temp name + atomic rename: concurrent bench/CI runs
+            # saving the same cache path race only on *which complete file
+            # wins*, never on partial writes (a shared ".tmp" suffix would
+            # let two writers interleave into one temp file).
+            fd, tmp = tempfile.mkstemp(
+                dir=d, prefix=os.path.basename(self.path) + ".", suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(blob, f, indent=2, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
 
     # -- lookup / update ----------------------------------------------------
 
@@ -153,9 +183,19 @@ class TuneCache:
     def resolve(self, p: Problem) -> TunedConfig:
         """Cache hit or heuristic default — never measures, safe to call at
         jit-trace time (only static shape information is consulted)."""
+        # register both families up front so a snapshot always shows the
+        # hit/miss pair even when one side is still zero
+        hits = _counter("tune_cache_hits_total",
+                        "resolve() served from cache (incl. memoized "
+                        "heuristics)", op=p.op)
+        misses = _counter("tune_cache_misses_total",
+                          "resolve() fell back to a fresh heuristic default",
+                          op=p.op)
         hit = self.get(p)
         if hit is not None:
+            hits.inc()
             return hit
+        misses.inc()
         cfg = heuristic_default(p)
         # memoize the heuristic so repeated traces skip the registry walk,
         # but never persist it: a later autotune run should win.
