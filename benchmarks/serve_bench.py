@@ -1,0 +1,348 @@
+"""Traffic-replay serving benchmark: paged engine vs legacy dense-cache loop.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py \
+        --trace benchmarks/traces/tiny_trace.jsonl --out BENCH_serve.json \
+        [--compare BENCH_serve_quick.json --threshold 1.25 \
+         --min-prefill-speedup 3.0]
+
+Replays traffic (a committed JSONL trace, or Poisson arrivals synthesized
+from ``--seed``/``--rate``) through BOTH serving engines on the same model
+and prompts:
+
+* the legacy :class:`~repro.serve.serve_loop.ServeEngine` (dense
+  ``num_slots × max_len`` cache, token-by-token prefill through the decode
+  step), and
+* the :class:`~repro.paged.PagedServeEngine` (shared paged KV arena,
+  chunked prefill as a second compiled program, scheduled admission +
+  preemption).
+
+Arrivals are **logical engine ticks** (``arrival_tick``), not wall-clock —
+so admission order, preemption count, and every token of output are
+deterministic across hosts and jax versions; only the latencies differ.
+The emitted ``BENCH_serve.json`` carries p50/p99 TTFT + end-to-end latency,
+decode and prefill tokens/sec, and peak arena occupancy for both engines,
+plus the cross-engine checks the CI gate consumes:
+
+* ``token_identical`` — paged and dense decode emitted identical tokens for
+  every request (hard failure if not);
+* ``prefill_speedup`` — chunked-prefill tokens/sec over the token-by-token
+  baseline, measured by a prefill-only drain (``max_new=1``) on each engine
+  (``--min-prefill-speedup`` turns it into a gate);
+* ``rel`` — same-host paged/legacy ratios (lower = better), the unit
+  ``--compare`` gates with the kernel-bench 25%-regression idiom: absolute
+  latencies gate on machine lottery, the *ratio* between two engines
+  measured in the same process is stable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+DEFAULT_TRACE = os.path.join(os.path.dirname(__file__), "traces",
+                             "tiny_trace.jsonl")
+_WARM_UID = 10 ** 9
+
+
+def load_trace(path: str):
+    reqs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            reqs.append(json.loads(line))
+    for i, r in enumerate(reqs):
+        for key in ("uid", "arrival_tick", "prompt_len", "max_new"):
+            if key not in r:
+                raise ValueError(f"{path}:{i}: missing {key!r}")
+        r.setdefault("priority", 1)
+    return sorted(reqs, key=lambda r: (r["arrival_tick"], r["uid"]))
+
+
+def poisson_trace(n: int, rate: float, seed: int, max_prompt: int,
+                  max_new: int):
+    """Synthesize ``n`` arrivals with exponential inter-arrival ticks."""
+    rng = np.random.default_rng(seed)
+    tick, reqs = 0, []
+    for uid in range(n):
+        tick += int(rng.exponential(1.0 / max(rate, 1e-6)))
+        reqs.append({"uid": uid, "arrival_tick": tick,
+                     "prompt_len": int(rng.integers(4, max_prompt + 1)),
+                     "max_new": max_new,
+                     "priority": int(rng.integers(0, 3))})
+    return reqs
+
+
+def make_prompt(seed: int, uid: int, length: int, vocab: int) -> np.ndarray:
+    """Per-request deterministic prompt: replayable from (seed, uid)."""
+    rng = np.random.default_rng((seed, uid))
+    return rng.integers(0, vocab, length, dtype=np.int32)
+
+
+def _requests(trace, seed, vocab, uid_offset=0, max_new=None):
+    from repro.serve.serve_loop import Request
+
+    return [(r["arrival_tick"],
+             Request(uid=r["uid"] + uid_offset,
+                     prompt=make_prompt(seed, r["uid"], r["prompt_len"],
+                                        vocab),
+                     max_new_tokens=max_new or r["max_new"],
+                     priority=r["priority"]))
+            for r in trace]
+
+
+def replay(engine, pairs, max_ticks=100000):
+    """Tick-driven replay: submit at each request's arrival tick, step until
+    drained.  Returns (wall_seconds, ticks, peak_occupancy)."""
+    pending = sorted(pairs, key=lambda p: p[0])
+    peak_occ, ticks, i = 0.0, 0, 0
+    t0 = time.perf_counter()
+    while i < len(pending) or _busy(engine):
+        while i < len(pending) and pending[i][0] <= ticks:
+            engine.submit(pending[i][1])
+            i += 1
+        engine.step()
+        ticks += 1
+        if hasattr(engine, "kv"):
+            peak_occ = max(peak_occ, engine.kv.occupancy())
+        if ticks >= max_ticks:
+            raise RuntimeError(f"replay did not drain in {max_ticks} ticks")
+    return time.perf_counter() - t0, ticks, peak_occ
+
+
+def _busy(engine) -> bool:
+    if any(r is not None for r in engine.active):
+        return True
+    queue = getattr(engine, "queue", None)
+    return len(queue if queue is not None else engine.sched) > 0
+
+
+def _warmup(engine, vocab, uid):
+    from repro.serve.serve_loop import Request
+
+    engine.submit(Request(uid=uid, prompt=make_prompt(0, uid, 4, vocab),
+                          max_new_tokens=2))
+    engine.run_until_drained()
+
+
+def percentiles(xs):
+    if not xs:
+        return {"p50_s": None, "p99_s": None}
+    return {"p50_s": float(np.percentile(xs, 50)),
+            "p99_s": float(np.percentile(xs, 99))}
+
+
+def lat_stats(reqs):
+    ttft = [r.first_token_ts - r.submit_ts for r in reqs
+            if r.first_token_ts is not None]
+    e2e = [r.complete_ts - r.submit_ts for r in reqs
+           if r.complete_ts is not None]
+    return ({f"ttft_{k}": v for k, v in percentiles(ttft).items()} |
+            {f"e2e_{k}": v for k, v in percentiles(e2e).items()})
+
+
+def main(argv=None) -> int:
+    from repro.configs.base import ARCH_IDS, get_arch
+    from repro.models.families import build_model
+    from repro.obs.metrics import MetricsRegistry, run_metadata
+    from repro.paged import PagedServeConfig, PagedServeEngine, SchedConfig
+    from repro.serve.serve_loop import ServeConfig, ServeEngine
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm_3b",
+                    help="must be a full-attention arch (paged cache)")
+    ap.add_argument("--trace", default=None, metavar="JSONL",
+                    help=f"replay this trace (default: Poisson unless "
+                         f"{DEFAULT_TRACE} is given); lines of "
+                         "{uid, arrival_tick, prompt_len, max_new, priority}")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="Poisson mode: number of synthesized arrivals")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson mode: mean arrivals per tick")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="deterministic request sampling (prompt tokens and "
+                         "Poisson arrivals); recorded in the output meta so "
+                         "traffic runs are replayable")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=8,
+                    help="Poisson mode: tokens generated per request")
+    ap.add_argument("--max-prompt", type=int, default=40,
+                    help="Poisson mode: max synthesized prompt length")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-pages", type=int, default=None,
+                    help="arena pages incl. the null page (default: fully "
+                         "provisioned — undersize it to exercise preemption)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--scheduler", choices=("fcfs", "priority"),
+                    default="fcfs")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="gate the rel metrics against this committed "
+                         "baseline JSON (new/base <= --threshold)")
+    ap.add_argument("--threshold", type=float, default=1.25)
+    ap.add_argument("--min-prefill-speedup", type=float, default=None,
+                    help="fail unless chunked prefill beats token-by-token "
+                         "ingest by this factor (tokens/sec)")
+    args = ap.parse_args(argv)
+
+    trace_path = args.trace
+    if trace_path:
+        trace = load_trace(trace_path)
+    else:
+        trace = poisson_trace(args.requests, args.rate, args.seed,
+                              args.max_prompt, args.max_new)
+
+    # float32 compute: the token-identity check compares argmax across two
+    # differently-compiled programs; bf16 puts random-init logits on a 1/256
+    # grid where exact top-1/top-2 ties are common and a 1-ulp reduction-
+    # order difference flips them.  At f32 resolution ties don't collide.
+    cfg = dataclasses.replace(get_arch(args.arch).reduced(),
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    vocab = cfg.vocab_size
+    prompt_tokens = sum(r["prompt_len"] for r in trace)
+
+    # -- paged engine -------------------------------------------------------
+    reg = MetricsRegistry()
+    paged = PagedServeEngine(
+        model, params,
+        PagedServeConfig(num_slots=args.slots, max_len=args.max_len,
+                         page_size=args.page_size, num_pages=args.max_pages,
+                         prefill_chunk=args.prefill_chunk,
+                         sched=SchedConfig(policy=args.scheduler)),
+        metrics=reg)
+    _warmup(paged, vocab, _WARM_UID)
+    pairs = _requests(trace, args.seed, vocab)
+    p_dt, p_ticks, p_occ = replay(paged, pairs)
+    p_reqs = [r for r in paged.completed if r.uid < _WARM_UID]
+    p_tokens = sum(len(r.output) for r in p_reqs)
+    # prefill-only drain: chunked ingest throughput (max_new=1 ends each
+    # request on its final prefill chunk — no decode steps in the window)
+    pf_pairs = _requests(trace, args.seed, vocab, uid_offset=2 * _WARM_UID,
+                         max_new=1)
+    pf_dt, _, _ = replay(paged, [(0, r) for _, r in pf_pairs])
+    paged_stats = {
+        **lat_stats(p_reqs),
+        "tokens_per_sec": p_tokens / p_dt,
+        "prefill_tokens_per_sec": prompt_tokens / pf_dt,
+        "ticks": p_ticks,
+        "preempts": int(reg.counter("serve_preempt_total").value),
+        "peak_occupancy": p_occ,
+        "fragmentation": paged.kv.fragmentation(),
+        "prefill_dispatches": paged.prefill.dispatches,
+    }
+
+    # -- legacy engine ------------------------------------------------------
+    legacy = ServeEngine(model, params,
+                         ServeConfig(num_slots=args.slots,
+                                     max_len=args.max_len),
+                         metrics=MetricsRegistry())
+    _warmup(legacy, vocab, _WARM_UID)
+    pairs = _requests(trace, args.seed, vocab)
+    l_dt, l_ticks, _ = replay(legacy, pairs)
+    l_reqs = [r for r in legacy.completed if r.uid < _WARM_UID]
+    l_tokens = sum(len(r.output) for r in l_reqs)
+    pf_pairs = _requests(trace, args.seed, vocab, uid_offset=2 * _WARM_UID,
+                         max_new=1)
+    lf_dt, _, _ = replay(legacy, [(0, r) for _, r in pf_pairs])
+    legacy_stats = {
+        **lat_stats(l_reqs),
+        "tokens_per_sec": l_tokens / l_dt,
+        "prefill_tokens_per_sec": prompt_tokens / lf_dt,
+        "ticks": l_ticks,
+    }
+
+    # -- cross-engine checks ------------------------------------------------
+    p_out = {r.uid: list(r.output) for r in p_reqs}
+    l_out = {r.uid: list(r.output) for r in l_reqs}
+    token_identical = p_out == l_out
+    speedup = (paged_stats["prefill_tokens_per_sec"]
+               / legacy_stats["prefill_tokens_per_sec"])
+    rel = {  # same-host cross-engine ratios, all lower-is-better
+        "ttft_p99": paged_stats["ttft_p99_s"] / legacy_stats["ttft_p99_s"],
+        "e2e_p99": paged_stats["e2e_p99_s"] / legacy_stats["e2e_p99_s"],
+        "tps": legacy_stats["tokens_per_sec"] / paged_stats["tokens_per_sec"],
+        "prefill": 1.0 / speedup,
+    }
+
+    blob = {
+        "meta": {**run_metadata(), "arch": cfg.name,
+                 "compute_dtype": cfg.compute_dtype, "seed": args.seed,
+                 "trace": trace_path or "poisson",
+                 "requests": len(trace), "prompt_tokens": prompt_tokens,
+                 "slots": args.slots, "max_len": args.max_len,
+                 "page_size": args.page_size, "max_pages": args.max_pages,
+                 "prefill_chunk": args.prefill_chunk,
+                 "scheduler": args.scheduler},
+        "paged": paged_stats,
+        "legacy": legacy_stats,
+        "rel": rel,
+        "token_identical": token_identical,
+        "prefill_speedup": speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(blob, f, indent=2)
+
+    print(f"replayed {len(trace)} requests ({prompt_tokens} prompt tokens) "
+          f"on {cfg.name} [{args.scheduler}]")
+    for name, s in (("paged", paged_stats), ("legacy", legacy_stats)):
+        print(f"  {name:6s} ttft p50/p99 {s['ttft_p50_s'] * 1e3:7.1f}/"
+              f"{s['ttft_p99_s'] * 1e3:7.1f} ms   e2e p99 "
+              f"{s['e2e_p99_s'] * 1e3:7.1f} ms   {s['tokens_per_sec']:7.1f} "
+              f"tok/s   prefill {s['prefill_tokens_per_sec']:8.1f} tok/s")
+    print(f"  paged: {paged_stats['preempts']} preempts, peak occupancy "
+          f"{paged_stats['peak_occupancy']:.2f}, "
+          f"{paged_stats['prefill_dispatches']} prefill dispatches")
+    print(f"  prefill speedup {speedup:.2f}x, token_identical="
+          f"{token_identical}")
+    print(f"wrote {args.out}")
+
+    failures = []
+    if not token_identical:
+        diff = sorted(u for u in p_out if p_out[u] != l_out.get(u))
+        failures.append(f"paged vs dense decode outputs differ (uids {diff})")
+    if args.min_prefill_speedup and speedup < args.min_prefill_speedup:
+        failures.append(f"prefill speedup {speedup:.2f}x < required "
+                        f"{args.min_prefill_speedup}x")
+    if args.compare:
+        with open(args.compare) as f:
+            base = json.load(f)
+        print(f"\ncompare vs {args.compare} "
+              f"(platform={base['meta'].get('platform')}, "
+              f"jax={base['meta'].get('jax')}), threshold "
+              f"{args.threshold:.2f}x")
+        for key, new_v in rel.items():
+            base_v = base.get("rel", {}).get(key)
+            if base_v is None or base_v <= 0:
+                print(f"  {key:10s} [skip] no baseline value")
+                continue
+            ratio = new_v / base_v
+            flag = "REGRESSED" if ratio > args.threshold else "ok"
+            print(f"  {key:10s} base {base_v:7.3f}  new {new_v:7.3f}  "
+                  f"({ratio:5.2f}x)  {flag}")
+            if ratio > args.threshold:
+                failures.append(f"rel.{key} regressed {ratio:.2f}x vs "
+                                f"{args.compare}")
+
+    if failures:
+        print("\nFAIL:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,10 @@ proves the *shape*, the ``--require-*`` flags prove the run actually
 
 ``--require-counter NAME`` demands at least one entry of that family (any
 labels) with value > 0; ``--require-histogram NAME`` demands count > 0 and
-internal consistency (sum(counts) == count, len(counts) == len(buckets)+1).
+internal consistency (sum(counts) == count, len(counts) == len(buckets)+1);
+``--require-gauge NAME`` demands the family exists (gauges legitimately
+read 0 — e.g. ``serve_queue_depth`` after a drain — so only presence is
+checked).
 
 The validator implements the JSON-Schema subset the checked-in schema uses
 (type, required, properties, additionalProperties-as-schema, items,
@@ -89,6 +92,13 @@ def check_counter(snap: dict, name: str) -> list:
     return []
 
 
+def check_gauge(snap: dict, name: str) -> list:
+    entries = [g for g in snap.get("gauges", []) if g.get("name") == name]
+    if not entries:
+        return [f"required gauge {name!r} is absent"]
+    return []
+
+
 def check_histogram(snap: dict, name: str) -> list:
     errors = []
     entries = [h for h in snap.get("histograms", [])
@@ -116,6 +126,10 @@ def main(argv=None) -> int:
                     metavar="NAME",
                     help="fail unless this counter family exists with a "
                          "nonzero entry (repeatable)")
+    ap.add_argument("--require-gauge", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless this gauge family is present "
+                         "(repeatable)")
     ap.add_argument("--require-histogram", action="append", default=[],
                     metavar="NAME",
                     help="fail unless this histogram family has "
@@ -131,6 +145,8 @@ def main(argv=None) -> int:
     errors = validate(snap, schema)
     for name in args.require_counter:
         errors += check_counter(snap, name)
+    for name in args.require_gauge:
+        errors += check_gauge(snap, name)
     for name in args.require_histogram:
         errors += check_histogram(snap, name)
 
@@ -142,8 +158,9 @@ def main(argv=None) -> int:
     print(f"{args.snapshot}: ok ({len(snap.get('counters', []))} counters, "
           f"{len(snap.get('gauges', []))} gauges, "
           f"{len(snap.get('histograms', []))} histograms"
-          + (f"; required: {', '.join(args.require_counter + args.require_histogram)}"
-             if args.require_counter or args.require_histogram else "")
+          + (f"; required: {', '.join(args.require_counter + args.require_gauge + args.require_histogram)}"
+             if args.require_counter or args.require_gauge
+             or args.require_histogram else "")
           + ")")
     return 0
 

@@ -13,6 +13,14 @@ per_group`` refines the xwT scales from per-row to per-(row, group).
 registry + cache; ``--autotune`` pre-measures tile configs for the decode
 shapes first (results persist in the tuning cache for later runs).
 
+``--paged`` swaps the legacy dense-cache loop for the paged serving engine
+(``repro.paged``, DESIGN.md §13): a shared paged KV arena sized by
+``--page-size``/``--max-pages``, chunked prefill (``--prefill-chunk``
+tokens per dispatch), and a ``--scheduler fcfs|priority`` admission/
+preemption policy; ``--trace-replay trace.jsonl`` replays a
+``benchmarks/serve_bench.py`` trace at its logical arrival ticks, with
+prompt tokens derived deterministically from ``(--seed, uid)``.
+
 ``--ckpt-dir`` restores trained params from a ``launch/train.py``
 checkpoint before packing — the serve half of the dense → prune →
 train/QAT → pack → serve pipeline (a ``--sparsify`` run's final checkpoint
@@ -44,14 +52,44 @@ from repro.models.families import build_model
 from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
 
 
+def _load_trace(path: str):
+    """benchmarks/serve_bench.py trace format: JSONL rows of
+    {uid, arrival_tick, prompt_len, max_new[, priority]}."""
+    import json
+
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                rows.append(json.loads(line))
+    return sorted(rows, key=lambda r: (r["arrival_tick"], r["uid"]))
+
+
+def _trace_prompt(seed: int, uid: int, length: int, vocab: int):
+    """Per-request deterministic prompt, replayable from (seed, uid) —
+    matches benchmarks/serve_bench.py so replays are comparable."""
+    return np.random.default_rng((seed, uid)).integers(
+        0, vocab, length, dtype=np.int32)
+
+
 def run_serve(model, params, vocab_size: int, *, packed: bool = True,
               layout: str = "xwT", quantize=None,
               granularity: str = "per_row", backend: str = "reference",
               autotune: bool = False, requests: int = 8, slots: int = 4,
-              max_new: int = 16, max_len: int = 128, seed: int = 0):
+              max_new: int = 16, max_len: int = 128, seed: int = 0,
+              paged: bool = False, page_size: int = 16, max_pages=None,
+              prefill_chunk: int = 32, scheduler: str = "fcfs",
+              trace_replay=None):
     """Pack (optionally) and serve ``requests`` random prompts; returns the
-    drained :class:`ServeEngine`.  The reusable core of ``main()`` — the
-    end-to-end examples call this directly with their own trained params.
+    drained engine.  The reusable core of ``main()`` — the end-to-end
+    examples call this directly with their own trained params.
+
+    ``paged=True`` serves through :class:`repro.paged.PagedServeEngine`
+    (shared KV arena + chunked prefill + scheduled admission) instead of the
+    legacy dense-cache loop; ``trace_replay`` submits a serve_bench-format
+    JSONL trace at its logical arrival ticks instead of ``requests`` random
+    prompts (prompt tokens derived from ``(seed, uid)`` either way).
     """
     mode = "masked"
     if packed:
@@ -59,16 +97,46 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
                            granularity=granularity)
         mode = "packed"
     policy = ExecPolicy(mode=mode, backend=backend)
-    engine = ServeEngine(model, params,
-                         ServeConfig(num_slots=slots, max_len=max_len),
-                         policy=policy, autotune=autotune and packed)
-    rng = np.random.default_rng(seed)
-    for i in range(requests):
-        prompt = rng.integers(0, vocab_size, rng.integers(4, 12),
-                              dtype=np.int32)
-        engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=max_new))
-    t0 = time.time()
-    engine.run_until_drained()
+    if paged:
+        from repro.paged import (PagedServeConfig, PagedServeEngine,
+                                 SchedConfig)
+        engine = PagedServeEngine(
+            model, params,
+            PagedServeConfig(num_slots=slots, max_len=max_len,
+                             page_size=page_size, num_pages=max_pages,
+                             prefill_chunk=prefill_chunk,
+                             sched=SchedConfig(policy=scheduler)),
+            policy=policy, autotune=autotune and packed)
+    else:
+        engine = ServeEngine(model, params,
+                             ServeConfig(num_slots=slots, max_len=max_len),
+                             policy=policy, autotune=autotune and packed)
+    if trace_replay:
+        rows = _load_trace(trace_replay)
+        t0 = time.time()
+        tick, i = 0, 0
+        while i < len(rows):
+            while i < len(rows) and rows[i]["arrival_tick"] <= tick:
+                r = rows[i]
+                engine.submit(Request(
+                    uid=r["uid"],
+                    prompt=_trace_prompt(seed, r["uid"], r["prompt_len"],
+                                         vocab_size),
+                    max_new_tokens=r["max_new"],
+                    priority=r.get("priority", 1)))
+                i += 1
+            engine.step()
+            tick += 1
+        engine.run_until_drained()
+    else:
+        rng = np.random.default_rng(seed)
+        for i in range(requests):
+            prompt = rng.integers(0, vocab_size, rng.integers(4, 12),
+                                  dtype=np.int32)
+            engine.submit(Request(uid=i, prompt=prompt,
+                                  max_new_tokens=max_new))
+        t0 = time.time()
+        engine.run_until_drained()
     # decode-only wall time (packing / engine build / autotune excluded),
     # so reported tok/s stays comparable across runs and releases
     engine.drain_seconds = time.time() - t0
@@ -82,6 +150,31 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="request sampling seed (prompt tokens; trace "
+                         "replays derive each prompt from (seed, uid))")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through repro.paged.PagedServeEngine: "
+                         "shared paged KV arena + chunked prefill + "
+                         "scheduled admission/preemption (full-attention "
+                         "archs only; DESIGN.md §13)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--paged: tokens per KV arena page")
+    ap.add_argument("--max-pages", type=int, default=None,
+                    help="--paged: arena pages incl. the reserved null page "
+                         "(default: fully provisioned for num_slots; "
+                         "undersize to exercise preemption)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="--paged: prompt tokens per prefill dispatch")
+    ap.add_argument("--scheduler", choices=("fcfs", "priority"),
+                    default="fcfs",
+                    help="--paged: admission policy (priority preempts "
+                         "lower-priority requests for higher ones)")
+    ap.add_argument("--trace-replay", default=None, metavar="JSONL",
+                    help="replay this serve_bench-format trace ({uid, "
+                         "arrival_tick, prompt_len, max_new, priority} "
+                         "rows) at its logical ticks instead of --requests "
+                         "random prompts")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--layout", choices=("xwT", "block"), default="xwT",
                     help="packed-weight layout for --packed: the row-packed "
@@ -193,11 +286,19 @@ def main():
                            granularity=args.quantize_granularity,
                            backend=args.backend, autotune=args.autotune,
                            requests=args.requests, slots=args.slots,
-                           max_new=args.max_new, max_len=args.max_len)
+                           max_new=args.max_new, max_len=args.max_len,
+                           seed=args.seed, paged=args.paged,
+                           page_size=args.page_size,
+                           max_pages=args.max_pages,
+                           prefill_chunk=args.prefill_chunk,
+                           scheduler=args.scheduler,
+                           trace_replay=args.trace_replay)
     dt = engine.drain_seconds
     mode = "packed" if args.packed else "masked"
     total_tokens = sum(len(r.output) for r in engine.completed)
     tag = mode if not args.quantize else f"{mode}+{args.quantize}"
+    if args.paged:
+        tag += "+paged"
     log.info("served", requests=len(engine.completed), tokens=total_tokens,
              seconds=round(dt, 3),
              tok_s=round(total_tokens / max(dt, 1e-9), 1), mode=tag)

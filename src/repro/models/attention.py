@@ -172,6 +172,65 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache indexing (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The paper's decoupling idea applied to serving state: the KV *arena* is a
+# flat pool of fixed-size pages shared by every sequence, and each sequence
+# addresses it through a small block table — an indirection stream, exactly
+# like the col_idx stream that lets the DeMM compute units read a packed
+# weight buffer.  Page 0 is the reserved null/scratch page: block-table
+# entries of inactive or not-yet-allocated positions point there, writes for
+# masked lanes are redirected there, and it is never read un-masked.
+
+NULL_PAGE = 0
+
+
+def gather_pages(arena: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize per-sequence caches from the shared arena.
+
+    arena: (Np, P, Hkv, Dh); block_table: (B, NBLK) physical page ids in
+    sequence order.  Returns (B, NBLK*P, Hkv, Dh) where gathered position
+    ``s`` holds the KV of absolute token position ``s``.
+    """
+    b, nblk = block_table.shape
+    p = arena.shape[1]
+    return arena[block_table].reshape(b, nblk * p, *arena.shape[2:])
+
+
+def scatter_token_pages(arena: jax.Array, block_table: jax.Array,
+                        pos: jax.Array, new: jax.Array,
+                        active: Optional[jax.Array] = None) -> jax.Array:
+    """Write one token per sequence into its page (decode step).
+
+    new: (B, 1, Hkv, Dh) written at absolute positions pos (B,).  Lanes with
+    ``active`` False (empty slots, slots still prefilling) are redirected to
+    the null page so a batched decode step cannot corrupt them.
+    """
+    p = arena.shape[1]
+    page = jnp.take_along_axis(block_table, (pos // p)[:, None], axis=1)[:, 0]
+    if active is not None:
+        page = jnp.where(active, page, NULL_PAGE)
+    return arena.at[page, pos % p].set(new[:, 0].astype(arena.dtype))
+
+
+def scatter_chunk_pages(arena: jax.Array, row_table: jax.Array,
+                        pos0: jax.Array, new: jax.Array,
+                        n_valid: jax.Array) -> jax.Array:
+    """Write a K-token prefill chunk of ONE sequence straight into its pages.
+
+    new: (K, Hkv, Dh) for absolute positions pos0..pos0+K-1; rows >= n_valid
+    (padding of the last partial chunk) go to the null page.  row_table:
+    (NBLK,) — this sequence's block-table row.
+    """
+    k = new.shape[0]
+    p = arena.shape[1]
+    apos = pos0 + jnp.arange(k)
+    page = jnp.where(jnp.arange(k) < n_valid, row_table[apos // p], NULL_PAGE)
+    return arena.at[page, apos % p].set(new.astype(arena.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Full attention block (init + train/prefill/decode apply)
 # ---------------------------------------------------------------------------
 
@@ -277,6 +336,67 @@ def apply_attention_decode(
     out = out.reshape(b, 1, num_heads * head_dim)
     out = apply_linear(params["wo"], out, policy=policy)
     return out, {"k": k_cache, "v": v_cache}
+
+
+def apply_attention_decode_paged(
+    params, x, arena_k, arena_v, block_table, active, pos, *, num_heads,
+    num_kv_heads, head_dim, rope_theta, window=-1, policy=None,
+):
+    """One-token decode against a paged KV arena (DESIGN.md §13).
+
+    arena_k/arena_v: (Np, P, Hkv, Dh) shared pools; block_table (B, NBLK);
+    active (B,) bool decode mask; pos (B,) absolute write position.  The new
+    KV is scattered into the owning page (null-redirected for inactive
+    lanes), then the per-sequence caches are gathered back and attention
+    runs exactly as in the dense-cache path — same masks, same reduction —
+    so paged and dense decode are token-identical.  Returns
+    (out (B,1,D), (new_arena_k, new_arena_v)).
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, x, num_heads, num_kv_heads,
+                                   head_dim, policy)
+    q = apply_rope(q, pos[:, None], rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], rope_theta)
+    arena_k = scatter_token_pages(arena_k, block_table, pos, k_new, active)
+    arena_v = scatter_token_pages(arena_v, block_table, pos, v_new, active)
+    k_c = gather_pages(arena_k, block_table)
+    v_c = gather_pages(arena_v, block_table)
+    out = decode_attention(q, k_c, v_c, pos + 1, window=window)
+    out = out.reshape(b, 1, num_heads * head_dim)
+    out = apply_linear(params["wo"], out, policy=policy)
+    return out, (arena_k, arena_v)
+
+
+def apply_attention_prefill_paged(
+    params, x, arena_k, arena_v, row_table, pos0, n_valid, *, num_heads,
+    num_kv_heads, head_dim, rope_theta, policy=None, q_chunk=64,
+    kv_chunk=128,
+):
+    """One K-token prefill chunk of ONE sequence against the paged arena.
+
+    x: (1, K, D) embedded chunk for absolute positions pos0..pos0+K-1 (the
+    last chunk is padded; rows >= n_valid are masked to the null page).  The
+    chunk's KV is scattered into the sequence's pages first, then flash
+    attention runs the K queries against the gathered cache with
+    ``q_offset=pos0`` — causal masking covers both the intra-chunk triangle
+    and earlier chunks, and excludes unwritten (garbage) positions beyond
+    pos0 + n_valid.  One call == one compiled dispatch for K tokens: the
+    O(prompt_len) token-by-token ingest becomes O(prompt_len / K).
+    """
+    b, k_tok, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, x, x, num_heads, num_kv_heads,
+                                   head_dim, policy)
+    apos = pos0 + jnp.arange(k_tok)
+    q = apply_rope(q, apos[None, :], rope_theta)
+    k_new = apply_rope(k_new, apos[None, :], rope_theta)
+    arena_k = scatter_chunk_pages(arena_k, row_table, pos0, k_new[0], n_valid)
+    arena_v = scatter_chunk_pages(arena_v, row_table, pos0, v_new[0], n_valid)
+    k_c = gather_pages(arena_k, row_table[None])
+    v_c = gather_pages(arena_v, row_table[None])
+    out = flash_attention(q, k_c, v_c, causal=True, q_offset=pos0,
+                          q_chunk=min(q_chunk, k_tok), kv_chunk=kv_chunk)
+    out = out.reshape(b, k_tok, num_heads * head_dim)
+    return apply_linear(params["wo"], out, policy=policy), (arena_k, arena_v)
 
 
 def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,

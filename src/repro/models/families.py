@@ -117,20 +117,49 @@ class EncDecLM:
         return logits, state
 
     def init_decode_state(self, batch, max_len, enc_len=None,
-                          dtype=jnp.bfloat16):
+                          dtype=jnp.bfloat16, paged=None):
         cfg = self.cfg
         hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
         l = cfg.num_layers
         enc_len = enc_len or max_len // cfg.encoder_seq_divisor
-        return {
-            "caches": {
+        if paged is not None:
+            # self-attention caches move to the shared paged arena; the
+            # encoder output stays a dense per-slot tensor (it is read-only
+            # cross-attn context of fixed length, not a growing cache)
+            caches = {
+                "kind": Static("paged"),
+                "layout": Static(paged),
+                "k": jnp.zeros((l, paged.num_pages, paged.page_size, hkv, dh),
+                               dtype),
+                "v": jnp.zeros((l, paged.num_pages, paged.page_size, hkv, dh),
+                               dtype),
+                "block_table": jnp.zeros((batch, paged.max_blocks), jnp.int32),
+                "active": jnp.zeros((batch,), jnp.bool_),
+            }
+        else:
+            caches = {
                 "kind": Static("full"),
                 "k": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
                 "v": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
-            },
+            }
+        return {
+            "caches": caches,
             "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
             "pos": jnp.zeros((batch,), jnp.int32),
         }
+
+    def _cross_ffn(self, blk, x, enc_out, *, policy):
+        cfg = self.cfg
+        h = apply_rmsnorm(blk["ln_x"], x)
+        h = attn.apply_attention(
+            blk["xattn"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            causal=False, window=-1, kv_x=enc_out, policy=policy)
+        x = x + h
+        h = apply_rmsnorm(blk["ln2"], x)
+        h = apply_mlp(blk["mlp"], h, policy=policy)
+        return x + h
 
     def decode_step(self, params, state, tokens, *, policy=None,
                           mode=None, backend=None):
@@ -142,6 +171,30 @@ class EncDecLM:
         enc_out = state["enc_out"]
         caches = state["caches"]
 
+        if caches["kind"].value == "paged":
+            bt, active = caches["block_table"], caches["active"]
+
+            def body(x, layer):
+                blk, ak, av = layer
+                h = apply_rmsnorm(blk["ln1"], x)
+                h, arenas = attn.apply_attention_decode_paged(
+                    blk["attn"], h, ak, av, bt, active, pos,
+                    num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim,
+                    rope_theta=cfg.rope_theta, window=FULL_WINDOW,
+                    policy=policy)
+                return self._cross_ffn(blk, x + h, enc_out,
+                                       policy=policy), arenas
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["dec_layers"], caches["k"], caches["v"]))
+            x = apply_rmsnorm(params["final_norm"], x)
+            logits = apply_unembedding(params["unembed"], x,
+                                       self.cfg.vocab_size)
+            return logits, {"caches": {**caches, "k": ks, "v": vs},
+                            "enc_out": enc_out,
+                            "pos": pos + active.astype(jnp.int32)}
+
         def body(x, layer):
             blk, kc, vc = layer
             h = apply_rmsnorm(blk["ln1"], x)
@@ -150,17 +203,8 @@ class EncDecLM:
                 num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
                 head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
                 window=FULL_WINDOW, policy=policy)
-            x = x + h
-            h = apply_rmsnorm(blk["ln_x"], x)
-            h = attn.apply_attention(
-                blk["xattn"], h,
-                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
-                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-                causal=False, window=-1, kv_x=enc_out, policy=policy)
-            x = x + h
-            h = apply_rmsnorm(blk["ln2"], x)
-            h = apply_mlp(blk["mlp"], h, policy=policy)
-            return x + h, (nc["k"], nc["v"])
+            return self._cross_ffn(blk, x + h, enc_out, policy=policy), \
+                (nc["k"], nc["v"])
 
         x, (ks, vs) = jax.lax.scan(body, x,
                                    (params["dec_layers"], caches["k"],
@@ -169,6 +213,45 @@ class EncDecLM:
         logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
         return logits, {"caches": {"kind": Static("full"), "k": ks, "v": vs},
                         "enc_out": enc_out, "pos": pos + 1}
+
+    def prefill_chunk(self, params, state, tokens, slot, n_valid, *,
+                      policy=None, mode=None, backend=None):
+        """Chunked paged prefill of one decoder sequence (see
+        ``DecoderLM.prefill_chunk``); cross-attention reads the slot's dense
+        ``enc_out`` row."""
+        policy = resolve_policy(policy, mode, backend)
+        cfg = self.cfg
+        caches = state["caches"]
+        if caches["kind"].value != "paged":
+            raise NotImplementedError(
+                "prefill_chunk requires a paged decode state")
+        dtype = dtype_of(cfg.compute_dtype)
+        slot = jnp.asarray(slot, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        pos0 = state["pos"][slot]
+        row = caches["block_table"][slot]
+        enc_slot = state["enc_out"][slot][None]
+        x = apply_embedding(params["embed"], tokens[None]).astype(dtype)
+
+        def body(x, layer):
+            blk, ak, av = layer
+            h = apply_rmsnorm(blk["ln1"], x)
+            h, arenas = attn.apply_attention_prefill_paged(
+                blk["attn"], h, ak, av, row, pos0, n_valid,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                policy=policy)
+            return self._cross_ffn(blk, x + h, enc_slot,
+                                   policy=policy), arenas
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_layers"], caches["k"], caches["v"]))
+        x = apply_rmsnorm(params["final_norm"], x)
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = apply_unembedding(params["unembed"], last, cfg.vocab_size)
+        return logits, {"caches": {**caches, "k": ks, "v": vs},
+                        "enc_out": state["enc_out"],
+                        "pos": state["pos"].at[slot].add(n_valid)}
 
 
 # ---------------------------------------------------------------------------
@@ -269,7 +352,13 @@ class HybridLM:
         return logits, self.init_decode_state(
             x.shape[0], max_len or x.shape[1] + 1)
 
-    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16):
+    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16,
+                          paged=None):
+        if paged is not None:
+            raise NotImplementedError(
+                "paged KV cache is attention-only; HybridLM's Mamba2 "
+                "backbone carries O(1) recurrent state per slot (nothing to "
+                "page) and its single shared-attn cache is future work")
         cfg = self.cfg
         s = cfg.ssm
         di = s.expand * cfg.d_model
@@ -440,7 +529,12 @@ class XLSTMLM:
         logits = apply_unembedding(params["unembed"], x[:, -1:], self.cfg.vocab_size)
         return logits, self.init_decode_state(x.shape[0], max_len or 1)
 
-    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16):
+    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16,
+                          paged=None):
+        if paged is not None:
+            raise NotImplementedError(
+                "paged KV cache is attention-only; xLSTM decode state is "
+                "O(1) recurrent per slot (nothing to page)")
         cfg = self.cfg
         d = cfg.d_model
         np_ = self._n_periods

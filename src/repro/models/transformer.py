@@ -310,10 +310,37 @@ class DecoderLM:
         n_p = cfg.num_layers // period
         return period, n_p, cfg.num_layers - n_p * period
 
-    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16):
+    def init_decode_state(self, batch, max_len, dtype=jnp.bfloat16,
+                          paged=None):
+        """Decode-state pytree.  ``paged`` (a ``repro.paged.PagedLayout``)
+        swaps the dense per-slot KV caches for one shared paged arena +
+        per-sequence block tables (DESIGN.md §13); only full-attention
+        caches are paged — windowed ring buffers are already O(window)."""
         cfg = self.cfg
         hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
         l = cfg.num_layers
+
+        if paged is not None:
+            if cfg.attention != "full":
+                raise NotImplementedError(
+                    f"paged KV cache needs attention='full' (got "
+                    f"{cfg.attention!r}): windowed ring buffers are already "
+                    f"O(window) per slot; paging the local_global global "
+                    f"layers is future work (DESIGN.md §13)")
+            return {
+                "caches": {
+                    "kind": Static("paged"),
+                    "layout": Static(paged),
+                    "k": jnp.zeros((l, paged.num_pages, paged.page_size,
+                                    hkv, dh), dtype),
+                    "v": jnp.zeros((l, paged.num_pages, paged.page_size,
+                                    hkv, dh), dtype),
+                    "block_table": jnp.zeros((batch, paged.max_blocks),
+                                             jnp.int32),
+                    "active": jnp.zeros((batch,), jnp.bool_),
+                },
+                "pos": jnp.zeros((batch,), jnp.int32),
+            }
 
         def ring(*lead):
             w = int(cfg.local_window if cfg.attention == "local_global"
@@ -370,6 +397,17 @@ class DecoderLM:
                                       cfg=self.cfg, window=window, policy=policy)
         return self._decode_ffn(blk, x + h, policy), nc
 
+    def _decode_paged_layer(self, blk, x, arena_k, arena_v, bt, active, pos,
+                            policy):
+        cfg = self.cfg
+        h = apply_rmsnorm(blk["ln1"], x)
+        h, arenas = attn.apply_attention_decode_paged(
+            blk["attn"], h, arena_k, arena_v, bt, active, pos,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=FULL_WINDOW, policy=policy)
+        return self._decode_ffn(blk, x + h, policy), arenas
+
     def decode_step(self, params, state, tokens, *, policy=None,
                           mode=None, backend=None):
         policy = resolve_policy(policy, mode, backend)
@@ -391,6 +429,26 @@ class DecoderLM:
             x, (ks, vs) = jax.lax.scan(
                 body, x, (params["layers"], caches["k"], caches["v"]))
             new_caches = {"kind": Static("full"), "k": ks, "v": vs}
+
+        elif kind == "paged":
+            bt, active = caches["block_table"], caches["active"]
+
+            def body(x, layer):
+                blk, ak, av = layer
+                x, arenas = self._decode_paged_layer(
+                    blk, x, ak, av, bt, active, pos, policy)
+                return x, arenas
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], caches["k"], caches["v"]))
+            new_caches = {**caches, "k": ks, "v": vs}
+            x = apply_rmsnorm(params["final_norm"], x)
+            logits = apply_unembedding(params["unembed"], x,
+                                       self.cfg.vocab_size)
+            # only lanes decoding this tick advance; prefilling/empty slots
+            # keep their position (their pages were null-redirected too)
+            return logits, {"caches": new_caches,
+                            "pos": pos + active.astype(jnp.int32)}
 
         elif kind == "swa":
             def body(x, layer):
@@ -450,6 +508,49 @@ class DecoderLM:
         x = apply_rmsnorm(params["final_norm"], x)
         logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
         return logits, {"caches": new_caches, "pos": pos + 1}
+
+    def prefill_chunk(self, params, state, tokens, slot, n_valid, *,
+                      policy=None, mode=None, backend=None):
+        """Ingest one K-token chunk of a single sequence into its pages.
+
+        ``tokens`` is a fixed-size ``(K,)`` int32 chunk (padded past
+        ``n_valid``); ``slot`` and ``n_valid`` are traced scalars, so one
+        compiled program serves every chunk of every request —
+        O(prompt_len / K) dispatches instead of O(prompt_len).  Returns the
+        logits at the last *valid* position (shape ``(1, 1, V)``) so the
+        final chunk yields the first sampled token for free.
+        """
+        policy = resolve_policy(policy, mode, backend)
+        cfg = self.cfg
+        caches = state["caches"]
+        if caches["kind"].value != "paged":
+            raise NotImplementedError(
+                "prefill_chunk requires a paged decode state "
+                "(init_decode_state(..., paged=PagedLayout))")
+        dtype = dtype_of(cfg.compute_dtype)
+        slot = jnp.asarray(slot, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        pos0 = state["pos"][slot]
+        row = caches["block_table"][slot]
+        x = apply_embedding(params["embed"], tokens[None]).astype(dtype)
+
+        def body(x, layer):
+            blk, ak, av = layer
+            h = apply_rmsnorm(blk["ln1"], x)
+            h, arenas = attn.apply_attention_prefill_paged(
+                blk["attn"], h, ak, av, row, pos0, n_valid,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                policy=policy)
+            return self._decode_ffn(blk, x + h, policy), arenas
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], caches["k"], caches["v"]))
+        x = apply_rmsnorm(params["final_norm"], x)
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = apply_unembedding(params["unembed"], last, cfg.vocab_size)
+        return logits, {"caches": {**caches, "k": ks, "v": vs},
+                        "pos": state["pos"].at[slot].add(n_valid)}
 
 
 # ---------------------------------------------------------------------------

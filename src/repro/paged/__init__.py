@@ -1,0 +1,44 @@
+"""repro.paged — paged KV cache, chunked prefill, and scheduled serving.
+
+The paper's decoupling idea applied to serving state (DESIGN.md §13): KV
+storage is decoupled from decode slots the way DeMM decouples its memory
+block from the compute units — a shared physical arena of fixed-size pages
+addressed through per-sequence block tables (the ``col_idx`` indirection
+idiom one level up).  On top of it: chunked prefill as a second compiled
+program (O(prompt_len / K) ingest dispatches) and an admission/preemption
+scheduler driving the :class:`PagedServeEngine` tick.
+
+Layering: this package never imports ``repro.models`` — the model is
+injected (engine / launch drivers), and the device-side gather/scatter
+indexing lives in ``repro.models.attention``.
+"""
+
+from repro.paged.kv_cache import (  # noqa: F401
+    NULL_PAGE,
+    PageAllocator,
+    PagedKVCache,
+    PagedLayout,
+)
+from repro.paged.prefill import ChunkedPrefill  # noqa: F401
+from repro.paged.scheduler import (  # noqa: F401
+    SchedConfig,
+    Scheduler,
+    Stage,
+)
+from repro.paged.engine import (  # noqa: F401
+    PagedServeConfig,
+    PagedServeEngine,
+)
+
+__all__ = [
+    "NULL_PAGE",
+    "PageAllocator",
+    "PagedKVCache",
+    "PagedLayout",
+    "ChunkedPrefill",
+    "SchedConfig",
+    "Scheduler",
+    "Stage",
+    "PagedServeConfig",
+    "PagedServeEngine",
+]

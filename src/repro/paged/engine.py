@@ -1,0 +1,414 @@
+"""PagedServeEngine: scheduled serving over a paged KV arena.
+
+The rewritten engine tick is admit → prefill → decode:
+
+1. **admit** — the scheduler hands over queued requests in policy order; a
+   free slot is claimed and pages for the prompt are allocated (admission
+   may preempt a strictly lower-priority running request under the
+   ``priority`` policy).
+2. **prefill** — up to ``prefill_chunks_per_tick`` chunk dispatches are
+   spent round-robin over prefilling slots (``repro.paged.prefill``); the
+   final chunk's logits yield the request's first generated token for free.
+3. **decode** — one batched decode step over every decode-ready slot; lanes
+   still prefilling (or empty) are masked out via the ``active`` mask and
+   null-page write redirection, so the two compiled programs interleave
+   freely within a tick.
+
+Page exhaustion preempts: the victim's pages are freed, the request is
+requeued with its prompt + generated-so-far output, and a later admission
+re-prefills it — greedy decoding makes the preempt/resume cycle
+token-identical to an uninterrupted run (DESIGN.md §13).
+
+Control state (positions, block tables, the decode mask) is mirrored on the
+host and pushed to the device pytree before each program call — value-only
+updates, never a retrace.  Layering: this module never imports
+``repro.models``; the model (and its two compiled entry points) is injected
+by the caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.paged.kv_cache import PagedKVCache, PagedLayout
+from repro.paged.prefill import ChunkedPrefill
+from repro.paged.scheduler import SchedConfig, Scheduler, Stage
+from repro.serve.serve_loop import Request
+
+
+@dataclasses.dataclass
+class PagedServeConfig:
+    num_slots: int = 4
+    max_len: int = 256
+    page_size: int = 16
+    num_pages: Optional[int] = None   # None: fully provisioned (no sharing)
+    prefill_chunk: int = 32
+    greedy: bool = True
+    sched: SchedConfig = dataclasses.field(default_factory=SchedConfig)
+
+    def __post_init__(self):
+        if not self.greedy:
+            raise NotImplementedError(
+                "paged serving is greedy-only: preemption recovery relies "
+                "on deterministic resume (DESIGN.md §13)")
+
+
+class PagedServeEngine:
+    """Slot-batched serving with a shared paged KV arena.
+
+    Same surface as the legacy :class:`~repro.serve.serve_loop.ServeEngine`
+    (``submit`` / ``step`` / ``run_until_drained`` / ``completed``) plus the
+    paged internals: ``kv`` (arena bookkeeping), ``sched`` (admission /
+    preemption policy), and ``prefill`` (the chunked-ingest program).
+    """
+
+    def __init__(self, model, params, cfg: PagedServeConfig, *, policy=None,
+                 autotune=False, metrics=None):
+        from repro.core.sparse_linear import resolve_policy
+
+        policy = resolve_policy(policy, None, None)
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.policy = policy
+        if autotune and policy.mode == "packed":
+            from repro import tune
+            tune.autotune_packed_tree(params, cfg.num_slots)
+        self.layout = PagedLayout.for_serve(
+            cfg.max_len, page_size=cfg.page_size, num_pages=cfg.num_pages,
+            num_slots=cfg.num_slots)
+        self.kv = PagedKVCache(self.layout, cfg.num_slots)
+        self.state = model.init_decode_state(
+            cfg.num_slots, cfg.max_len, dtype=jnp.float32, paged=self.layout)
+        self._decode = jax.jit(
+            lambda p, s, t: model.decode_step(p, s, t, policy=policy))
+        self.prefill = ChunkedPrefill(model, chunk=cfg.prefill_chunk,
+                                      policy=policy)
+        self.sched = Scheduler(cfg.sched)
+        # host mirrors of the control leaves (pushed before each program)
+        self._pos = np.zeros((cfg.num_slots,), np.int32)
+        self._decode_mask = np.zeros((cfg.num_slots,), bool)
+        self._next_tok = np.zeros((cfg.num_slots, 1), np.int32)
+        self.active: List[Optional[Request]] = [None] * cfg.num_slots
+        self._work: List[Optional[np.ndarray]] = [None] * cfg.num_slots
+        self._fed = [0] * cfg.num_slots       # work tokens ingested
+        self.completed: List[Request] = []
+        self.tick_count = 0
+        # -- observability (legacy names + paged families) ------------------
+        self.metrics = metrics if metrics is not None else obs.metrics()
+        m = self.metrics
+        self.trace = m.trace
+        self._spans = {}
+        self._m_submitted = m.counter(
+            "serve_requests_submitted_total", help="requests accepted")
+        self._m_completed = m.counter(
+            "serve_requests_completed_total", help="requests fully decoded")
+        self._m_tokens = m.counter(
+            "serve_tokens_total", help="generated (decode) tokens")
+        self._m_prefill_tok = m.counter(
+            "serve_prefill_tokens_total", help="prompt tokens prefilled")
+        self._m_preempt = m.counter(
+            "serve_preempt_total",
+            help="requests preempted by page eviction")
+        self._m_disp_prefill = m.counter(
+            "serve_step_dispatch_total",
+            help="compiled-program invocations per program",
+            program="prefill")
+        self._m_disp_decode = m.counter(
+            "serve_step_dispatch_total",
+            help="compiled-program invocations per program",
+            program="decode")
+        self._m_queue_wait = m.histogram(
+            "serve_queue_wait_seconds", help="submit -> first slot claim")
+        self._m_ttft = m.histogram(
+            "serve_time_to_first_token_seconds",
+            help="submit -> first generated token")
+        self._m_tok_lat = m.histogram(
+            "serve_decode_token_seconds",
+            help="decode-step latency per generated token")
+        self._m_tick = m.histogram(
+            "serve_tick_seconds", help="full engine tick duration")
+        self._m_slots = m.gauge(
+            "serve_slots_active", help="occupied decode slots")
+        self._m_queue_depth = m.gauge(
+            "serve_queue_depth", help="requests waiting for a slot/pages")
+        self._m_pages_free = m.gauge(
+            "kv_pages_free", help="unallocated KV arena pages")
+        self._m_occupancy = m.gauge(
+            "kv_arena_occupancy",
+            help="fraction of usable arena pages allocated")
+        self._m_frag = m.gauge(
+            "kv_page_fragmentation",
+            help="allocated-but-empty token-slot fraction (last-page slack)")
+        self._m_tps = m.gauge(
+            "serve_tokens_per_second",
+            help="decode throughput of the last run_until_drained window")
+        self._m_pages_free.set(self.kv.pages_free)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if len(req.prompt) > self.cfg.max_len - 1:
+            raise ValueError(
+                f"request {req.uid}: prompt of {len(req.prompt)} tokens "
+                f"exceeds max_len-1 = {self.cfg.max_len - 1}")
+        peak = min(len(req.prompt) + req.max_new_tokens, self.cfg.max_len)
+        need = self.layout.pages_for(peak)
+        if need > min(self.layout.usable_pages, self.layout.max_blocks):
+            raise RuntimeError(
+                f"request {req.uid} needs {need} pages at peak ({peak} "
+                f"tokens) but the arena has only "
+                f"{self.layout.usable_pages} usable pages "
+                f"(max_blocks={self.layout.max_blocks}) — it could never "
+                f"complete even with every other sequence evicted; raise "
+                f"--max-pages or --page-size")
+        req.output = []
+        req.submit_ts = time.monotonic()
+        self.sched.submit(req)
+        self._m_submitted.inc()
+        self._m_queue_depth.set(len(self.sched))
+        self._spans[req.uid] = self.trace.span("request", uid=req.uid)
+        self.trace.event("request_submit", uid=req.uid,
+                         prompt_len=len(req.prompt), priority=req.priority)
+
+    # -- device-control sync ------------------------------------------------
+
+    def _sync_control(self):
+        """Push the host-side control mirrors (positions, block tables,
+        decode mask) into the device pytree.  Value-only: shapes and the
+        Static kind/layout leaves never change, so no retrace.  The mirrors
+        are COPIED before upload — jax's CPU client may zero-copy-alias an
+        aligned numpy buffer, and these arrays keep mutating in place."""
+        c = self.state["caches"]
+        self.state = {
+            **self.state,
+            "pos": jnp.asarray(np.array(self._pos)),
+            "caches": {**c,
+                       "block_table": jnp.asarray(np.array(self.kv.table)),
+                       "active": jnp.asarray(np.array(self._decode_mask))},
+        }
+
+    def _page_gauges(self):
+        self._m_pages_free.set(self.kv.pages_free)
+        self._m_occupancy.set(self.kv.occupancy())
+        self._m_frag.set(self.kv.fragmentation())
+
+    # -- lifecycle transitions ----------------------------------------------
+
+    def _claim(self, slot: int, req: Request):
+        work = (np.concatenate([np.asarray(req.prompt, np.int32),
+                                np.asarray(req.output, np.int32)])
+                if req.output else np.asarray(req.prompt, np.int32))
+        self.active[slot] = req
+        self._work[slot] = work
+        self._fed[slot] = 0
+        self._pos[slot] = 0
+        self._decode_mask[slot] = False
+        self.kv.note_tokens(slot, 0)
+        now = time.monotonic()
+        if req.claim_ts is None:
+            self._m_queue_wait.observe(now - req.submit_ts)
+        req.claim_ts = now
+        self.sched.stage[req.uid] = Stage.SCHEDULED
+        self.trace.event("request_schedule", uid=req.uid, slot=slot,
+                         resume_tokens=len(req.output))
+
+    def _preempt(self, slot: int):
+        req = self.active[slot]
+        freed = self.kv.release(slot)
+        self.active[slot] = None
+        self._work[slot] = None
+        self._decode_mask[slot] = False
+        self._pos[slot] = 0
+        self.sched.stage[req.uid] = Stage.PREEMPTED
+        self.sched.requeue(req)
+        self._m_preempt.inc()
+        self._m_queue_depth.set(len(self.sched))
+        self._page_gauges()
+        self.trace.event("request_preempt", uid=req.uid, slot=slot,
+                         pages_freed=freed, tokens_done=len(req.output))
+
+    def _complete(self, slot: int, req: Request, now: float):
+        req.complete_ts = now
+        self.completed.append(req)
+        self.kv.release(slot)
+        self.active[slot] = None
+        self._work[slot] = None
+        self._decode_mask[slot] = False
+        self._pos[slot] = 0
+        self._m_completed.inc()
+        self._page_gauges()
+        self.sched.stage[req.uid] = Stage.COMPLETE
+        self.trace.event("request_complete", uid=req.uid,
+                         tokens=len(req.output),
+                         preempts=self.sched.preempts_of[req.uid])
+        span = self._spans.pop(req.uid, None)
+        if span is not None:
+            span.end(tokens=len(req.output))
+
+    # -- tick phases --------------------------------------------------------
+
+    def _admit(self):
+        while len(self.sched):
+            free = next((i for i in range(self.cfg.num_slots)
+                         if self.active[i] is None), None)
+            if free is None:
+                # priority admission: preempt a strictly worse running req
+                if not self.cfg.sched.preempt:
+                    break
+                incoming = self.sched.peek()
+                victim = self.sched.victim(
+                    [(s, r) for s, r in enumerate(self.active)
+                     if r is not None], incoming=incoming)
+                if victim is None:
+                    break
+                self._preempt(victim)
+                continue
+            req = self.sched.peek()
+            work_len = len(req.prompt) + len(req.output or ())
+            if not self.kv.ensure_capacity(free, work_len):
+                if not self.cfg.sched.preempt:
+                    break
+                victim = self.sched.victim(
+                    [(s, r) for s, r in enumerate(self.active)
+                     if r is not None], incoming=req)
+                if victim is None:
+                    break
+                self._preempt(victim)
+                continue
+            self._claim(free, self.sched.pop())
+            self._m_queue_depth.set(len(self.sched))
+            self._page_gauges()
+
+    def _finish_prefill(self, slot: int, req: Request, logits, now: float):
+        """Final chunk done: sample the next token from its logits (first
+        generated token for a fresh request; the continuation token for a
+        preempt-resume)."""
+        tok = int(np.argmax(np.asarray(logits[0, 0], np.float32)))
+        req.output.append(tok)
+        self._next_tok[slot, 0] = tok
+        self._m_tokens.inc()
+        if len(req.output) == 1:
+            req.first_token_ts = now
+            self._m_ttft.observe(now - req.submit_ts)
+            self.trace.event("request_first_token", uid=req.uid)
+        if (len(req.output) >= req.max_new_tokens or
+                (req.eos_id is not None and tok == req.eos_id)):
+            self._complete(slot, req, now)
+            return
+        self._decode_mask[slot] = True
+        self.sched.stage[req.uid] = Stage.DECODE
+
+    def _run_prefill(self):
+        budget = self.cfg.sched.prefill_chunks_per_tick
+        while budget > 0:
+            slots = [i for i in range(self.cfg.num_slots)
+                     if self.active[i] is not None
+                     and not self._decode_mask[i]]
+            if not slots:
+                return
+            for i in slots:
+                if budget <= 0:
+                    return
+                req = self.active[i]
+                if self._fed[i] == 0:
+                    self.sched.stage[req.uid] = Stage.PREFILL
+                    self.trace.event("request_prefill", uid=req.uid, slot=i,
+                                     tokens=len(self._work[i]),
+                                     chunks=self.prefill.num_chunks(
+                                         len(self._work[i])))
+                self._sync_control()
+                was = self._fed[i]
+                logits, self.state, fed = self.prefill.step(
+                    self.params, self.state, self._work[i], was, i)
+                self._fed[i] = fed
+                self._pos[i] = fed
+                self.kv.note_tokens(i, fed)
+                self._m_disp_prefill.inc()
+                self._m_prefill_tok.inc(fed - was)
+                budget -= 1
+                if fed == len(self._work[i]):
+                    self._finish_prefill(i, req, logits, time.monotonic())
+            self._page_gauges()
+
+    def _run_decode(self) -> int:
+        # grow each decoding sequence's pages for this tick's write;
+        # exhaustion preempts the policy's victim (possibly the grower)
+        for i in range(self.cfg.num_slots):
+            while (self._decode_mask[i]
+                   and not self.kv.ensure_capacity(i, int(self._pos[i]) + 1)):
+                if not self.cfg.sched.preempt:
+                    raise RuntimeError(
+                        "KV arena exhausted with preemption disabled "
+                        "(sched.preempt=False); raise --max-pages")
+                victim = self.sched.victim(
+                    [(s, r) for s, r in enumerate(self.active)
+                     if r is not None])
+                self._preempt(victim)
+        if not self._decode_mask.any():
+            return 0
+        self._sync_control()
+        t0 = time.perf_counter()
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(np.array(self._next_tok)))
+        logits = np.asarray(logits[:, 0], np.float32)   # device sync
+        step_dt = time.perf_counter() - t0
+        self._m_disp_decode.inc()
+        now = time.monotonic()
+        n = 0
+        for i in range(self.cfg.num_slots):
+            if not self._decode_mask[i]:
+                continue
+            n += 1
+            req = self.active[i]
+            self._pos[i] += 1
+            self.kv.note_tokens(i, int(self._pos[i]))
+            tok = int(np.argmax(logits[i]))
+            req.output.append(tok)
+            self._next_tok[i, 0] = tok
+            self._m_tokens.inc()
+            self._m_tok_lat.observe(step_dt)
+            if (len(req.output) >= req.max_new_tokens or
+                    (req.eos_id is not None and tok == req.eos_id) or
+                    int(self._pos[i]) >= self.cfg.max_len - 1):
+                self._complete(i, req, now)
+        self._page_gauges()
+        return n
+
+    # -- public loop --------------------------------------------------------
+
+    def step(self) -> int:
+        """One engine tick (admit → prefill → decode).  Returns the number
+        of occupied slots after the tick."""
+        t_tick = time.perf_counter()
+        self.tick_count += 1
+        self._admit()
+        self._run_prefill()
+        self._run_decode()
+        n_active = sum(r is not None for r in self.active)
+        self._m_slots.set(n_active)
+        self._m_queue_depth.set(len(self.sched))
+        self._m_tick.observe(time.perf_counter() - t_tick)
+        return n_active
+
+    def run_until_drained(self, max_ticks: int = 10000):
+        ticks = 0
+        t0 = time.perf_counter()
+        tok0 = self._m_tokens.value
+        while (len(self.sched) or any(r is not None for r in self.active)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        dt = time.perf_counter() - t0
+        if dt > 0:
+            self._m_tps.set((self._m_tokens.value - tok0) / dt)
+        return ticks

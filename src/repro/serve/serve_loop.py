@@ -48,6 +48,7 @@ class Request:
     prompt: np.ndarray          # (T,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    priority: int = 1           # 0 = highest; scheduler policy (repro.paged)
     # filled by the engine:
     output: Optional[list] = None
     # lifecycle timestamps (time.monotonic seconds), filled by the engine:

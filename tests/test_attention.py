@@ -115,3 +115,75 @@ def test_decode_attention_matches_full():
                            cache_len=jnp.full((2,), 32, jnp.int32))
     np.testing.assert_allclose(np.asarray(got)[:, 0], full[:, -1], rtol=1e-4,
                                atol=1e-4)
+
+# ---------------------------------------------------------------------------
+# Ring-buffer (sliding-window) cache wraparound
+# ---------------------------------------------------------------------------
+
+def _windowed_model(arch, **overrides):
+    import dataclasses
+
+    from repro.configs.base import get_arch
+    from repro.models.families import build_model
+
+    # float32 compute so the decode-vs-sequence comparison is tight
+    cfg = dataclasses.replace(get_arch(arch).reduced(),
+                              compute_dtype="float32", **overrides)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def test_ring_cache_wraparound_matches_sequence_prefill():
+    """Decoding far past ``window`` must keep matching the sequence-level
+    windowed path: each ring slot is overwritten (pos % W) exactly when its
+    old position leaves the window, and ``slot_pos`` masks the rest."""
+    cfg, model, params = _windowed_model("h2o_danube_1_8b", window=8)
+    T = 21                                          # 2.6 windows deep
+    tokens = ((np.arange(T) * 7 + 3) % cfg.vocab_size).astype(np.int32)
+    step = jax.jit(lambda p, s, t: model.decode_step(p, s, t))
+    state = model.init_decode_state(1, 32, dtype=jnp.float32)
+    for t in range(T):
+        logits, state = step(params, state,
+                             jnp.asarray([[tokens[t]]], jnp.int32))
+        if t in (6, 11, 20):                        # pre-, mid-, post-wrap
+            want, _ = model.prefill(
+                params, {"tokens": jnp.asarray(tokens[None, :t + 1])})
+            np.testing.assert_allclose(
+                np.asarray(logits[0, 0], np.float32),
+                np.asarray(want[0, 0], np.float32), rtol=2e-4, atol=2e-4)
+
+
+def test_ring_cache_slot_pos_eviction_bookkeeping():
+    """After T decode steps with window W, slot s must hold the *latest*
+    absolute position p < T with p % W == s — older positions are evicted
+    by overwrite, never masked back in."""
+    cfg, model, params = _windowed_model("h2o_danube_1_8b", window=8)
+    T, W = 21, 8
+    step = jax.jit(lambda p, s, t: model.decode_step(p, s, t))
+    state = model.init_decode_state(1, 32, dtype=jnp.float32)
+    for t in range(T):
+        _, state = step(params, state, jnp.asarray([[t % cfg.vocab_size]],
+                                                   jnp.int32))
+    slot_pos = np.asarray(state["caches"]["ring"]["slot_pos"])  # (L, B, W)
+    want = np.array([max(p for p in range(T) if p % W == s)
+                     for s in range(W)])
+    assert np.all(slot_pos == want[None, None, :])
+    assert int(state["pos"][0]) == T
+
+
+def test_local_global_rings_wrap_past_local_window():
+    """local_global archs mix windowed (local) and full (tail) layers; the
+    local rings must survive wraparound too."""
+    cfg, model, params = _windowed_model("gemma3_1b", local_window=8)
+    T = 19
+    tokens = ((np.arange(T) * 5 + 1) % cfg.vocab_size).astype(np.int32)
+    step = jax.jit(lambda p, s, t: model.decode_step(p, s, t))
+    state = model.init_decode_state(1, 32, dtype=jnp.float32)
+    logits = None
+    for t in range(T):
+        logits, state = step(params, state,
+                             jnp.asarray([[tokens[t]]], jnp.int32))
+    want, _ = model.prefill(params, {"tokens": jnp.asarray(tokens[None])})
+    np.testing.assert_allclose(np.asarray(logits[0, 0], np.float32),
+                               np.asarray(want[0, 0], np.float32),
+                               rtol=2e-4, atol=2e-4)
