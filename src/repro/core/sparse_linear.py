@@ -33,7 +33,10 @@ rejected with a ValueError pointing at ``launch.pack_tree`` /
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional, Union
+from typing import TYPE_CHECKING, Mapping, Optional, Union
+
+if TYPE_CHECKING:   # core must not import sharding at runtime (layering)
+    from repro.sharding.plan import ShardingPlan
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +70,13 @@ class ExecPolicy:
       (e.g. ``{"k": 2}``) applied to the node's stored config before the
       mask/kernel runs.  For packed nodes the override must preserve
       ``n_effective`` (the packed array layout is fixed at pack time).
+    * ``plan`` — optional :class:`~repro.sharding.plan.ShardingPlan`
+      describing how the params this policy executes against are
+      distributed (TP/PP/DP degrees, mesh axes, renumber policy).  The
+      policy itself stays placement-agnostic — engines and step builders
+      read the plan to build meshes, renumber packed weights, and install
+      the sharding context; a plan is frozen/hashable so it rides along as
+      a jit static argument.
 
     Hashable (static-safe under jit); ``cfg_overrides`` dicts are
     normalized to sorted item tuples.
@@ -75,6 +85,7 @@ class ExecPolicy:
     mode: str = "masked"
     backend: str = "reference"
     cfg_overrides: Union[tuple, Mapping[str, int]] = ()
+    plan: Optional["ShardingPlan"] = None
 
     def __post_init__(self):
         if self.mode not in MODES:

@@ -323,14 +323,29 @@ class PackedWeight:
     ``(*stack, RB, A_max, block_r)`` (per row-block × group × row) for
     ``block``.  The dense weight is ``scales ⊙ values`` broadcast over the
     packed axes; kernels dequantize in-register (w8a16).
+
+    Contraction-dim sharding (``repro.sharding``): ``shard_axis`` (static,
+    e.g. ``"model"``) marks the *shard-stacked* form produced by
+    :func:`shard_packed_row_parallel` — the children carry an extra dim of
+    size ``shards`` **between** the stack dims and the layout core, each
+    slice locally renumbered over its ``K // shards`` column chunk, so a
+    mesh can place one slice per device and combine partial products with
+    ``psum``.  ``dense_shape`` stays the *global* ``(O, K)``; for the
+    ``block`` layout ``block_geom[1]`` becomes the shared per-shard
+    ``a_max``.  A *local* per-shard slice (inside ``shard_map``, see
+    :func:`shard_slice`) instead has ``shard_axis=None`` with a local
+    ``dense_shape`` and keeps ``shards`` as provenance so kernel dispatch
+    and tune-cache keys can tell a shard-local problem from a global one.
     """
 
     __slots__ = ("values", "indices", "cfg", "dense_shape", "layout",
-                 "active_groups", "block_geom", "scales", "qdtype")
+                 "active_groups", "block_geom", "scales", "qdtype",
+                 "shard_axis", "shards")
 
     def __init__(self, values, indices, *, cfg: SparsityConfig, dense_shape,
                  layout: str = LAYOUT_XWT, active_groups=None,
-                 block_geom=None, scales=None, qdtype=None):
+                 block_geom=None, scales=None, qdtype=None,
+                 shard_axis=None, shards: int = 1):
         if not isinstance(cfg, SparsityConfig):
             raise TypeError(f"cfg must be a SparsityConfig, got {type(cfg)}")
         if layout not in LAYOUTS:
@@ -352,6 +367,17 @@ class PackedWeight:
         if len(dense_shape) != 2:
             raise ValueError(f"dense_shape must be 2-D (out, in), got "
                              f"{dense_shape}")
+        shards = int(shards)
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shard_axis is not None:
+            if not isinstance(shard_axis, str):
+                raise TypeError(f"shard_axis must be a mesh axis name "
+                                f"(str) or None, got {shard_axis!r}")
+            if shards < 2:
+                raise ValueError(
+                    "shard_axis set but shards < 2; the shard-stacked form "
+                    "needs the shard-count dim (shard_packed_row_parallel)")
         vshape = getattr(values, "shape", None)
         if layout == LAYOUT_BLOCK:
             if active_groups is None:
@@ -376,6 +402,12 @@ class PackedWeight:
                         f"(*, {dense_shape[0] // block_geom[0]}, "
                         f"{block_geom[1]}, {block_geom[0]}, "
                         f"{cfg.n_effective})")
+            if (shard_axis is not None and vshape is not None
+                    and len(vshape) >= 5 and int(vshape[-5]) != shards):
+                raise ValueError(
+                    f"shard-stacked block values {tuple(vshape)} carry "
+                    f"{int(vshape[-5])} shard slices, expected shards="
+                    f"{shards}")
         else:
             if active_groups is not None or block_geom is not None:
                 raise ValueError(
@@ -383,12 +415,21 @@ class PackedWeight:
                     f"{LAYOUT_BLOCK!r} layout, not {layout!r}")
             if vshape is not None and len(vshape) >= 3:
                 g, ne = int(vshape[-2]), int(vshape[-1])
-                if ne != cfg.n_effective or g * cfg.m != dense_shape[1]:
+                # Shard-stacked values hold G // shards groups per slice.
+                span = shards if shard_axis is not None else 1
+                if ne != cfg.n_effective or g * cfg.m * span != dense_shape[1]:
                     raise ValueError(
                         f"values shape {tuple(vshape)} is inconsistent with "
                         f"the packed layout of cfg={cfg.pattern_name()} over "
                         f"dense {dense_shape}: expected "
-                        f"(*, {dense_shape[1] // cfg.m}, {cfg.n_effective})")
+                        f"(*, {dense_shape[1] // (cfg.m * span)}, "
+                        f"{cfg.n_effective})")
+            if (shard_axis is not None and vshape is not None
+                    and len(vshape) >= 4 and int(vshape[-4]) != shards):
+                raise ValueError(
+                    f"shard-stacked xwT values {tuple(vshape)} carry "
+                    f"{int(vshape[-4])} shard slices, expected shards="
+                    f"{shards}")
         sshape = getattr(scales, "shape", None)
         if qdtype is not None and sshape is not None and vshape is not None:
             if layout == LAYOUT_BLOCK:
@@ -412,6 +453,8 @@ class PackedWeight:
         self.block_geom = block_geom
         self.scales = scales
         self.qdtype = qdtype
+        self.shard_axis = shard_axis
+        self.shards = shards
 
     # ---- static geometry -------------------------------------------------
     @property
@@ -429,11 +472,16 @@ class PackedWeight:
     @property
     def stack_dims(self) -> tuple:
         """Leading (scan/vmap) stack dims in front of the layout's core:
-        (O, G, Ne) for ``xwT``, (RB, A_max, block_r, Ne) for ``block``."""
+        (O, G, Ne) for ``xwT``, (RB, A_max, block_r, Ne) for ``block``.
+        The shard-stacked form's shard dim sits between the stack dims and
+        the core (so layer-scan still slices axis 0) and is not a stack
+        dim."""
         shape = getattr(self.values, "shape", None)
         if shape is None:
             return ()
         core = 4 if self.layout == LAYOUT_BLOCK else 3
+        if self.shard_axis is not None:
+            core += 1
         return tuple(shape[:-core])
 
     def replace(self, **kw) -> "PackedWeight":
@@ -441,7 +489,8 @@ class PackedWeight:
                "cfg": self.cfg, "dense_shape": self.dense_shape,
                "layout": self.layout, "active_groups": self.active_groups,
                "block_geom": self.block_geom, "scales": self.scales,
-               "qdtype": self.qdtype}
+               "qdtype": self.qdtype, "shard_axis": self.shard_axis,
+               "shards": self.shards}
         out.update(kw)
         return PackedWeight(out.pop("values"), out.pop("indices"), **out)
 
@@ -449,9 +498,14 @@ class PackedWeight:
         vs = getattr(self.values, "shape", "?")
         geom = f", block_geom={self.block_geom}" if self.block_geom else ""
         q = f", qdtype={self.qdtype!r}" if self.qdtype else ""
+        sh = ""
+        if self.shards > 1:
+            sh = f", shards={self.shards}"
+            if self.shard_axis is not None:
+                sh += f" over {self.shard_axis!r}"
         return (f"PackedWeight(values={vs}, cfg={self.cfg.pattern_name()!r}, "
                 f"dense_shape={self.dense_shape}, layout={self.layout!r}"
-                f"{geom}{q})")
+                f"{geom}{q}{sh})")
 
     # ---- conversions -----------------------------------------------------
     @classmethod
@@ -478,7 +532,10 @@ class PackedWeight:
 
     def to_dense(self) -> jax.Array:
         """Scatter back to the dense weight (dequantizing if needed),
-        restoring any stack dims."""
+        restoring any stack dims.  Shard-stacked weights are merged back to
+        the global packing first (concrete data only for ``block``)."""
+        if self.shard_axis is not None:
+            return unshard_packed(self).to_dense()
         o, k = self.dense_shape
         if self.layout == LAYOUT_BLOCK:
             stack = self.stack_dims
@@ -502,7 +559,8 @@ class PackedWeight:
 
 
 def _pw_flatten(pw: PackedWeight):
-    aux = (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom, pw.qdtype)
+    aux = (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom, pw.qdtype,
+           pw.shard_axis, pw.shards)
     children = [pw.values, pw.indices]
     if pw.layout == LAYOUT_BLOCK:
         children.append(pw.active_groups)
@@ -520,14 +578,14 @@ def _pw_flatten_with_keys(pw: PackedWeight):
     if pw.qdtype is not None:
         keyed.append((jax.tree_util.GetAttrKey("scales"), pw.scales))
     return tuple(keyed), (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom,
-                          pw.qdtype)
+                          pw.qdtype, pw.shard_axis, pw.shards)
 
 
 def _pw_unflatten(aux, children) -> PackedWeight:
     # Raw rebuild, no __init__ validation: tree transforms routinely carry
     # non-array leaves (None results, PartitionSpecs, sentinel objects) and
     # the aux was validated when the weight was packed.
-    cfg, dense_shape, layout, block_geom, qdtype = aux
+    cfg, dense_shape, layout, block_geom, qdtype, shard_axis, shards = aux
     pw = object.__new__(PackedWeight)
     children = list(children)
     scales = children.pop() if qdtype is not None else None
@@ -544,6 +602,8 @@ def _pw_unflatten(aux, children) -> PackedWeight:
     pw.block_geom = block_geom
     pw.scales = scales
     pw.qdtype = qdtype
+    pw.shard_axis = shard_axis
+    pw.shards = shards
     return pw
 
 
@@ -721,6 +781,207 @@ def unpack_block(active_groups: jax.Array, values: jax.Array,
 
     dense = jax.vmap(per_block)(active_groups, per_slot)       # (RB,br,G,M)
     return dense.reshape(r, kdim)
+
+
+# ---------------------------------------------------------------------------
+# Contraction-dim sharding: the per-shard active-group renumbering pass
+# ---------------------------------------------------------------------------
+#
+# Row-parallel (y = x @ W^T with the contraction dim split across devices)
+# is where packed weights resist GSPMD: xwT indices are group-local so the
+# G axis slices consistently, but the block layout's active_groups hold
+# data-dependent *global* group ids — a device owning columns
+# [s*K/S, (s+1)*K/S) must drop foreign groups and renumber the rest to its
+# local coordinate frame before the kernel's address stream makes sense.
+# These host-side passes produce the shard-stacked form consumed by the
+# shard_map island in kernels/ops.py: children gain a size-S dim between
+# the stack dims and the layout core, each slice renumbered over
+# K_local = K/S, partial products combined with psum.
+
+def _block_shard_arrays(pw: "PackedWeight", num_shards: int):
+    """Concrete host arrays + the per-slot validity mask for block resharding.
+
+    A slot is live iff any of its packed values is non-zero — exact for
+    float block packings (an active group always keeps >= 1 non-zero;
+    padded slots are all-zero by construction), unreliable for int8 where
+    quantization may round a group's survivors to zero."""
+    if pw.qdtype is not None:
+        raise NotImplementedError(
+            "renumbering quantized block weights is not supported (the "
+            "all-zero-slot liveness test is unreliable under int8); keep "
+            "them replicated (ShardingPlan(renumber='replicate'))")
+    try:
+        vals = np.asarray(pw.values)
+        idx = np.asarray(pw.indices)
+        ag = np.asarray(pw.active_groups)
+    except jax.errors.TracerArrayConversionError as e:
+        raise ValueError(
+            "shard_packed_row_parallel needs concrete block weights (the "
+            "per-shard a_max is data-dependent); reshard outside jit") from e
+    return vals, idx, ag, np.any(vals != 0, axis=(-2, -1))
+
+
+def shard_packed_row_parallel(pw: "PackedWeight", num_shards: int, *,
+                              axis: str = "model") -> "PackedWeight":
+    """Reshard a row-parallel packed weight over the contraction dim.
+
+    Returns the shard-stacked form: children carry an extra dim of size
+    ``num_shards`` between the stack dims and the layout core, slice ``s``
+    holding the packing of columns ``[s*K/S, (s+1)*K/S)`` renumbered to its
+    local frame.  ``xwT`` needs only a reshape (indices are group-local);
+    ``block`` runs the renumbering pass: per (row-block, shard), foreign
+    active groups are dropped, surviving global ids are rebased by the
+    shard's group offset, and all shards share one static per-shard
+    ``a_max`` (the densest local list).  ``dense_shape`` stays global.
+    """
+    num_shards = int(num_shards)
+    if num_shards == 1:
+        return pw
+    if pw.shard_axis is not None:
+        raise ValueError(f"{pw!r} is already shard-stacked")
+    g = pw.groups
+    if g % num_shards:
+        raise ValueError(
+            f"cannot split {g} groups (K={pw.in_features}, "
+            f"M={pw.cfg.m}) over {num_shards} shards")
+    gl = g // num_shards
+    nstack = len(pw.stack_dims)
+
+    if pw.layout == LAYOUT_XWT:
+        vals, idx = pw.values, pw.indices
+        # (*stack, O, G, Ne) -> (*stack, O, S, Gl, Ne) -> swap O and S
+        def reshard3(x):
+            x = x.reshape(*x.shape[:-2], num_shards, gl, x.shape[-1])
+            return jnp.swapaxes(x, -4, -3)
+        scales = pw.scales
+        if scales is not None:
+            if scales.ndim == vals.ndim - 1:      # per-group (*stack, O, G)
+                scales = scales.reshape(*scales.shape[:-1], num_shards, gl)
+                scales = jnp.swapaxes(scales, -3, -2)
+            else:                                  # per-row (*stack, O)
+                scales = jnp.broadcast_to(
+                    scales[..., None, :],
+                    (*scales.shape[:-1], num_shards, scales.shape[-1]))
+        return pw.replace(values=reshard3(jnp.asarray(vals)),
+                          indices=reshard3(jnp.asarray(idx)),
+                          scales=scales, shard_axis=axis, shards=num_shards)
+
+    vals, idx, ag, valid = _block_shard_arrays(pw, num_shards)
+    shard_of = ag // gl                                   # (*stack, RB, A)
+    per_shard = []
+    for s in range(num_shards):
+        in_s = valid & (shard_of == s)
+        # Stable front-compaction: in-shard slots first, original (ascending
+        # global id) order preserved, so local lists stay sorted.
+        order = np.argsort(~in_s, axis=-1, kind="stable")
+        per_shard.append((order, np.take_along_axis(in_s, order, axis=-1)))
+    a_local = max(1, *(int(m.sum(-1).max()) for _, m in per_shard))
+
+    out_v, out_i, out_a = [], [], []
+    for s, (order, mask) in enumerate(per_shard):
+        order, mask = order[..., :a_local], mask[..., :a_local]
+        ag_s = np.take_along_axis(ag, order, axis=-1) - s * gl
+        ag_s = np.where(mask, ag_s, 0).astype(np.int32)
+        gather = order[..., None, None]
+        v_s = np.where(mask[..., None, None],
+                       np.take_along_axis(vals, gather, axis=-3), 0)
+        i_s = np.where(v_s != 0,
+                       np.take_along_axis(idx, gather, axis=-3),
+                       0).astype(np.int32)
+        out_v.append(v_s)
+        out_i.append(i_s)
+        out_a.append(ag_s)
+    return pw.replace(values=jnp.asarray(np.stack(out_v, axis=nstack)),
+                      indices=jnp.asarray(np.stack(out_i, axis=nstack)),
+                      active_groups=jnp.asarray(np.stack(out_a, axis=nstack)),
+                      block_geom=(pw.block_geom[0], a_local),
+                      shard_axis=axis, shards=num_shards)
+
+
+def unshard_packed(pw: "PackedWeight") -> "PackedWeight":
+    """Merge a shard-stacked weight back to the global packing (the inverse
+    renumbering).  Exact round trip up to ``a_max`` re-tightening and the
+    canonical active-list order — compare via :meth:`PackedWeight.to_dense`.
+    Needs concrete data for the ``block`` layout."""
+    if pw.shard_axis is None:
+        return pw
+    s_count = pw.shards
+    nstack = len(pw.stack_dims)
+
+    if pw.layout == LAYOUT_XWT:
+        def merge3(x):  # (*stack, S, O, Gl, Ne) -> (*stack, O, G, Ne)
+            x = jnp.swapaxes(x, -4, -3)
+            return x.reshape(*x.shape[:-3], x.shape[-3] * x.shape[-2],
+                             x.shape[-1])
+        scales = pw.scales
+        if scales is not None:
+            if scales.ndim == pw.values.ndim - 1:  # per-group
+                scales = jnp.swapaxes(scales, -3, -2)
+                scales = scales.reshape(*scales.shape[:-2],
+                                        scales.shape[-2] * scales.shape[-1])
+            else:                                   # per-row: replicated
+                scales = jax.lax.index_in_dim(scales, 0, axis=scales.ndim - 2,
+                                              keepdims=False)
+        return pw.replace(values=merge3(pw.values), indices=merge3(pw.indices),
+                          scales=scales, shard_axis=None, shards=1)
+
+    vals, idx, ag, valid = _block_shard_arrays(pw, s_count)
+    gl = pw.groups // s_count
+    a_loc = pw.block_geom[1]
+    # Concatenate the per-shard lists along A in shard order (each slice
+    # ascending within its chunk -> the merged list is globally ascending).
+    ag_m = np.moveaxis(ag, nstack, -2)                 # (*stack, RB, S, Al)
+    ag_m = ag_m + (np.arange(s_count) * gl)[:, None]
+    ag_m = ag_m.reshape(*ag_m.shape[:-2], s_count * a_loc)
+    vals_m = np.moveaxis(vals, nstack, -4)             # (*stack,RB,S,Al,br,Ne)
+    vals_m = vals_m.reshape(*vals_m.shape[:-4],
+                            s_count * a_loc, *vals_m.shape[-2:])
+    idx_m = np.moveaxis(idx, nstack, -4)
+    idx_m = idx_m.reshape(*idx_m.shape[:-4],
+                          s_count * a_loc, *idx_m.shape[-2:])
+    valid_m = np.moveaxis(valid, nstack, -2)
+    valid_m = valid_m.reshape(*valid_m.shape[:-2], s_count * a_loc)
+
+    a_max = max(1, int(valid_m.sum(-1).max()))
+    order = np.argsort(~valid_m, axis=-1, kind="stable")[..., :a_max]
+    mask = np.take_along_axis(valid_m, order, axis=-1)
+    ag_g = np.where(mask, np.take_along_axis(ag_m, order, axis=-1),
+                    0).astype(np.int32)
+    gather = order[..., None, None]
+    v_g = np.where(mask[..., None, None],
+                   np.take_along_axis(vals_m, gather, axis=-3), 0)
+    i_g = np.where(v_g != 0, np.take_along_axis(idx_m, gather, axis=-3),
+                   0).astype(np.int32)
+    return pw.replace(values=jnp.asarray(v_g), indices=jnp.asarray(i_g),
+                      active_groups=jnp.asarray(ag_g),
+                      block_geom=(pw.block_geom[0], a_max),
+                      shard_axis=None, shards=1)
+
+
+def shard_slice(pw: "PackedWeight", s) -> "PackedWeight":
+    """Slice ``s`` of a shard-stacked weight as a *local* PackedWeight:
+    ``dense_shape`` becomes the shard-local ``(O, K // shards)`` and
+    ``shards`` is kept as provenance (tune-cache keys include it), with
+    ``shard_axis=None`` so standard kernel dispatch applies.  ``s`` may be
+    a traced index (used inside the shard_map island)."""
+    if pw.shard_axis is None:
+        raise ValueError(f"{pw!r} is not shard-stacked")
+    dim = len(pw.stack_dims)
+    o, k = pw.dense_shape
+
+    def take(x):
+        if x is None:
+            return None
+        return jnp.take(x, s, axis=dim)
+
+    scales = pw.scales
+    if scales is not None:
+        scales = take(scales)
+    return PackedWeight(
+        take(pw.values), take(pw.indices), cfg=pw.cfg,
+        dense_shape=(o, k // pw.shards), layout=pw.layout,
+        active_groups=take(pw.active_groups), block_geom=pw.block_geom,
+        scales=scales, qdtype=pw.qdtype, shard_axis=None, shards=pw.shards)
 
 
 def reconfigure_k(p: PackedSparse, k: int) -> PackedSparse:

@@ -88,7 +88,16 @@ def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
     sites never re-derive them from loose dict keys.  ``pw`` must be
     unstacked — scan bodies slice the layer axis off stacked weights before
     applying.
+
+    A shard-stacked weight (``pw.shard_axis`` set — the renumbered
+    row-parallel form from ``core.sparsity.shard_packed_row_parallel``)
+    routes to the shard_map island: each mesh device runs the kernel on its
+    local slice and K-chunk of ``x`` and the partial products are combined
+    with ``psum``.  Without a matching mesh (single device, tests) the same
+    math runs as a sequential sum over slices.
     """
+    if getattr(pw, "shard_axis", None) is not None:
+        return _demm_matmul_sharded(x, pw, backend)
     if pw.layout == LAYOUT_BLOCK:
         if getattr(pw.values, "ndim", 4) != 4:
             raise ValueError(
@@ -105,9 +114,65 @@ def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
             f"values of shape {pw.values.shape}; slice the stack axis first")
     if pw.qdtype is not None:
         return demm_matmul_xwT_q8(x, pw.values, pw.indices, pw.scales,
-                                  pw.cfg, pw.dense_shape, backend)
+                                  pw.cfg, pw.dense_shape, backend, pw.shards)
     return demm_matmul_xwT(x, pw.values, pw.indices, pw.cfg, pw.dense_shape,
-                           backend)
+                           backend, pw.shards)
+
+
+def _demm_matmul_sharded(x: jax.Array, pw: PackedWeight,
+                         backend: str = "reference") -> jax.Array:
+    """y = x @ W^T over a shard-stacked row-parallel weight.
+
+    With a :class:`~repro.sharding.context.ShardingContext` whose mesh
+    carries ``pw.shard_axis`` at size ``pw.shards``, this is the shard_map
+    island: ``x`` is split along K (spec ``P(None, axis)``), every child of
+    ``pw`` along its shard dim (spec ``P(axis)``), each device dispatches
+    the ordinary packed kernel on its locally-renumbered slice, and partial
+    products are ``psum``-combined.  Otherwise (single-device tests, meshes
+    without the axis) the identical math runs as a sequential
+    sum-over-slices, so outputs are bitwise-comparable across the two paths
+    up to float summation order.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.sparsity import shard_slice
+    from repro.sharding import context as shctx
+
+    if x.ndim != 2:
+        raise ValueError(f"sharded packed matmul needs 2-D x, got {x.shape}")
+    axis, s_count = pw.shard_axis, pw.shards
+    if len(pw.stack_dims):
+        raise ValueError(
+            f"demm_matmul_packed needs an unstacked shard-stacked weight, "
+            f"got values of shape {pw.values.shape}; slice the stack axis "
+            f"first")
+    k_local = pw.in_features // s_count
+    ctx = shctx.get_context()
+    mesh = getattr(ctx, "mesh", None)
+    if (mesh is None or axis not in mesh.shape
+            or int(mesh.shape[axis]) != s_count):
+        # No matching mesh: same partial-product math, sequentially.
+        parts = [
+            demm_matmul_packed(
+                jax.lax.slice_in_dim(x, s * k_local, (s + 1) * k_local,
+                                     axis=1),
+                shard_slice(pw, s), backend)
+            for s in range(s_count)
+        ]
+        return functools.reduce(jnp.add, parts)
+
+    children, treedef = jax.tree_util.tree_flatten(pw)
+
+    def local_fn(xl, *cl):
+        pw_local = shard_slice(jax.tree_util.tree_unflatten(treedef, cl), 0)
+        y = demm_matmul_packed(xl, pw_local, backend)
+        return jax.lax.psum(y, axis)
+
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(P(None, axis),) + (P(axis),) * len(children),
+                   out_specs=P(None, None), check_rep=False)
+    return fn(x, *children)
 
 
 def demm_matmul_block(x: jax.Array, pw: PackedWeight,
@@ -144,12 +209,12 @@ def demm_matmul_block(x: jax.Array, pw: PackedWeight,
                                      tuple(pw.dense_shape), backend, ptuple)
 
 
-def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):
+def _dispatch_xwT(x, values, indices, cfg, w_shape, backend, shards=1):
     from repro import obs, tune
 
     params = {}
     if backend == "auto":
-        choice = tune.resolve_xwT(x.shape, w_shape, cfg, x.dtype)
+        choice = tune.resolve_xwT(x.shape, w_shape, cfg, x.dtype, shards)
         backend, params = choice.backend, choice.params
     variant = tune.get_variant("xwT", backend)
     _count_dispatch("xwT", backend)
@@ -158,19 +223,21 @@ def _dispatch_xwT(x, values, indices, cfg, w_shape, backend):
                             **params)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def demm_matmul_xwT(x, values, indices, cfg: SparsityConfig, w_shape,
-                    backend: str = "reference"):
-    """y = x @ W_sparseᵀ; x (B, K), W packed (O, G, Ne) for dense (O, K)."""
-    return _dispatch_xwT(x, values, indices, cfg, w_shape, backend)
+                    backend: str = "reference", shards: int = 1):
+    """y = x @ W_sparseᵀ; x (B, K), W packed (O, G, Ne) for dense (O, K).
+    ``shards`` > 1 tags the shard-local problem of a renumbered row-parallel
+    weight for ``backend="auto"`` cache keying; the math is unchanged."""
+    return _dispatch_xwT(x, values, indices, cfg, w_shape, backend, shards)
 
 
-def _xwT_fwd(x, values, indices, cfg, w_shape, backend):
-    y = _dispatch_xwT(x, values, indices, cfg, w_shape, backend)
+def _xwT_fwd(x, values, indices, cfg, w_shape, backend, shards=1):
+    y = _dispatch_xwT(x, values, indices, cfg, w_shape, backend, shards)
     return y, (x, values, indices)
 
 
-def _xwT_bwd(cfg, w_shape, backend, res, dy):
+def _xwT_bwd(cfg, w_shape, backend, shards, res, dy):
     x, values, indices = res
     o, k = w_shape
     m = cfg.m
@@ -191,7 +258,7 @@ demm_matmul_xwT.defvjp(_xwT_fwd, _xwT_bwd)
 
 
 def demm_matmul_xwT_q8(x, values, indices, scales, cfg: SparsityConfig,
-                       w_shape, backend: str = "reference"):
+                       w_shape, backend: str = "reference", shards: int = 1):
     """y = x @ W_q8ᵀ; int8 values (O, G, Ne) + scales (O,) per output row or
     (O, G) per group (``repro.quant`` granularities).
 
@@ -205,7 +272,7 @@ def demm_matmul_xwT_q8(x, values, indices, scales, cfg: SparsityConfig,
 
     params = {}
     if backend == "auto":
-        choice = tune.resolve_xwT_q8(x.shape, w_shape, cfg, x.dtype)
+        choice = tune.resolve_xwT_q8(x.shape, w_shape, cfg, x.dtype, shards)
         backend, params = choice.backend, choice.params
     _count_dispatch("xwT_q8", backend)
     with obs.annotate(f"demm/xwT_q8/{backend}"):

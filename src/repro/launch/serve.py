@@ -49,7 +49,7 @@ from repro.configs.base import ARCH_IDS, get_arch
 from repro.core.sparse_linear import ExecPolicy
 from repro.launch.pack_tree import pack_tree
 from repro.models.families import build_model
-from repro.serve.serve_loop import Request, ServeConfig, ServeEngine
+from repro.serve import Request, ServeConfig, make_engine
 
 
 def _load_trace(path: str):
@@ -80,7 +80,7 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
               max_new: int = 16, max_len: int = 128, seed: int = 0,
               paged: bool = False, page_size: int = 16, max_pages=None,
               prefill_chunk: int = 32, scheduler: str = "fcfs",
-              trace_replay=None):
+              trace_replay=None, plan=None, replicas: int = 1):
     """Pack (optionally) and serve ``requests`` random prompts; returns the
     drained engine.  The reusable core of ``main()`` — the end-to-end
     examples call this directly with their own trained params.
@@ -90,27 +90,29 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
     legacy dense-cache loop; ``trace_replay`` submits a serve_bench-format
     JSONL trace at its logical arrival ticks instead of ``requests`` random
     prompts (prompt tokens derived from ``(seed, uid)`` either way).
+
+    ``plan`` (a :class:`~repro.sharding.plan.ShardingPlan`) distributes the
+    engine: TP renumbers + shards packed weights over the mesh, PP runs the
+    microbatched pipelined decode step.  ``replicas`` > 1 serves through a
+    data-parallel :class:`~repro.serve.ReplicaRouter` — N engines over one
+    shared params tree, round-robin admission, merged metrics.
     """
     mode = "masked"
     if packed:
         params = pack_tree(params, layout=layout, quantize=quantize,
                            granularity=granularity)
         mode = "packed"
-    policy = ExecPolicy(mode=mode, backend=backend)
+    policy = ExecPolicy(mode=mode, backend=backend, plan=plan)
     if paged:
-        from repro.paged import (PagedServeConfig, PagedServeEngine,
-                                 SchedConfig)
-        engine = PagedServeEngine(
-            model, params,
-            PagedServeConfig(num_slots=slots, max_len=max_len,
-                             page_size=page_size, num_pages=max_pages,
-                             prefill_chunk=prefill_chunk,
-                             sched=SchedConfig(policy=scheduler)),
-            policy=policy, autotune=autotune and packed)
+        from repro.paged import PagedServeConfig, SchedConfig
+        serve_cfg = PagedServeConfig(
+            num_slots=slots, max_len=max_len, page_size=page_size,
+            num_pages=max_pages, prefill_chunk=prefill_chunk,
+            sched=SchedConfig(policy=scheduler))
     else:
-        engine = ServeEngine(model, params,
-                             ServeConfig(num_slots=slots, max_len=max_len),
-                             policy=policy, autotune=autotune and packed)
+        serve_cfg = ServeConfig(num_slots=slots, max_len=max_len)
+    engine = make_engine(model, params, serve_cfg, policy=policy,
+                         autotune=autotune and packed, replicas=replicas)
     if trace_replay:
         rows = _load_trace(trace_replay)
         t0 = time.time()
@@ -175,6 +177,21 @@ def main():
                          "arrival_tick, prompt_len, max_new, priority} "
                          "rows) at its logical ticks instead of --requests "
                          "random prompts")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard packed weights over "
+                         "a 'model' mesh axis (row-parallel block/xwT "
+                         "weights are renumbered per shard); needs tp "
+                         "visible devices — on CPU force them with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel degree: split the layer stack "
+                         "into pp stages and run the microbatched pipelined "
+                         "decode step (non-paged engine only)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind a "
+                         "round-robin router sharing one params tree; "
+                         "metrics are merged with a replica=<i> label")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--layout", choices=("xwT", "block"), default="xwT",
                     help="packed-weight layout for --packed: the row-packed "
@@ -222,6 +239,21 @@ def main():
     args = ap.parse_args()
     if args.autotune:
         args.backend = "auto"
+    if args.tp < 1 or args.pp < 1 or args.replicas < 1:
+        ap.error("--tp/--pp/--replicas must be >= 1")
+    if args.pp > 1 and args.paged:
+        ap.error("--pp applies to the non-paged engine (pipelined decode "
+                 "over dense caches); drop --paged or --pp")
+    plan = None
+    if args.tp > 1 or args.pp > 1 or args.replicas > 1:
+        from repro.sharding.plan import ShardingPlan
+        plan = ShardingPlan(tp=args.tp, pp=args.pp, dp=args.replicas)
+        need = args.tp * args.pp
+        if need > jax.device_count():
+            ap.error(
+                f"--tp {args.tp} --pp {args.pp} needs {need} devices but "
+                f"only {jax.device_count()} are visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
     if args.quantize and not args.packed:
         ap.error("--quantize applies to the packed serving form; add "
                  "--packed")
@@ -292,13 +324,18 @@ def main():
                            max_pages=args.max_pages,
                            prefill_chunk=args.prefill_chunk,
                            scheduler=args.scheduler,
-                           trace_replay=args.trace_replay)
+                           trace_replay=args.trace_replay,
+                           plan=plan, replicas=args.replicas)
     dt = engine.drain_seconds
     mode = "packed" if args.packed else "masked"
     total_tokens = sum(len(r.output) for r in engine.completed)
     tag = mode if not args.quantize else f"{mode}+{args.quantize}"
     if args.paged:
         tag += "+paged"
+    if plan is not None:
+        tag += f"+tp{args.tp}" if args.tp > 1 else ""
+        tag += f"+pp{args.pp}" if args.pp > 1 else ""
+        tag += f"+dp{args.replicas}" if args.replicas > 1 else ""
     log.info("served", requests=len(engine.completed), tokens=total_tokens,
              seconds=round(dt, 3),
              tok_s=round(total_tokens / max(dt, 1e-9), 1), mode=tag)

@@ -509,6 +509,96 @@ class DecoderLM:
         logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
         return logits, {"caches": new_caches, "pos": pos + 1}
 
+    def decode_step_pipelined(self, params, state, tokens, *, policy=None,
+                              pp: int = 2, pp_axis: str = "pipe"):
+        """Pipeline-parallel :meth:`decode_step` (full-attention caches).
+
+        The layer stack is split into ``pp`` contiguous stage groups sharded
+        over ``pp_axis``; the decode batch is split into ``pp`` slot
+        microbatches streamed through the GPipe schedule
+        (:func:`repro.sharding.pipeline.pipeline_apply_stateful`).  Each
+        stage owns the KV caches of its layer group and updates only the
+        slot rows of its live microbatch, so the result — logits *and* new
+        caches — is bitwise what the sequential scan produces.
+
+        Embedding and the final norm/unembed run replicated outside the
+        pipeline.  Requires ``num_layers % pp == 0`` and
+        ``batch % pp == 0``; without a matching mesh in the active
+        sharding context it falls back to :meth:`decode_step` (identical
+        math, no pipelining) so the engine keeps working on one device.
+        """
+        from repro.sharding import context as shctx
+        from repro.sharding.pipeline import pipeline_apply_stateful
+
+        policy = resolve_policy(policy, None, None)
+        cfg = self.cfg
+        caches = state["caches"]
+        if caches["kind"].value != "full":
+            raise NotImplementedError(
+                "decode_step_pipelined supports the dense full-attention "
+                "cache (windowed/paged layouts pipeline their stages with "
+                "different per-stage state; DESIGN.md §14)")
+        ctx = shctx.get_context()
+        mesh = getattr(ctx, "mesh", None)
+        if (mesh is None or pp_axis not in mesh.shape
+                or mesh.shape[pp_axis] != pp):
+            return self.decode_step(params, state, tokens, policy=policy)
+        b = tokens.shape[0]
+        l = cfg.num_layers
+        if l % pp or b % pp:
+            raise ValueError(
+                f"decode_step_pipelined: num_layers ({l}) and batch ({b}) "
+                f"must both divide pp ({pp})")
+        l_loc, mb = l // pp, b // pp
+        dtype = dtype_of(cfg.compute_dtype)
+        pos = state["pos"]
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+
+        def split(a):      # leading dim L -> (pp, L/pp)
+            return a.reshape(pp, l_loc, *a.shape[1:])
+
+        stage_params = jax.tree.map(split, params["layers"])
+        stage_state = {"k": split(caches["k"]), "v": split(caches["v"])}
+
+        def stage_fn(layers, st, x_mb, pos_mb, mb_idx):
+            start = mb_idx * mb
+
+            def body(x, layer):
+                blk, kc, vc = layer      # kc: (B, S, Hkv, Dh)
+                k_mb = jax.lax.dynamic_slice_in_dim(kc, start, mb, axis=0)
+                v_mb = jax.lax.dynamic_slice_in_dim(vc, start, mb, axis=0)
+                x, nc = self._decode_full_layer(
+                    blk, x, {"k": k_mb, "v": v_mb}, pos_mb, FULL_WINDOW,
+                    policy)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    kc, nc["k"], start, axis=0)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    vc, nc["v"], start, axis=0)
+                return x, (kc, vc)
+
+            x_mb, (ks, vs) = jax.lax.scan(
+                body, x_mb, (layers, st["k"], st["v"]))
+            return x_mb, {"k": ks, "v": vs}
+
+        x_mbs = x.reshape(pp, mb, *x.shape[1:])
+        pos_mbs = pos.reshape(pp, mb)
+        # shard_map makes every mesh axis manual, so the context's
+        # activation constraints are illegal inside the stages — suspend it
+        # for the pipeline trace (stage math is unaffected)
+        with shctx.suspend():
+            y, new_stage = pipeline_apply_stateful(
+                stage_fn, stage_params, stage_state, x_mbs, mesh,
+                axis=pp_axis, aux=pos_mbs)
+        x = y.reshape(b, *y.shape[2:])
+        new_caches = {
+            "kind": Static("full"),
+            "k": new_stage["k"].reshape(l, *caches["k"].shape[1:]),
+            "v": new_stage["v"].reshape(l, *caches["v"].shape[1:]),
+        }
+        x = apply_rmsnorm(params["final_norm"], x)
+        logits = apply_unembedding(params["unembed"], x, self.cfg.vocab_size)
+        return logits, {"caches": new_caches, "pos": pos + 1}
+
     def prefill_chunk(self, params, state, tokens, slot, n_valid, *,
                       policy=None, mode=None, backend=None):
         """Ingest one K-token chunk of a single sequence into its pages.

@@ -40,6 +40,7 @@ from repro import obs
 from repro.paged.kv_cache import PagedKVCache, PagedLayout
 from repro.paged.prefill import ChunkedPrefill
 from repro.paged.scheduler import SchedConfig, Scheduler, Stage
+from repro.serve.protocol import EngineBase
 from repro.serve.serve_loop import Request
 
 
@@ -60,7 +61,7 @@ class PagedServeConfig:
                 "on deterministic resume (DESIGN.md §13)")
 
 
-class PagedServeEngine:
+class PagedServeEngine(EngineBase):
     """Slot-batched serving with a shared paged KV arena.
 
     Same surface as the legacy :class:`~repro.serve.serve_loop.ServeEngine`
@@ -75,6 +76,10 @@ class PagedServeEngine:
 
         policy = resolve_policy(policy, None, None)
         self.model = model
+        # policy.plan (ShardingPlan): renumber row-parallel packed weights
+        # and place everything — the shared KV arena included — on the
+        # plan's mesh before either program compiles
+        params = self._setup_plan(policy, params)
         self.params = params
         self.cfg = cfg
         self.policy = policy
@@ -85,12 +90,14 @@ class PagedServeEngine:
             cfg.max_len, page_size=cfg.page_size, num_pages=cfg.num_pages,
             num_slots=cfg.num_slots)
         self.kv = PagedKVCache(self.layout, cfg.num_slots)
-        self.state = model.init_decode_state(
-            cfg.num_slots, cfg.max_len, dtype=jnp.float32, paged=self.layout)
-        self._decode = jax.jit(
-            lambda p, s, t: model.decode_step(p, s, t, policy=policy))
+        self.state = self._place_state(model.init_decode_state(
+            cfg.num_slots, cfg.max_len, dtype=jnp.float32,
+            paged=self.layout))
+        self._decode = self._wrap_step(jax.jit(
+            lambda p, s, t: model.decode_step(p, s, t, policy=policy)))
         self.prefill = ChunkedPrefill(model, chunk=cfg.prefill_chunk,
                                       policy=policy)
+        self._prefill_step = self._wrap_step(self.prefill.step)
         self.sched = Scheduler(cfg.sched)
         # host mirrors of the control leaves (pushed before each program)
         self._pos = np.zeros((cfg.num_slots,), np.int32)
@@ -328,7 +335,7 @@ class PagedServeEngine:
                                          len(self._work[i])))
                 self._sync_control()
                 was = self._fed[i]
-                logits, self.state, fed = self.prefill.step(
+                logits, self.state, fed = self._prefill_step(
                     self.params, self.state, self._work[i], was, i)
                 self._fed[i] = fed
                 self._pos[i] = fed

@@ -1,0 +1,121 @@
+"""Shared serving-engine protocol + distribution plumbing.
+
+Every engine — the dense-cache :class:`~repro.serve.serve_loop.ServeEngine`,
+the paged :class:`~repro.paged.engine.PagedServeEngine`, and the
+data-parallel :class:`~repro.serve.router.ReplicaRouter` — speaks the same
+surface:
+
+    submit(req)            enqueue a Request
+    step() -> int          one engine tick; returns occupied slots
+    run_until_drained()    tick until queue + slots are empty
+    tick() / drain()       aliases for the above (the protocol names)
+    completed              finished Requests, in completion order
+    metrics                a MetricsRegistry (or a merged facade with the
+                           same snapshot()/write() surface)
+
+so drivers (``launch/serve.py``, benchmarks, the examples) hold any of them
+behind one variable.  :class:`EngineBase` provides the aliases plus the
+:class:`~repro.sharding.plan.ShardingPlan` plumbing both concrete engines
+share: resolving ``policy.plan`` into a mesh + sharding context, renumbering
+and placing params, placing decode state, and wrapping the compiled step
+functions so trace *and* execution happen under the plan's mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Structural type of a serving engine (isinstance-checkable)."""
+
+    def submit(self, req) -> None: ...
+    def step(self) -> int: ...
+    def run_until_drained(self, max_ticks: int = 10000) -> int: ...
+
+
+class EngineBase:
+    """Protocol aliases + ShardingPlan plumbing shared by the engines.
+
+    Subclasses must set ``self.model`` before calling :meth:`_setup_plan`
+    (the plan reads the arch's head counts off ``model.cfg``) and implement
+    ``submit`` / ``step`` / ``run_until_drained``.
+    """
+
+    plan = None          # ShardingPlan from policy.plan (or None)
+    mesh = None          # the plan's Mesh (None on a single device)
+    _shctx = None        # ShardingContext installed around compiled steps
+
+    # -- protocol aliases ---------------------------------------------------
+
+    def tick(self) -> int:
+        """Protocol alias for :meth:`step`."""
+        return self.step()
+
+    def drain(self, max_ticks: int = 10000) -> int:
+        """Protocol alias for :meth:`run_until_drained`."""
+        return self.run_until_drained(max_ticks)
+
+    # -- plan plumbing ------------------------------------------------------
+
+    def _head_counts(self):
+        cfg = getattr(self.model, "cfg", None)
+        return (int(getattr(cfg, "num_kv_heads", 16) or 16),
+                int(getattr(cfg, "num_heads", 0) or 0))
+
+    def _setup_plan(self, policy, params):
+        """Resolve ``policy.plan``: build the mesh + sharding context and
+        return the renumbered, device-placed params.  Identity (and
+        ``self.mesh`` stays None) for plan-less / single-device policies.
+
+        ``dp`` is not consumed here — data parallelism is replica-level
+        (:class:`~repro.serve.router.ReplicaRouter`), so an engine only
+        realizes the plan's tp×pp slice of the mesh.
+        """
+        plan = getattr(policy, "plan", None)
+        self.plan = plan
+        if plan is None or plan.tp * plan.pp == 1:
+            return params
+        # engines realize tp (and pp) only; never demand dp devices here
+        import dataclasses
+        engine_plan = (plan if plan.dp == 1
+                       else dataclasses.replace(plan, dp=1))
+        self.mesh = engine_plan.make_mesh()
+        nkv, nh = self._head_counts()
+        self._shctx = engine_plan.context(
+            self.mesh, num_kv_heads=nkv, num_heads=nh)
+        return engine_plan.shard_params(params, self.mesh)
+
+    def _place_state(self, state):
+        """device_put a freshly built decode state per the plan (KV head
+        axis over TP when divisible); identity without a mesh."""
+        if self.plan is None or self.mesh is None:
+            return state
+        nkv, _ = self._head_counts()
+        return self.plan.shard_decode_state(state, self.mesh,
+                                            num_kv_heads=nkv)
+
+    def _wrap_step(self, fn):
+        """Run ``fn`` (typically a jitted step) under the plan's mesh and
+        sharding context — covering both the trace and every execution —
+        so ``shard_map`` islands and ``constrain`` calls see the mesh."""
+        if self._shctx is None:
+            return fn
+        from repro.sharding import context as shctx
+        ctx = self._shctx
+
+        @functools.wraps(fn)
+        def wrapped(*a, **k):
+            with shctx.use_mesh(ctx):
+                return fn(*a, **k)
+
+        return wrapped
+
+
+def greedy_token(logits_row: np.ndarray) -> int:
+    """The shared greedy sampler (argmax over the vocab axis)."""
+    return int(np.argmax(logits_row))

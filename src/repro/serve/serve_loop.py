@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.serve.protocol import EngineBase
 
 
 @dataclasses.dataclass
@@ -65,7 +66,7 @@ class ServeConfig:
     greedy: bool = True
 
 
-class ServeEngine:
+class ServeEngine(EngineBase):
     def __init__(self, model, params, cfg: ServeConfig, *, policy=None,
                  mode=None, backend=None, autotune=False, metrics=None):
         from repro.core.sparse_linear import resolve_policy
@@ -79,17 +80,22 @@ class ServeEngine:
                 DeprecationWarning, stacklevel=2)
         policy = resolve_policy(policy, mode, backend)
         self.model = model
+        # policy.plan (ShardingPlan): renumber row-parallel packed weights
+        # and place everything on the plan's mesh before any compile
+        params = self._setup_plan(policy, params)
         self.params = params
         self.cfg = cfg
         self.policy = policy
         if autotune and policy.mode == "packed":
             # Measure tile configs for every packed weight at the decode
             # batch shape so backend="auto" resolves from the cache when the
-            # step below is traced.
+            # step below is traced (shard-stacked nodes tune their
+            # shard-local slice — the problem the shard_map island runs).
             from repro import tune
             tune.autotune_packed_tree(params, cfg.num_slots)
-        self.state = model.init_decode_state(cfg.num_slots, cfg.max_len,
-                                             dtype=jnp.float32)
+        self.state = self._place_state(
+            model.init_decode_state(cfg.num_slots, cfg.max_len,
+                                    dtype=jnp.float32))
         self._init_state = jax.tree.map(lambda x: x, self.state)
         # locate each leaf's slot (batch) axis robustly: init a state with
         # one extra slot and diff the shapes.
@@ -100,8 +106,19 @@ class ServeEngine:
                                enumerate(zip(a.shape, b.shape)) if x != y),
                               None) if hasattr(a, "shape") else None,
             self.state, probe)
-        self._step = jax.jit(
-            lambda p, s, t: model.decode_step(p, s, t, policy=policy))
+        if self.plan is not None and self.plan.pp > 1:
+            if self.plan.tp > 1:
+                raise NotImplementedError(
+                    "combined tp>1 + pp>1 serving would nest the packed TP "
+                    "shard_map island inside the pipeline shard_map; pick "
+                    "one (DESIGN.md §14)")
+            pp, pp_axis = self.plan.pp, self.plan.pp_axis
+            self._step = self._wrap_step(jax.jit(
+                lambda p, s, t: model.decode_step_pipelined(
+                    p, s, t, policy=policy, pp=pp, pp_axis=pp_axis)))
+        else:
+            self._step = self._wrap_step(jax.jit(
+                lambda p, s, t: model.decode_step(p, s, t, policy=policy)))
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * cfg.num_slots
         self._fed: List[int] = [0] * cfg.num_slots    # prompt tokens fed

@@ -56,6 +56,23 @@ def use_mesh(ctx: ShardingContext):
         _CTX = prev
 
 
+@contextlib.contextmanager
+def suspend():
+    """Temporarily clear the active context (trace-time).
+
+    Inside a ``shard_map`` region every mesh axis is *manual*, so the
+    context's ``with_sharding_constraint`` calls (e.g. the attention head
+    TP constraint) are illegal there — wrap the shard_map trace in
+    ``suspend()`` and the constraints degrade to identity."""
+    global _CTX
+    prev = _CTX
+    _CTX = None
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
 def make_context(mesh: Mesh, *, num_kv_heads: int = 16, num_heads: int = 0,
                  seq_shard_cache: bool = False) -> ShardingContext:
     tp = mesh.shape["model"]

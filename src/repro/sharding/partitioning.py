@@ -15,6 +15,7 @@ the largest replicated dimension over 'data' (opt_state_specs).
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Optional
 
 import jax
@@ -101,9 +102,7 @@ def _stacked_offset(leaf_ndim: int, spec_ndim: int) -> int:
     return leaf_ndim - spec_ndim
 
 
-def linear_kind(path: str, *, attn_kv_replicated: bool = False) -> str:
-    """Classify a linear *module* path (no trailing leaf name) as
-    ``col`` | ``row`` | ``replicated`` using the shared rule table."""
+def _linear_kind_impl(path: str, *, attn_kv_replicated: bool = False) -> str:
     probe = path.rstrip("/") + "/w"
     if attn_kv_replicated and re.search(r"(attn|xattn)/w[kv]/w", probe):
         return "replicated"
@@ -111,6 +110,20 @@ def linear_kind(path: str, *, attn_kv_replicated: bool = False) -> str:
         if re.search(pat, probe):
             return builder if builder in ("col", "row") else "replicated"
     return "replicated"
+
+
+def linear_kind(path: str, *, attn_kv_replicated: bool = False) -> str:
+    """Classify a linear *module* path (no trailing leaf name) as
+    ``col`` | ``row`` | ``replicated`` using the shared rule table.
+
+    .. deprecated:: use :meth:`repro.sharding.plan.ShardingPlan.linear_kind`
+       — the plan carries the KV policy and per-node kind overrides.
+    """
+    warnings.warn(
+        "repro.sharding.partitioning.linear_kind is deprecated; use "
+        "ShardingPlan(attn_kv_replicated=...).linear_kind(path)",
+        DeprecationWarning, stacklevel=2)
+    return _linear_kind_impl(path, attn_kv_replicated=attn_kv_replicated)
 
 
 def _packed_spec(kind: str, extra: int) -> P:
@@ -133,14 +146,35 @@ def _block_packed_specs(kind: str, extra: int):
     Column-parallel shards the row-block axis RB (row blocks tile the output
     dim, so each TP shard owns whole row blocks and their address streams).
     Row-parallel would shard the contraction dim, but the active-group ids
-    address *global* M-groups — a shard would need its ids renumbered to its
-    local B slice — so row-parallel block weights stay replicated until a
-    renumbering pass lands."""
+    address *global* M-groups — a *non-renumbered* row-parallel block weight
+    therefore stays replicated.  To genuinely shard it, run the renumbering
+    pass (``core.sparsity.shard_packed_row_parallel``, applied by
+    ``ShardingPlan.renumber_params``): the shard-stacked result is handled
+    structurally in :func:`packed_weight_specs` via ``pw.shard_axis``."""
     if kind == "col":
         core, ag = ["model", None, None, None], ["model", None]
     else:
         core, ag = [None] * 4, [None] * 2
     return (P(*([None] * extra + core)), P(*([None] * extra + ag)))
+
+
+def _shard_stacked_specs(pw: PackedWeight) -> PackedWeight:
+    """Specs for the renumbered shard-stacked form: every child carries the
+    shard dim at index ``len(stack_dims)``, placed on ``pw.shard_axis`` so
+    each mesh device holds exactly its locally-renumbered slice (the
+    shard_map island in kernels/ops.py consumes them in place)."""
+    extra = len(pw.stack_dims)
+    ax = pw.shard_axis
+
+    def spec(child):
+        return P(*([None] * extra + [ax] + [None] * (child.ndim - extra - 1)))
+
+    repl = {"values": spec(pw.values), "indices": spec(pw.indices)}
+    if pw.layout == LAYOUT_BLOCK:
+        repl["active_groups"] = spec(pw.active_groups)
+    if pw.qdtype is not None:
+        repl["scales"] = spec(pw.scales)
+    return pw.replace(**repl)
 
 
 def packed_weight_specs(pw: PackedWeight, kind: str) -> PackedWeight:
@@ -153,7 +187,14 @@ def packed_weight_specs(pw: PackedWeight, kind: str) -> PackedWeight:
     column-parallel shards the same leading output axis; row-parallel
     shards per-group xwT scales on their group axis (it tiles the
     contraction dim exactly like the values' group axis) and leaves per-row
-    scales replicated (no group axis to split)."""
+    scales replicated (no group axis to split).
+
+    A renumbered shard-stacked node (``pw.shard_axis`` set) is placed on its
+    own shard dim regardless of ``kind`` — the renumbering pass only ever
+    produces row-parallel weights, and the shard dim *is* the contraction
+    partition."""
+    if pw.shard_axis is not None:
+        return _shard_stacked_specs(pw)
     extra = len(pw.stack_dims)
     if pw.layout == LAYOUT_BLOCK:
         spec, ag_spec = _block_packed_specs(kind, extra)
@@ -179,7 +220,8 @@ def _is_legacy_packed(node) -> bool:
     return isinstance(node, dict) and "values" in node and "shape" in node
 
 
-def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
+def _param_specs_impl(params, *, attn_kv_replicated: bool = False,
+                      kind_fn=None) -> dict:
     """PartitionSpec pytree matching ``params``.
 
     Handles layer stacking: rule specs are defined for the *unstacked*
@@ -190,13 +232,19 @@ def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
     ``attn_kv_replicated``: for archs whose KV head count does not divide
     TP (but whose Q heads do), K/V projection weights are replicated so the
     projected K/V tensors need no gather (DESIGN.md §5).
+
+    ``kind_fn`` (path -> "col" | "row" | "replicated") overrides the rule
+    table for PackedWeight nodes — the hook ShardingPlan.kind_overrides
+    plugs into.
     """
+    if kind_fn is None:
+        def kind_fn(p):
+            return _linear_kind_impl(p, attn_kv_replicated=attn_kv_replicated)
 
     def one(path, leaf):
         p = _path_str(path)
         if isinstance(leaf, PackedWeight):
-            kind = linear_kind(p, attn_kv_replicated=attn_kv_replicated)
-            return packed_weight_specs(leaf, kind)
+            return packed_weight_specs(leaf, kind_fn(p))
         if _is_legacy_packed(leaf):
             raise ValueError(
                 f"legacy packed {{values, indices, shape}} dict at {p!r} is "
@@ -217,6 +265,20 @@ def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
     return jax.tree_util.tree_map_with_path(
         one, params,
         is_leaf=lambda x: isinstance(x, PackedWeight) or _is_legacy_packed(x))
+
+
+def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
+    """PartitionSpec pytree matching ``params``.
+
+    .. deprecated:: use :meth:`repro.sharding.plan.ShardingPlan.param_specs`
+       — the plan carries the KV policy, per-node kind overrides, and the
+       renumber policy in one serializable object.
+    """
+    warnings.warn(
+        "repro.sharding.partitioning.param_specs is deprecated; use "
+        "ShardingPlan(attn_kv_replicated=...).param_specs(params)",
+        DeprecationWarning, stacklevel=2)
+    return _param_specs_impl(params, attn_kv_replicated=attn_kv_replicated)
 
 
 def _base_ndim(path: str, nd: int) -> int:

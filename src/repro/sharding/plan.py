@@ -1,0 +1,290 @@
+"""ShardingPlan: one serializable object describing how a model is placed.
+
+Previously the distribution story was spread over loose knobs —
+``param_specs(attn_kv_replicated=...)``, ``linear_kind``, ad-hoc mesh
+construction in launch scripts — none of which survived a checkpoint
+round-trip.  A :class:`ShardingPlan` gathers them:
+
+  * parallelism degrees (``tp`` / ``pp`` / ``dp``) and their mesh axis names,
+  * the KV-replication policy for archs whose KV head count does not
+    divide TP (DESIGN.md §5),
+  * per-node kind overrides (regex → col/row/replicated) for weights the
+    rule table misclassifies,
+  * the renumber policy for row-parallel *block*-layout packed weights,
+    whose active-group ids address global M-groups and therefore cannot be
+    sharded by GSPMD alone (see ``core.sparsity.shard_packed_row_parallel``).
+
+Plans are frozen/hashable (they ride on ``ExecPolicy``, a jit static arg)
+and JSON round-trip (they ride in the checkpoint manifest, so a restore
+knows the geometry its packed weights were renumbered for).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.sparsity import (
+    LAYOUT_BLOCK,
+    PackedWeight,
+    shard_packed_row_parallel,
+)
+from repro.core.treeutil import key_path_str as _path_str
+from repro.sharding import context as shctx
+from repro.sharding.partitioning import (
+    _linear_kind_impl,
+    _param_specs_impl,
+    shardings_for,
+)
+
+RENUMBER = "renumber"      # shard row-parallel packed weights for real
+REPLICATE = "replicate"    # keep them replicated (shard_map-free fallback)
+
+_PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """How a model's params, decode state, and collectives are laid out.
+
+    ``kind_overrides`` is a tuple of ``(path_regex, kind)`` pairs checked
+    before the rule table (first match wins); kinds are ``"col"`` /
+    ``"row"`` / ``"replicated"``.
+
+    ``renumber`` selects what happens to row-parallel packed weights when
+    ``tp > 1``: :data:`RENUMBER` runs the per-shard active-group
+    renumbering pass so the contraction dim genuinely shards (required for
+    block layout; also packs xwT into the shard-stacked form consumed by
+    the shard_map island), :data:`REPLICATE` leaves them whole on every
+    device (correct, memory-hungry, no collective on the packed matmul).
+    """
+
+    tp: int = 1
+    pp: int = 1
+    dp: int = 1
+    tp_axis: str = "model"
+    pp_axis: str = "pipe"
+    dp_axis: str = "data"
+    attn_kv_replicated: bool = False
+    renumber: str = RENUMBER
+    kind_overrides: Tuple[Tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        for name in ("tp", "pp", "dp"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1")
+        if self.renumber not in (RENUMBER, REPLICATE):
+            raise ValueError(
+                f"renumber must be {RENUMBER!r} or {REPLICATE!r}, "
+                f"got {self.renumber!r}")
+        if self.tp_axis != "model":
+            # The partitioning rule table and ShardingContext.tp hard-code
+            # the 'model' axis name; renaming it is not yet supported.
+            raise ValueError("tp_axis must be 'model'")
+        # tuple-of-tuples form (lists sneak in via from_json callers)
+        object.__setattr__(
+            self, "kind_overrides",
+            tuple((str(p), str(k)) for p, k in self.kind_overrides))
+        for _, k in self.kind_overrides:
+            if k not in ("col", "row", "replicated"):
+                raise ValueError(f"bad kind override {k!r}")
+
+    # -- geometry -----------------------------------------------------------
+
+    def device_degree(self) -> int:
+        return self.tp * self.pp * self.dp
+
+    def make_mesh(self, devices=None) -> Optional[Mesh]:
+        """Build the ``(dp, pp, tp)`` mesh, or None for a single device.
+
+        The TP axis is always present (degree 1 included) so downstream
+        ``mesh.shape['model']`` lookups hold; pp/dp axes appear only when
+        their degree exceeds 1.
+        """
+        n = self.device_degree()
+        if n == 1:
+            return None
+        devices = list(jax.devices() if devices is None else devices)
+        if len(devices) < n:
+            raise ValueError(
+                f"plan needs {n} devices (tp={self.tp} pp={self.pp} "
+                f"dp={self.dp}), only {len(devices)} available")
+        shape, names = [], []
+        if self.dp > 1:
+            shape.append(self.dp)
+            names.append(self.dp_axis)
+        if self.pp > 1:
+            shape.append(self.pp)
+            names.append(self.pp_axis)
+        shape.append(self.tp)
+        names.append(self.tp_axis)
+        dev = np.array(devices[:n]).reshape(shape)
+        return Mesh(dev, tuple(names))
+
+    def context(self, mesh: Mesh, *, num_kv_heads: int = 16,
+                num_heads: int = 0) -> shctx.ShardingContext:
+        """The ShardingContext to install (``shctx.use_mesh``) around jit
+        trace and execution for this plan."""
+        return shctx.make_context(
+            mesh, num_kv_heads=num_kv_heads, num_heads=num_heads)
+
+    # -- classification / specs --------------------------------------------
+
+    def linear_kind(self, path: str) -> str:
+        """col/row/replicated for a linear module path — overrides first,
+        then the shared rule table."""
+        for pat, kind in self.kind_overrides:
+            if re.search(pat, path):
+                return kind
+        return _linear_kind_impl(
+            path, attn_kv_replicated=self.attn_kv_replicated)
+
+    def _axis_degree(self, name) -> int:
+        if isinstance(name, (tuple, list)):
+            d = 1
+            for n in name:
+                d *= self._axis_degree(n)
+            return d
+        return {self.tp_axis: self.tp, self.pp_axis: self.pp,
+                self.dp_axis: self.dp}.get(name, 1)
+
+    def param_specs(self, params):
+        """PartitionSpec pytree for ``params`` under this plan.
+
+        Call on the *renumbered* tree (:meth:`renumber_params`) — the
+        shard-stacked PackedWeight form carries its own specs.
+
+        Specs are sanitized against the actual leaf shapes: a dim the rule
+        table would shard whose size does not divide the axis degree falls
+        back to replicated (e.g. a block weight packed into a single row
+        block under TP=2), instead of failing inside ``device_put``.
+        """
+        specs = _param_specs_impl(
+            params, attn_kv_replicated=self.attn_kv_replicated,
+            kind_fn=self.linear_kind)
+
+        def sane(spec, leaf):
+            if not isinstance(spec, P) or not hasattr(leaf, "shape"):
+                return spec
+            parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            parts = [ax if ax is None or
+                     leaf.shape[i] % self._axis_degree(ax) == 0 else None
+                     for i, ax in enumerate(parts)]
+            return P(*parts)
+
+        is_p = lambda x: isinstance(x, P)
+        flat_s, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_p)
+        flat_p = treedef.flatten_up_to(params)
+        return treedef.unflatten(
+            [sane(s, p) for s, p in zip(flat_s, flat_p)])
+
+    # -- packed-weight renumbering -----------------------------------------
+
+    def renumber_params(self, params):
+        """Rewrite row-parallel PackedWeights into the shard-stacked,
+        locally-renumbered form (``core.sparsity.shard_packed_row_parallel``)
+        so their contraction dim genuinely shards over ``tp_axis``.
+
+        No-op when ``tp == 1`` or ``renumber == 'replicate'``.  Nodes the
+        pass cannot shard are left whole (replicated): group count not a
+        multiple of ``tp``, already-sharded nodes, and int8 *block* nodes
+        (their zero-value validity probe is unreliable — see
+        ``_block_shard_arrays``).  Run on concrete (non-tracer) params.
+        """
+        if self.tp == 1 or self.renumber == REPLICATE:
+            return params
+
+        def one(path, leaf):
+            if not isinstance(leaf, PackedWeight):
+                return leaf
+            pw = leaf
+            if pw.shard_axis is not None:
+                return pw
+            if self.linear_kind(_path_str(path)) != "row":
+                return pw
+            if pw.groups % self.tp != 0:
+                return pw
+            if pw.layout == LAYOUT_BLOCK and pw.qdtype is not None:
+                return pw
+            return shard_packed_row_parallel(pw, self.tp, axis=self.tp_axis)
+
+        return jax.tree_util.tree_map_with_path(
+            one, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+
+    def shard_params(self, params, mesh: Optional[Mesh] = None):
+        """Renumber + device_put ``params`` onto ``mesh`` per this plan.
+        Returns the placed tree (identity when the plan is single-device)."""
+        mesh = mesh if mesh is not None else self.make_mesh()
+        params = self.renumber_params(params)
+        if mesh is None:
+            return params
+        shardings = shardings_for(mesh, self.param_specs(params))
+        return jax.device_put(params, shardings)
+
+    # -- decode state -------------------------------------------------------
+
+    def decode_state_specs(self, state, *, num_kv_heads: int):
+        """PartitionSpec tree for a decode state: KV tensors (contiguous
+        caches (L, B, S, Hkv, Dh) and paged arenas (L, Np, P, Hkv, Dh) —
+        both ndim-5 with heads at axis 3) shard the head axis over
+        ``tp_axis`` when the head count divides TP; everything else
+        (positions, lengths, block tables) is replicated."""
+        shard_heads = self.tp > 1 and num_kv_heads % self.tp == 0
+
+        def one(leaf):
+            nd = getattr(leaf, "ndim", None)
+            if shard_heads and nd == 5 and leaf.shape[3] == num_kv_heads:
+                return P(None, None, None, self.tp_axis, None)
+            return P()
+
+        return jax.tree_util.tree_map(one, state)
+
+    def shard_decode_state(self, state, mesh: Optional[Mesh], *,
+                           num_kv_heads: int):
+        """device_put a freshly initialised decode state per
+        :meth:`decode_state_specs` (identity without a mesh)."""
+        if mesh is None:
+            return state
+        specs = self.decode_state_specs(state, num_kv_heads=num_kv_heads)
+        return jax.device_put(state, shardings_for(mesh, specs))
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "version": _PLAN_VERSION,
+            "tp": self.tp, "pp": self.pp, "dp": self.dp,
+            "tp_axis": self.tp_axis, "pp_axis": self.pp_axis,
+            "dp_axis": self.dp_axis,
+            "attn_kv_replicated": self.attn_kv_replicated,
+            "renumber": self.renumber,
+            "kind_overrides": [list(kv) for kv in self.kind_overrides],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ShardingPlan":
+        v = d.get("version", _PLAN_VERSION)
+        if v > _PLAN_VERSION:
+            raise ValueError(f"unknown ShardingPlan version {v}")
+        return cls(
+            tp=int(d.get("tp", 1)), pp=int(d.get("pp", 1)),
+            dp=int(d.get("dp", 1)),
+            tp_axis=d.get("tp_axis", "model"),
+            pp_axis=d.get("pp_axis", "pipe"),
+            dp_axis=d.get("dp_axis", "data"),
+            attn_kv_replicated=bool(d.get("attn_kv_replicated", False)),
+            renumber=d.get("renumber", RENUMBER),
+            kind_overrides=tuple(
+                (p, k) for p, k in d.get("kind_overrides", [])),
+        )
+
+
+def single_device_plan() -> ShardingPlan:
+    """The trivial plan (tp=pp=dp=1): make_mesh() is None and every
+    transform is the identity."""
+    return ShardingPlan()

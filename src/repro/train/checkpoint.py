@@ -88,6 +88,12 @@ def _node_entries(tree, prefix=""):
             entry["block_geom"] = list(tree.block_geom)
         if tree.qdtype is not None:
             entry["qdtype"] = tree.qdtype
+        if tree.shards > 1:
+            # Renumbered shard-stacked / shard-local provenance: a restore
+            # must know the TP geometry the group ids were renumbered for.
+            entry["shards"] = tree.shards
+            if tree.shard_axis is not None:
+                entry["shard_axis"] = tree.shard_axis
         out.append(entry)
     elif isinstance(tree, Static):
         out.append({"path": prefix, "kind": "static",
@@ -116,7 +122,9 @@ def _patch_nodes(tree, by_path, prefix=""):
                                 active_groups=tree.active_groups,
                                 block_geom=tuple(geom) if geom else None,
                                 scales=tree.scales if qdtype else None,
-                                qdtype=qdtype)
+                                qdtype=qdtype,
+                                shard_axis=e.get("shard_axis"),
+                                shards=int(e.get("shards", 1)))
         return tree
     if isinstance(tree, Static):
         e = by_path.get(prefix)
@@ -136,8 +144,12 @@ def _patch_nodes(tree, by_path, prefix=""):
     return tree
 
 
-def save(tree, directory: str, step: int) -> str:
-    """Synchronous atomic save.  Returns the committed directory."""
+def save(tree, directory: str, step: int, *, plan=None) -> str:
+    """Synchronous atomic save.  Returns the committed directory.
+
+    ``plan`` (a :class:`~repro.sharding.plan.ShardingPlan`) is serialized
+    into the manifest so a restoring process knows the distribution
+    geometry the checkpoint was produced under (:func:`load_plan`)."""
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -145,6 +157,8 @@ def save(tree, directory: str, step: int) -> str:
     os.makedirs(tmp, exist_ok=True)
 
     manifest = {"step": step, "leaves": [], "nodes": _node_entries(tree)}
+    if plan is not None:
+        manifest["sharding_plan"] = plan.to_json()
     for path, leaf in _leaf_paths(tree):
         fname = path.replace("/", "__") + ".npy"
         if leaf is None:
@@ -163,10 +177,31 @@ def save(tree, directory: str, step: int) -> str:
     return final
 
 
-def save_async(tree, directory: str, step: int) -> Future:
+def save_async(tree, directory: str, step: int, *, plan=None) -> Future:
     host_tree = jax.tree.map(
         lambda x: np.asarray(jax.device_get(x)) if x is not None else x, tree)
-    return _EXEC.submit(save, host_tree, directory, step)
+    return _EXEC.submit(save, host_tree, directory, step, plan=plan)
+
+
+def load_plan(directory: str, step: Optional[int] = None):
+    """The :class:`~repro.sharding.plan.ShardingPlan` a checkpoint was saved
+    with, or None (no plan recorded / pre-plan manifest).  ``step`` defaults
+    to the latest committed step."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    final = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    blob = manifest.get("sharding_plan")
+    if blob is None:
+        return None
+    from repro.sharding.plan import ShardingPlan
+    return ShardingPlan.from_json(blob)
 
 
 def latest_step(directory: str) -> Optional[int]:

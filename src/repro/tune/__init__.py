@@ -65,22 +65,26 @@ __all__ = [
 ]
 
 
-def resolve_xwT(x_shape, w_shape, cfg: SparsityConfig, dtype) -> TunedConfig:
+def resolve_xwT(x_shape, w_shape, cfg: SparsityConfig, dtype,
+                shards: int = 1) -> TunedConfig:
     """Static (backend, params) choice for ``backend="auto"`` xwT dispatch.
 
     Never measures: tuning-cache hit or heuristic default.  Shapes may come
-    from tracers — only static metadata is consulted.
+    from tracers — only static metadata is consulted.  ``shards`` > 1 marks
+    the shard-local problem of a renumbered row-parallel weight (distinct
+    cache key from the same-shape global problem).
     """
-    p = Problem.for_xwT(x_shape, w_shape, cfg, dtype)
+    p = Problem.for_xwT(x_shape, w_shape, cfg, dtype, shards=shards)
     return default_cache().resolve(p)
 
 
 def resolve_xwT_q8(x_shape, w_shape, cfg: SparsityConfig,
-                   dtype) -> TunedConfig:
+                   dtype, shards: int = 1) -> TunedConfig:
     """Static (backend, params) choice for ``backend="auto"`` dispatch of an
     int8-quantized xwT weight — its own ``xwT_q8`` cache key, so float and
     quantized tunings coexist.  Never measures."""
-    p = Problem.for_xwT(x_shape, w_shape, cfg, dtype, quantized=True)
+    p = Problem.for_xwT(x_shape, w_shape, cfg, dtype, quantized=True,
+                        shards=shards)
     return default_cache().resolve(p)
 
 
@@ -115,12 +119,18 @@ def autotune_packed_tree(params, batch: int, dtype=None, *,
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.sparsity import LAYOUT_BLOCK, PackedWeight
+    from repro.core.sparsity import LAYOUT_BLOCK, PackedWeight, shard_slice
 
     dtype = dtype or jnp.float32
     seen = {}
 
     def tune_one(pw: PackedWeight):
+        if pw.shard_axis is not None:
+            # Shard-stacked row-parallel weight: what dispatches inside the
+            # shard_map island is the shard-local problem (every slice has
+            # identical static geometry), so tune slice 0 — its key carries
+            # the shard-local k/a_max plus the |sN shard marker.
+            pw = shard_slice(pw, 0)
         o, k = pw.dense_shape
         if pw.layout == LAYOUT_BLOCK:
             stack = pw.stack_dims
@@ -147,7 +157,7 @@ def autotune_packed_tree(params, batch: int, dtype=None, *,
             if quant:
                 scls = scls.reshape(-1)[:o]
         p = Problem.for_xwT((batch, k), (o, k), pw.cfg, dtype,
-                            quantized=quant)
+                            quantized=quant, shards=pw.shards)
         key = problem_key(p)
         if key in seen:
             return

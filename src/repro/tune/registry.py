@@ -64,6 +64,11 @@ class Problem:
     ``block_r``/``a_max`` — static block geometry of the two-level layout
                 (``xwT_block`` only; 0 otherwise).  Fixed at pack time, so
                 it is part of the problem, not a tunable parameter.
+    ``shards`` — contraction-sharding degree when this is the *per-shard*
+                problem of a renumbered row-parallel weight (``k``/``a_max``
+                are then shard-local).  Part of the cache key so a tuned
+                entry for the global shape is never silently reused for its
+                TP slices (and vice versa).
     """
 
     op: str
@@ -75,6 +80,7 @@ class Problem:
     platform: str = "cpu"
     block_r: int = 0
     a_max: int = 0
+    shards: int = 1
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -96,7 +102,7 @@ class Problem:
     @classmethod
     def for_xwT(cls, x_shape, w_shape, cfg: SparsityConfig, dtype,
                 platform: Optional[str] = None, *,
-                quantized: bool = False) -> "Problem":
+                quantized: bool = False, shards: int = 1) -> "Problem":
         """``dtype`` is the *activation* dtype; quantized problems (int8
         weights, w8a16 kernels) are a distinct op — and therefore distinct
         tuning-cache keys — from their float twins."""
@@ -104,7 +110,8 @@ class Problem:
                    rows=int(x_shape[0]), out=int(w_shape[0]),
                    k=int(x_shape[1]), dtype=jax.numpy.dtype(dtype).name,
                    sparsity=(cfg.n, cfg.m, cfg.k),
-                   platform=platform or current_platform())
+                   platform=platform or current_platform(),
+                   shards=int(shards))
 
     @classmethod
     def for_spmm(cls, a_shape, b_shape, cfg: SparsityConfig, dtype,
@@ -128,7 +135,8 @@ class Problem:
                    k=int(k), dtype=jax.numpy.dtype(dtype).name,
                    sparsity=(cfg.n, cfg.m, cfg.k),
                    platform=platform or current_platform(),
-                   block_r=int(block_r), a_max=int(a_max))
+                   block_r=int(block_r), a_max=int(a_max),
+                   shards=int(getattr(pw, "shards", 1)))
 
 
 @dataclasses.dataclass(frozen=True)
