@@ -32,6 +32,19 @@ plus the cross-engine checks the CI gate consumes:
   ``--compare`` gates with the kernel-bench 25%-regression idiom: absolute
   latencies gate on machine lottery, the *ratio* between two engines
   measured in the same process is stable.
+
+``--spec N:M`` adds a third leg: self-speculative decoding (repro.spec,
+DESIGN.md §15) on packed weights — a packed non-spec engine and a packed
+spec engine replay the same trace, and the leg reports acceptance rate,
+committed window columns per full-tier dispatch, and the spec/non-spec
+tokens/sec ratio, gating token identity and ``--min-acceptance``.  Pair it
+with ``--sparsity`` (e.g. ``--sparsity 8:16 --spec 6:16``) so the packed
+pattern has a tier the draft can narrow.  ``--min-spec-speedup`` turns the
+throughput ratio into a gate too — meaningful only on memory-bandwidth-
+bound accelerators: on the CPU reference backend a draft step densifies
+the same weights as a full step, so drafting costs compute it cannot save
+and the dispatch-normalized ``tokens_per_dispatch`` is the portable
+signal.
 """
 
 from __future__ import annotations
@@ -194,6 +207,23 @@ def main(argv=None) -> int:
     ap.add_argument("--min-prefill-speedup", type=float, default=None,
                     help="fail unless chunked prefill beats token-by-token "
                          "ingest by this factor (tokens/sec)")
+    ap.add_argument("--sparsity", default=None, metavar="N:M",
+                    help="override the arch sparsity pattern on every "
+                         "sparse linear (pair with --spec so the draft "
+                         "tier can narrow the packed weights)")
+    ap.add_argument("--spec", default=None, metavar="N:M",
+                    help="run the speculative leg with this draft tier "
+                         "(packed weights, repro.spec)")
+    ap.add_argument("--spec-gamma", type=int, default=4,
+                    help="tokens drafted per speculation window")
+    ap.add_argument("--min-acceptance", type=float, default=0.5,
+                    help="spec leg: fail if the measured draft acceptance "
+                         "rate is at or below this")
+    ap.add_argument("--min-spec-speedup", type=float, default=None,
+                    help="spec leg: fail unless spec tokens/sec >= this "
+                         "factor of the packed non-spec baseline (leave "
+                         "unset on compute-bound CPU hosts — see module "
+                         "docstring)")
     args = ap.parse_args(argv)
 
     trace_path = args.trace
@@ -209,6 +239,11 @@ def main(argv=None) -> int:
     # order difference flips them.  At f32 resolution ties don't collide.
     cfg = dataclasses.replace(get_arch(args.arch).reduced(),
                               compute_dtype="float32")
+    if args.sparsity:
+        from repro.core.sparsity import SparsityConfig
+        from repro.spec import parse_tier
+        n, m = parse_tier(args.sparsity)
+        cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(n, m, 1))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     vocab = cfg.vocab_size
@@ -277,6 +312,51 @@ def main(argv=None) -> int:
         "prefill": 1.0 / speedup,
     }
 
+    # -- speculative leg (packed weights, draft tier = --spec) --------------
+    spec_stats = None
+    if args.spec:
+        from repro.core.sparse_linear import ExecPolicy
+        from repro.launch.pack_tree import pack_tree
+        from repro.spec import SpecConfig, tier_sort_tree
+
+        packed = tier_sort_tree(pack_tree(params))
+        pol = ExecPolicy(mode="packed", backend="reference")
+        serve_cfg = ServeConfig(num_slots=args.slots, max_len=args.max_len)
+
+        base_eng = ServeEngine(model, packed, serve_cfg, policy=pol,
+                               metrics=MetricsRegistry())
+        _warmup(base_eng, vocab, _WARM_UID)
+        b_dt, _, _ = replay(base_eng, _requests(trace, args.seed, vocab))
+        b_reqs = [r for r in base_eng.completed if r.uid < _WARM_UID]
+        b_tokens = sum(len(r.output) for r in b_reqs)
+
+        spec_eng = ServeEngine(model, packed, serve_cfg, policy=pol,
+                               metrics=MetricsRegistry(),
+                               spec=SpecConfig(draft=args.spec,
+                                               gamma=args.spec_gamma))
+        _warmup(spec_eng, vocab, _WARM_UID)
+        s_dt, _, _ = replay(spec_eng, _requests(trace, args.seed, vocab))
+        s_reqs = [r for r in spec_eng.completed if r.uid < _WARM_UID]
+        s_tokens = sum(len(r.output) for r in s_reqs)
+
+        sm = spec_eng._spec_metrics
+        spec_stats = {
+            **lat_stats(s_reqs),
+            "draft": args.spec,
+            "gamma": args.spec_gamma,
+            "tokens_per_sec": s_tokens / s_dt,
+            "baseline_tokens_per_sec": b_tokens / b_dt,
+            "speedup": (s_tokens / s_dt) / (b_tokens / b_dt),
+            "drafted": int(sm.drafted.value),
+            "accepted": int(sm.accepted.value),
+            "acceptance_rate": sm.accepted.value / max(sm.drafted.value, 1),
+            "tokens_per_dispatch": (sm._committed_total
+                                    / max(sm._verify_dispatches, 1)),
+            "verify_dispatches": sm._verify_dispatches,
+            "token_identical": ({r.uid: list(r.output) for r in s_reqs}
+                                == {r.uid: list(r.output) for r in b_reqs}),
+        }
+
     blob = {
         "meta": {**run_metadata(), "arch": cfg.name,
                  "compute_dtype": cfg.compute_dtype, "seed": args.seed,
@@ -285,12 +365,14 @@ def main(argv=None) -> int:
                  "slots": args.slots, "max_len": args.max_len,
                  "page_size": args.page_size, "max_pages": args.max_pages,
                  "prefill_chunk": args.prefill_chunk,
-                 "scheduler": args.scheduler},
+                 "scheduler": args.scheduler,
+                 "sparsity": args.sparsity},
         "paged": paged_stats,
         "legacy": legacy_stats,
         "rel": rel,
         "token_identical": token_identical,
         "prefill_speedup": speedup,
+        "spec": spec_stats,
     }
     with open(args.out, "w") as f:
         json.dump(blob, f, indent=2)
@@ -307,6 +389,15 @@ def main(argv=None) -> int:
           f"{paged_stats['prefill_dispatches']} prefill dispatches")
     print(f"  prefill speedup {speedup:.2f}x, token_identical="
           f"{token_identical}")
+    if spec_stats:
+        print(f"  spec   draft {spec_stats['draft']} gamma "
+              f"{spec_stats['gamma']}: acceptance "
+              f"{spec_stats['acceptance_rate']:.3f} "
+              f"({spec_stats['accepted']}/{spec_stats['drafted']}), "
+              f"{spec_stats['tokens_per_dispatch']:.2f} tokens/dispatch, "
+              f"{spec_stats['tokens_per_sec']:7.1f} tok/s "
+              f"({spec_stats['speedup']:.2f}x packed non-spec), "
+              f"token_identical={spec_stats['token_identical']}")
     print(f"wrote {args.out}")
 
     failures = []
@@ -316,6 +407,23 @@ def main(argv=None) -> int:
     if args.min_prefill_speedup and speedup < args.min_prefill_speedup:
         failures.append(f"prefill speedup {speedup:.2f}x < required "
                         f"{args.min_prefill_speedup}x")
+    if spec_stats:
+        if not spec_stats["token_identical"]:
+            failures.append("speculative decode diverged from the packed "
+                            "non-spec stream")
+        if spec_stats["acceptance_rate"] <= args.min_acceptance:
+            failures.append(
+                f"spec acceptance {spec_stats['acceptance_rate']:.3f} <= "
+                f"required {args.min_acceptance}")
+        if spec_stats["tokens_per_dispatch"] <= 1.0:
+            failures.append(
+                f"spec tokens/dispatch {spec_stats['tokens_per_dispatch']:.2f}"
+                " <= 1 (speculation commits no extra tokens per full-tier "
+                "dispatch)")
+        if (args.min_spec_speedup
+                and spec_stats["speedup"] < args.min_spec_speedup):
+            failures.append(f"spec speedup {spec_stats['speedup']:.2f}x < "
+                            f"required {args.min_spec_speedup}x")
     if args.compare:
         with open(args.compare) as f:
             base = json.load(f)

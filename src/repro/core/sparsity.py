@@ -340,12 +340,12 @@ class PackedWeight:
 
     __slots__ = ("values", "indices", "cfg", "dense_shape", "layout",
                  "active_groups", "block_geom", "scales", "qdtype",
-                 "shard_axis", "shards")
+                 "shard_axis", "shards", "tier_ne")
 
     def __init__(self, values, indices, *, cfg: SparsityConfig, dense_shape,
                  layout: str = LAYOUT_XWT, active_groups=None,
                  block_geom=None, scales=None, qdtype=None,
-                 shard_axis=None, shards: int = 1):
+                 shard_axis=None, shards: int = 1, tier_ne=None):
         if not isinstance(cfg, SparsityConfig):
             raise TypeError(f"cfg must be a SparsityConfig, got {type(cfg)}")
         if layout not in LAYOUTS:
@@ -444,6 +444,14 @@ class PackedWeight:
                     f"{tuple(vshape)} for the {layout!r} layout: expected "
                     f"one of {want} (per output row / per group for xwT, "
                     f"per row-block × group × row for block)")
+        if tier_ne is not None:
+            tier_ne = int(tier_ne)
+            if not 1 <= tier_ne <= cfg.n_effective:
+                raise ValueError(
+                    f"tier_ne={tier_ne} outside [1, n_effective="
+                    f"{cfg.n_effective}] of cfg={cfg.pattern_name()}")
+            if tier_ne == cfg.n_effective:
+                tier_ne = None      # the full tier is the canonical no-view
         self.values = values
         self.indices = indices
         self.cfg = cfg
@@ -455,6 +463,7 @@ class PackedWeight:
         self.qdtype = qdtype
         self.shard_axis = shard_axis
         self.shards = shards
+        self.tier_ne = tier_ne
 
     # ---- static geometry -------------------------------------------------
     @property
@@ -490,7 +499,7 @@ class PackedWeight:
                "layout": self.layout, "active_groups": self.active_groups,
                "block_geom": self.block_geom, "scales": self.scales,
                "qdtype": self.qdtype, "shard_axis": self.shard_axis,
-               "shards": self.shards}
+               "shards": self.shards, "tier_ne": self.tier_ne}
         out.update(kw)
         return PackedWeight(out.pop("values"), out.pop("indices"), **out)
 
@@ -503,9 +512,10 @@ class PackedWeight:
             sh = f", shards={self.shards}"
             if self.shard_axis is not None:
                 sh += f" over {self.shard_axis!r}"
+        tier = f", tier_ne={self.tier_ne}" if self.tier_ne else ""
         return (f"PackedWeight(values={vs}, cfg={self.cfg.pattern_name()!r}, "
                 f"dense_shape={self.dense_shape}, layout={self.layout!r}"
-                f"{geom}{q}{sh})")
+                f"{geom}{q}{sh}{tier})")
 
     # ---- conversions -----------------------------------------------------
     @classmethod
@@ -533,7 +543,10 @@ class PackedWeight:
     def to_dense(self) -> jax.Array:
         """Scatter back to the dense weight (dequantizing if needed),
         restoring any stack dims.  Shard-stacked weights are merged back to
-        the global packing first (concrete data only for ``block``)."""
+        the global packing first (concrete data only for ``block``); a
+        draft-tier view (``tier_ne``) densifies only its tier prefix."""
+        if self.tier_ne is not None:
+            return narrow_tier(self).to_dense()
         if self.shard_axis is not None:
             return unshard_packed(self).to_dense()
         o, k = self.dense_shape
@@ -560,7 +573,7 @@ class PackedWeight:
 
 def _pw_flatten(pw: PackedWeight):
     aux = (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom, pw.qdtype,
-           pw.shard_axis, pw.shards)
+           pw.shard_axis, pw.shards, pw.tier_ne)
     children = [pw.values, pw.indices]
     if pw.layout == LAYOUT_BLOCK:
         children.append(pw.active_groups)
@@ -578,14 +591,15 @@ def _pw_flatten_with_keys(pw: PackedWeight):
     if pw.qdtype is not None:
         keyed.append((jax.tree_util.GetAttrKey("scales"), pw.scales))
     return tuple(keyed), (pw.cfg, pw.dense_shape, pw.layout, pw.block_geom,
-                          pw.qdtype, pw.shard_axis, pw.shards)
+                          pw.qdtype, pw.shard_axis, pw.shards, pw.tier_ne)
 
 
 def _pw_unflatten(aux, children) -> PackedWeight:
     # Raw rebuild, no __init__ validation: tree transforms routinely carry
     # non-array leaves (None results, PartitionSpecs, sentinel objects) and
     # the aux was validated when the weight was packed.
-    cfg, dense_shape, layout, block_geom, qdtype, shard_axis, shards = aux
+    cfg, dense_shape, layout, block_geom, qdtype, shard_axis, shards, \
+        tier_ne = aux
     pw = object.__new__(PackedWeight)
     children = list(children)
     scales = children.pop() if qdtype is not None else None
@@ -604,6 +618,7 @@ def _pw_unflatten(aux, children) -> PackedWeight:
     pw.qdtype = qdtype
     pw.shard_axis = shard_axis
     pw.shards = shards
+    pw.tier_ne = tier_ne
     return pw
 
 
@@ -982,6 +997,56 @@ def shard_slice(pw: "PackedWeight", s) -> "PackedWeight":
         dense_shape=(o, k // pw.shards), layout=pw.layout,
         active_groups=take(pw.active_groups), block_geom=pw.block_geom,
         scales=scales, qdtype=pw.qdtype, shard_axis=None, shards=pw.shards)
+
+
+# ---------------------------------------------------------------------------
+# Sparser-tier views (repro.spec): one buffer, two densities
+# ---------------------------------------------------------------------------
+#
+# The inverse direction of the paper's §II-B reconfiguration: where
+# ``reconfigure_k`` serves a *denser* kN:M pattern in k passes, a *tier view*
+# serves a sparser pattern from the same stored stream by reading only the
+# first ``tier_ne`` of the ``n_effective`` {value, col_idx} pairs per group.
+# ``tier_ne`` is static aux on PackedWeight — the children are untouched, so
+# a draft-tier view aliases the full tier's buffers (``draft.values is
+# full.values``) and the narrowing happens at trace time inside kernel
+# dispatch.  For the prefix to be the magnitude-top-``tier_ne`` slice, the
+# per-group entry order must be magnitude-descending — ``tier_sort_packed``
+# establishes that invariant once (full-tier compute is order-independent:
+# both the one-hot scatter and the kernels' gather-accumulate sum over the
+# Ne axis).
+
+def tier_sort_packed(pw: PackedWeight) -> PackedWeight:
+    """Reorder every group's {value, col_idx} pairs by descending |value|.
+
+    Numerically a no-op for full-tier compute; it makes any prefix
+    ``[:t]`` of the Ne axis the exact magnitude-top-``t`` sub-pattern, which
+    is what a ``tier_ne`` draft view reads.  Sort keys are the raw packed
+    magnitudes — valid for quantized weights too, because the dequant scale
+    is constant along the Ne axis (per row / per group / per (rb, g, row)).
+    Zero-padded slots sort last.  Stable, so equal-magnitude entries keep
+    their canonical ascending-index order.
+    """
+    mag = jnp.abs(pw.values.astype(jnp.float32)
+                  if pw.qdtype is not None else pw.values)
+    order = jnp.argsort(-mag, axis=-1, stable=True)
+    return pw.replace(
+        values=jnp.take_along_axis(pw.values, order, axis=-1),
+        indices=jnp.take_along_axis(pw.indices, order, axis=-1))
+
+
+def narrow_tier(pw: PackedWeight) -> PackedWeight:
+    """Materialize a ``tier_ne`` view: slice the Ne axis to the tier prefix
+    and retag the config as the sparser ``tier_ne:M`` pattern.  Called at
+    trace time by kernel dispatch (kernels/ops.py) — outside a trace the
+    slice copies, which is exactly why the *view* form (static ``tier_ne``,
+    shared buffers) is what lives in the params tree."""
+    t = pw.tier_ne
+    if t is None:
+        return pw
+    return pw.replace(
+        values=pw.values[..., :t], indices=pw.indices[..., :t],
+        cfg=SparsityConfig(n=t, m=pw.cfg.m, k=1), tier_ne=None)
 
 
 def reconfigure_k(p: PackedSparse, k: int) -> PackedSparse:

@@ -96,6 +96,15 @@ def demm_matmul_packed(x: jax.Array, pw: PackedWeight,
     with ``psum``.  Without a matching mesh (single device, tests) the same
     math runs as a sequential sum over slices.
     """
+    if getattr(pw, "tier_ne", None) is not None:
+        # Draft-tier view (repro.spec): the params tree aliases the full
+        # tier's buffers and only this static tag differs; the trace-time
+        # slice narrows the address stream to the magnitude-top prefix
+        # (tier_sort_packed invariant) before any dispatch decision — a
+        # shard-stacked draft weight therefore keeps the single psum island
+        # of its full-tier twin.
+        from repro.core.sparsity import narrow_tier
+        return demm_matmul_packed(x, narrow_tier(pw), backend)
     if getattr(pw, "shard_axis", None) is not None:
         return _demm_matmul_sharded(x, pw, backend)
     if pw.layout == LAYOUT_BLOCK:

@@ -41,9 +41,9 @@ from repro.models.families import build_model
 from repro.optim import adamw
 from repro.sharding import context as shctx
 from repro.sharding.partitioning import (
+    _param_specs_impl,
     batch_axes,
     opt_state_specs,
-    param_specs,
     shardings_for,
 )
 
@@ -191,7 +191,7 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     kv_repl = (cfg.num_kv_heads % tp != 0 and cfg.num_heads % tp == 0
                and shape.kind != "decode")
     pshapes = specs_mod.param_shapes(model)
-    pspecs = param_specs(pshapes, attn_kv_replicated=kv_repl)
+    pspecs = _param_specs_impl(pshapes, attn_kv_replicated=kv_repl)
     pshard = shardings_for(mesh, pspecs)
 
     t0 = time.time()
@@ -239,7 +239,7 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
             if packed:
                 from repro.launch.pack_tree import pack_tree_shapes
                 params_in = pack_tree_shapes(model, pshapes)
-                pspecs = param_specs(params_in)
+                pspecs = _param_specs_impl(params_in)
                 pshard = shardings_for(mesh, pspecs)
             sspecs, sshapes = decode_state_specs(model, shape, mesh,
                                                  seq_shard=seq_shard)

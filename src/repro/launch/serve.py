@@ -21,6 +21,13 @@ preemption policy; ``--trace-replay trace.jsonl`` replays a
 ``benchmarks/serve_bench.py`` trace at its logical arrival ticks, with
 prompt tokens derived deterministically from ``(--seed, uid)``.
 
+``--spec-draft N:M`` turns on self-speculative decoding (``repro.spec``,
+DESIGN.md §15): ``--spec-gamma`` tokens per window are drafted with the
+sparser-tier view of the same packed buffers and verified in one batched
+full-tier dispatch; ``--temperature``/``--top-k`` select replay-safe
+coupled sampling (token streams are identical with and without
+speculation, preemption included).
+
 ``--ckpt-dir`` restores trained params from a ``launch/train.py``
 checkpoint before packing — the serve half of the dense → prune →
 train/QAT → pack → serve pipeline (a ``--sparsify`` run's final checkpoint
@@ -80,7 +87,9 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
               max_new: int = 16, max_len: int = 128, seed: int = 0,
               paged: bool = False, page_size: int = 16, max_pages=None,
               prefill_chunk: int = 32, scheduler: str = "fcfs",
-              trace_replay=None, plan=None, replicas: int = 1):
+              trace_replay=None, plan=None, replicas: int = 1,
+              spec_draft=None, spec_gamma: int = 4,
+              temperature: float = 0.0, top_k: int = 0):
     """Pack (optionally) and serve ``requests`` random prompts; returns the
     drained engine.  The reusable core of ``main()`` — the end-to-end
     examples call this directly with their own trained params.
@@ -96,7 +105,22 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
     microbatched pipelined decode step.  ``replicas`` > 1 serves through a
     data-parallel :class:`~repro.serve.ReplicaRouter` — N engines over one
     shared params tree, round-robin admission, merged metrics.
+
+    ``spec_draft`` ("N:M") turns on self-speculative decoding
+    (``repro.spec``, DESIGN.md §15): draft ``spec_gamma`` tokens per window
+    at the sparser tier of the same packed buffers, verify in one batched
+    full-tier dispatch.  ``temperature``/``top_k`` select replay-safe
+    coupled sampling (0 = greedy); the token stream is identical with and
+    without speculation.
     """
+    spec = None
+    if spec_draft is not None:
+        from repro.spec import SpecConfig
+        if not packed:
+            raise ValueError(
+                "--spec-draft requires --packed: the draft tier is a view "
+                "of the packed weight buffers")
+        spec = SpecConfig(draft=spec_draft, gamma=spec_gamma)
     mode = "masked"
     if packed:
         params = pack_tree(params, layout=layout, quantize=quantize,
@@ -108,11 +132,15 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
         serve_cfg = PagedServeConfig(
             num_slots=slots, max_len=max_len, page_size=page_size,
             num_pages=max_pages, prefill_chunk=prefill_chunk,
+            temperature=temperature, top_k=top_k, seed=seed,
             sched=SchedConfig(policy=scheduler))
     else:
-        serve_cfg = ServeConfig(num_slots=slots, max_len=max_len)
+        serve_cfg = ServeConfig(num_slots=slots, max_len=max_len,
+                                temperature=temperature, top_k=top_k,
+                                seed=seed)
     engine = make_engine(model, params, serve_cfg, policy=policy,
-                         autotune=autotune and packed, replicas=replicas)
+                         autotune=autotune and packed, replicas=replicas,
+                         spec=spec)
     if trace_replay:
         rows = _load_trace(trace_replay)
         t0 = time.time()
@@ -192,6 +220,26 @@ def main():
                     help="data-parallel engine replicas behind a "
                          "round-robin router sharing one params tree; "
                          "metrics are merged with a replica=<i> label")
+    ap.add_argument("--spec-draft", default=None, metavar="N:M",
+                    help="self-speculative decoding (repro.spec, DESIGN.md "
+                         "§15): draft at this sparser tier of the packed "
+                         "buffers (e.g. 8:128 on a 16:128-packed tree), "
+                         "verify windows in one batched full-tier dispatch; "
+                         "requires --packed")
+    ap.add_argument("--spec-gamma", type=int, default=4,
+                    help="tokens drafted per speculation window")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy); sampling is "
+                         "replay-safe — randomness is keyed on (seed, "
+                         "request, position), so preempt/resume and "
+                         "speculative runs commit identical streams")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k mask for temperature sampling (0 = full "
+                         "vocab)")
+    ap.add_argument("--sparsity", default=None, metavar="N:M",
+                    help="override the arch's N:M sparsity pattern before "
+                         "init/packing (e.g. 8:16 to leave k-reconfigurable "
+                         "headroom for --spec-draft 4:16)")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--layout", choices=("xwT", "block"), default="xwT",
                     help="packed-weight layout for --packed: the row-packed "
@@ -271,10 +319,20 @@ def main():
                         else "")
                      + f" (valid: {sorted(valid)} or 'auto')")
 
+    if args.spec_draft and not args.packed:
+        ap.error("--spec-draft requires --packed (the draft tier is a view "
+                 "of the packed weight buffers)")
+
     log = obs.get_logger("launch.serve")
     cfg = get_arch(args.arch)
     if not args.full:
         cfg = cfg.reduced()
+    if args.sparsity:
+        import dataclasses as _dc
+        from repro.core.sparsity import SparsityConfig
+        from repro.spec.tiers import parse_tier
+        n, m = parse_tier(args.sparsity)
+        cfg = _dc.replace(cfg, sparsity=SparsityConfig(n, m, 1))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt_dir:
@@ -325,13 +383,18 @@ def main():
                            prefill_chunk=args.prefill_chunk,
                            scheduler=args.scheduler,
                            trace_replay=args.trace_replay,
-                           plan=plan, replicas=args.replicas)
+                           plan=plan, replicas=args.replicas,
+                           spec_draft=args.spec_draft,
+                           spec_gamma=args.spec_gamma,
+                           temperature=args.temperature, top_k=args.top_k)
     dt = engine.drain_seconds
     mode = "packed" if args.packed else "masked"
     total_tokens = sum(len(r.output) for r in engine.completed)
     tag = mode if not args.quantize else f"{mode}+{args.quantize}"
     if args.paged:
         tag += "+paged"
+    if args.spec_draft:
+        tag += f"+spec{args.spec_draft}"
     if plan is not None:
         tag += f"+tp{args.tp}" if args.tp > 1 else ""
         tag += f"+pp{args.pp}" if args.pp > 1 else ""
@@ -339,6 +402,13 @@ def main():
     log.info("served", requests=len(engine.completed), tokens=total_tokens,
              seconds=round(dt, 3),
              tok_s=round(total_tokens / max(dt, 1e-9), 1), mode=tag)
+    sm = getattr(engine, "_spec_metrics", None)
+    if sm is not None and sm.drafted.value:
+        log.info("speculation",
+                 drafted=sm.drafted.value, accepted=sm.accepted.value,
+                 acceptance=round(sm.accepted.value / sm.drafted.value, 3),
+                 tokens_per_dispatch=round(
+                     sm._committed_total / max(sm._verify_dispatches, 1), 3))
     for r in engine.completed[:3]:
         log.info(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
                  f"-> {r.output[:8]}")

@@ -330,8 +330,13 @@ def apply_attention_decode(
     k_new = apply_rope(k_new, pos[:, None], rope_theta)
     onehot = jax.nn.one_hot(pos, cache["k"].shape[1],
                             dtype=cache["k"].dtype)    # (B, S)
-    k_cache = cache["k"] + onehot[:, :, None, None] * k_new.astype(cache["k"].dtype)
-    v_cache = cache["v"] + onehot[:, :, None, None] * v_new.astype(cache["v"].dtype)
+    # replace (not accumulate) at pos: identical when the slot is zero, but
+    # a speculative rollback (repro.spec) re-writes positions whose rejected
+    # draft KV is still resident — the write must be idempotent.
+    keep = (1.0 - onehot)[:, :, None, None]
+    put = onehot[:, :, None, None]
+    k_cache = cache["k"] * keep + put * k_new.astype(cache["k"].dtype)
+    v_cache = cache["v"] * keep + put * v_new.astype(cache["v"].dtype)
     out = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
     out = out.reshape(b, 1, num_heads * head_dim)
     out = apply_linear(params["wo"], out, policy=policy)

@@ -16,8 +16,17 @@ The rewritten engine tick is admit → prefill → decode:
 
 Page exhaustion preempts: the victim's pages are freed, the request is
 requeued with its prompt + generated-so-far output, and a later admission
-re-prefills it — greedy decoding makes the preempt/resume cycle
-token-identical to an uninterrupted run (DESIGN.md §13).
+re-prefills it — the preempt/resume cycle is token-identical to an
+uninterrupted run at any temperature, because sampling randomness is keyed
+on (request, position), not on a sequential stream (DESIGN.md §13/§15;
+``repro.spec.sampling``).
+
+Speculative decoding (``spec=SpecConfig(...)``): the decode phase drafts γ
+tokens per tick with the draft-tier view of the same packed buffers, grows
+each lane's pages to cover the window, verifies in ONE batched full-tier
+multistep dispatch, then trims pages beyond the committed tokens in the
+same tick — drafted-but-rejected tokens never hold arena capacity across
+ticks.
 
 Control state (positions, block tables, the decode mask) is mirrored on the
 host and pushed to the device pytree before each program call — value-only
@@ -51,14 +60,11 @@ class PagedServeConfig:
     page_size: int = 16
     num_pages: Optional[int] = None   # None: fully provisioned (no sharing)
     prefill_chunk: int = 32
-    greedy: bool = True
+    greedy: bool = True         # legacy alias; temperature == 0 means greedy
+    temperature: float = 0.0
+    top_k: int = 0              # 0 = full vocab
+    seed: int = 0               # sampling seed (keys the per-position RNG)
     sched: SchedConfig = dataclasses.field(default_factory=SchedConfig)
-
-    def __post_init__(self):
-        if not self.greedy:
-            raise NotImplementedError(
-                "paged serving is greedy-only: preemption recovery relies "
-                "on deterministic resume (DESIGN.md §13)")
 
 
 class PagedServeEngine(EngineBase):
@@ -71,11 +77,17 @@ class PagedServeEngine(EngineBase):
     """
 
     def __init__(self, model, params, cfg: PagedServeConfig, *, policy=None,
-                 autotune=False, metrics=None):
+                 autotune=False, metrics=None, spec=None):
         from repro.core.sparse_linear import resolve_policy
+        from repro.spec.sampling import ReplaySafeSampler
 
         policy = resolve_policy(policy, None, None)
         self.model = model
+        if spec is not None:
+            # magnitude-descending per-group order BEFORE sharding so the
+            # draft tier's prefix-read is exact magnitude pruning
+            from repro.spec.tiers import tier_sort_tree
+            params = tier_sort_tree(params)
         # policy.plan (ShardingPlan): renumber row-parallel packed weights
         # and place everything — the shared KV arena included — on the
         # plan's mesh before either program compiles
@@ -108,6 +120,8 @@ class PagedServeEngine(EngineBase):
         self._fed = [0] * cfg.num_slots       # work tokens ingested
         self.completed: List[Request] = []
         self.tick_count = 0
+        self.sampler = ReplaySafeSampler(temperature=cfg.temperature,
+                                         top_k=cfg.top_k, seed=cfg.seed)
         # -- observability (legacy names + paged families) ------------------
         self.metrics = metrics if metrics is not None else obs.metrics()
         m = self.metrics
@@ -158,6 +172,27 @@ class PagedServeEngine(EngineBase):
             "serve_tokens_per_second",
             help="decode throughput of the last run_until_drained window")
         self._m_pages_free.set(self.kv.pages_free)
+        # -- speculative decoding (DESIGN.md §15) ---------------------------
+        self._spec = spec
+        if spec is not None:
+            from repro.spec.decode import (SpecMetrics, guard_cache_kinds,
+                                           make_multistep)
+            from repro.spec.tiers import derive_draft_tier
+            guard_cache_kinds(self.state)
+            # derive AFTER _setup_plan so the draft view aliases the
+            # placed/renumbered buffers (draft.values IS full.values)
+            self._draft_params, self.tier_report = derive_draft_tier(
+                self.params, spec.draft)
+            self._verify = self._wrap_step(make_multistep(model, policy))
+            self._spec_metrics = SpecMetrics(self.metrics)
+            self._m_disp_draft = m.counter(
+                "serve_step_dispatch_total",
+                help="compiled-program invocations per program",
+                program="draft")
+            self._m_disp_verify = m.counter(
+                "serve_step_dispatch_total",
+                help="compiled-program invocations per program",
+                program="verify")
 
     # -- submission ---------------------------------------------------------
 
@@ -299,8 +334,11 @@ class PagedServeEngine(EngineBase):
     def _finish_prefill(self, slot: int, req: Request, logits, now: float):
         """Final chunk done: sample the next token from its logits (first
         generated token for a fresh request; the continuation token for a
-        preempt-resume)."""
-        tok = int(np.argmax(np.asarray(logits[0, 0], np.float32)))
+        preempt-resume).  The sampler key is the token's absolute sequence
+        index (= the work length), so a resume re-draws the identical
+        token the uninterrupted run committed there."""
+        tok = self.sampler.sample(np.asarray(logits[0, 0], np.float32),
+                                  req.uid, int(self._pos[slot]))
         req.output.append(tok)
         self._next_tok[slot, 0] = tok
         self._m_tokens.inc()
@@ -347,12 +385,13 @@ class PagedServeEngine(EngineBase):
                     self._finish_prefill(i, req, logits, time.monotonic())
             self._page_gauges()
 
-    def _run_decode(self) -> int:
-        # grow each decoding sequence's pages for this tick's write;
-        # exhaustion preempts the policy's victim (possibly the grower)
+    def _grow_or_preempt(self, tokens_for):
+        """Grow every decoding slot's pages to hold ``tokens_for(i)``
+        tokens; exhaustion preempts the policy's victim (possibly the
+        grower, which drops out of the decode mask)."""
         for i in range(self.cfg.num_slots):
             while (self._decode_mask[i]
-                   and not self.kv.ensure_capacity(i, int(self._pos[i]) + 1)):
+                   and not self.kv.ensure_capacity(i, tokens_for(i))):
                 if not self.cfg.sched.preempt:
                     raise RuntimeError(
                         "KV arena exhausted with preemption disabled "
@@ -361,6 +400,21 @@ class PagedServeEngine(EngineBase):
                     [(s, r) for s, r in enumerate(self.active)
                      if r is not None])
                 self._preempt(victim)
+
+    def _run_decode(self) -> int:
+        if self._spec is not None and self._decode_mask.any():
+            g_eff = min(self._spec.gamma,
+                        self.cfg.max_len - 1
+                        - max(int(self._pos[i])
+                              for i in range(self.cfg.num_slots)
+                              if self._decode_mask[i]))
+            if g_eff >= 1:
+                return self._run_decode_spec(g_eff)
+            # a lane is one token from max_len: fall back to a plain step
+        return self._run_decode_plain()
+
+    def _run_decode_plain(self) -> int:
+        self._grow_or_preempt(lambda i: int(self._pos[i]) + 1)
         if not self._decode_mask.any():
             return 0
         self._sync_control()
@@ -379,7 +433,7 @@ class PagedServeEngine(EngineBase):
             req = self.active[i]
             self._pos[i] += 1
             self.kv.note_tokens(i, int(self._pos[i]))
-            tok = int(np.argmax(logits[i]))
+            tok = self.sampler.sample(logits[i], req.uid, int(self._pos[i]))
             req.output.append(tok)
             self._next_tok[i, 0] = tok
             self._m_tokens.inc()
@@ -390,6 +444,80 @@ class PagedServeEngine(EngineBase):
                 self._complete(i, req, now)
         self._page_gauges()
         return n
+
+    def _run_decode_spec(self, g_eff: int) -> int:
+        """One speculation window over the decode-ready lanes: grow pages
+        for the whole window, draft γ_eff tokens with the draft-tier params,
+        verify in ONE batched full-tier multistep dispatch, commit each
+        lane's accepted prefix + correcting/bonus token, then trim the
+        pages beyond the committed tokens (same tick — rejected drafts
+        never hold arena capacity across ticks)."""
+        # positions pos .. pos+g_eff are written -> pos+g_eff+1 tokens
+        self._grow_or_preempt(lambda i: int(self._pos[i]) + g_eff + 1)
+        lanes = [i for i in range(self.cfg.num_slots) if self._decode_mask[i]]
+        if not lanes:
+            return 0
+        self._sync_control()
+        pos0 = self._pos.copy()
+        t0 = time.perf_counter()
+        W = g_eff + 1
+        window = np.zeros((self.cfg.num_slots, W), np.int32)
+        window[:, 0] = self._next_tok[:, 0]
+        d_state = self.state                # self.state stays pre-draft
+        for j in range(g_eff):
+            d_logits, d_state = self._decode(self._draft_params, d_state,
+                                             jnp.asarray(window[:, j:j + 1]))
+            d_logits = np.asarray(d_logits[:, 0], np.float32)
+            self._m_disp_draft.inc()
+            for i in lanes:
+                window[i, j + 1] = self.sampler.sample(
+                    d_logits[i], self.active[i].uid, int(pos0[i]) + j + 1)
+        f_logits, new_state = self._verify(self.params, self.state,
+                                           jnp.asarray(window))
+        f_logits = np.asarray(f_logits, np.float32)
+        self._m_disp_verify.inc()
+        self.state = new_state
+        window_dt = time.perf_counter() - t0
+        now = time.monotonic()
+        drafted = accepted = committed = 0
+        for i in lanes:
+            req = self.active[i]
+            p = int(pos0[i])
+            valid = W                   # window inputs this lane keeps
+            finished = False
+            for j in range(W):
+                tok = self.sampler.sample(f_logits[i, j], req.uid, p + j + 1)
+                if j < g_eff:
+                    drafted += 1
+                    accepted += int(window[i, j + 1]) == tok
+                req.output.append(tok)
+                committed += 1
+                self._m_tokens.inc()
+                if (len(req.output) >= req.max_new_tokens or
+                        (req.eos_id is not None and tok == req.eos_id) or
+                        p + j + 1 >= self.cfg.max_len - 1):
+                    valid = j + 1
+                    finished = True
+                    self._complete(i, req, now)
+                    break
+                if j < g_eff and int(window[i, j + 1]) != tok:
+                    valid = j + 1       # first mismatch truncates
+                    self._next_tok[i, 0] = tok
+                    break
+                if j == g_eff:
+                    self._next_tok[i, 0] = tok   # bonus token
+            if not finished:
+                # roll back to the last valid input and free the tail pages
+                self._pos[i] = p + valid
+                self.kv.note_tokens(i, p + valid)
+                self.kv.trim(i, p + valid)
+        if committed:
+            per_tok = window_dt / committed
+            for _ in range(committed):
+                self._m_tok_lat.observe(per_tok)
+        self._spec_metrics.observe_window(drafted, accepted, committed)
+        self._page_gauges()
+        return len(lanes)
 
     # -- public loop --------------------------------------------------------
 

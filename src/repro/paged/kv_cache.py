@@ -208,6 +208,26 @@ class PagedKVCache:
         """Record the resident token count of ``slot`` (accounting only)."""
         self.tokens[slot] = tokens
 
+    def trim(self, slot: int, tokens: int) -> int:
+        """Shrink ``slot`` back to the pages covering ``tokens`` tokens,
+        freeing the tail pages and nulling their block-table entries.
+
+        The speculative-decode rollback (repro.spec): a verify window grows
+        the slot to ``pos + γ + 1`` tokens so drafted positions have pages
+        to write into, but only *accepted* tokens may keep pages — the tail
+        beyond the committed count is returned to the allocator here, in the
+        same tick, so drafted-but-rejected tokens never hold arena capacity
+        across ticks.  Returns the number of pages freed."""
+        keep = self.layout.pages_for(tokens)
+        pages = self._pages[slot]
+        if keep >= len(pages):
+            return 0
+        tail = pages[keep:]
+        self.allocator.free(tail)
+        self._pages[slot] = pages[:keep]
+        self.table[slot, keep:] = NULL_PAGE
+        return len(tail)
+
     def release(self, slot: int) -> int:
         """Free every page of ``slot`` (completion or preemption-eviction).
         Returns the number of pages released."""

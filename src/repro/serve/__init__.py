@@ -30,7 +30,8 @@ __all__ = [
 
 
 def make_engine(model, params, config, *, plan=None, policy=None,
-                autotune: bool = False, metrics=None, replicas: int = 1):
+                autotune: bool = False, metrics=None, replicas: int = 1,
+                spec=None):
     """Build a serving engine for ``config``.
 
     * ``config`` — :class:`ServeConfig` selects the dense-cache
@@ -45,6 +46,10 @@ def make_engine(model, params, config, *, plan=None, policy=None,
       registry and decode state, sharing ``params``) in a round-robin
       :class:`~repro.serve.router.ReplicaRouter`; ``metrics`` must then be
       None (each replica owns a registry; the router merges snapshots).
+    * ``spec`` — optional :class:`~repro.spec.SpecConfig`: the engine
+      drafts with the sparser-tier view of the same packed buffers and
+      verifies in batched full-tier dispatches (DESIGN.md §15).  Requires
+      a packed params tree whose pattern the draft tier can narrow.
     """
     from repro.core.sparse_linear import resolve_policy
 
@@ -63,10 +68,10 @@ def make_engine(model, params, config, *, plan=None, policy=None,
         if type_name == "PagedServeConfig":
             from repro.paged import PagedServeEngine
             return PagedServeEngine(model, params, config, policy=policy,
-                                    autotune=autotune, metrics=m)
+                                    autotune=autotune, metrics=m, spec=spec)
         if isinstance(config, ServeConfig):
             return ServeEngine(model, params, config, policy=policy,
-                               autotune=autotune, metrics=m)
+                               autotune=autotune, metrics=m, spec=spec)
         raise TypeError(
             f"make_engine: unknown config type {type(config).__name__!r} "
             "(expected ServeConfig or PagedServeConfig)")

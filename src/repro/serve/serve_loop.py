@@ -12,10 +12,16 @@ of ``PackedWeight`` nodes (``launch.pack_tree``) plus an
 then reads only packed bytes (see DESIGN.md §6).  ``backend='auto'``
 resolves each packed matmul through the ``repro.tune`` registry/cache; pass
 ``autotune=True`` to pre-measure tile configs for every packed weight shape
-before the decode step is compiled (DESIGN.md §8).  The legacy
-``mode=``/``backend=`` kwargs are still accepted and folded into a policy,
-but emit a DeprecationWarning and will be removed after one release
-(matching the PR 4 shim-removal policy) — pass ``policy=ExecPolicy(...)``.
+before the decode step is compiled (DESIGN.md §8).
+
+Sampling: ``ServeConfig(temperature=, top_k=, seed=)`` selects the
+replay-safe coupled sampler (``repro.spec.sampling``) — greedy argmax at
+``temperature == 0``.  Speculative decoding: pass
+``spec=SpecConfig(draft="N:M", gamma=G)`` and the engine drafts γ tokens per
+tick with the *draft-tier* view of the same packed buffers, then verifies
+the whole window in one batched full-tier dispatch (DESIGN.md §15).  The
+committed stream is token-identical to the non-speculative engine at any
+temperature.
 
 Observability (``repro.obs``, DESIGN.md §12): the engine instruments the
 full request lifecycle on its :class:`~repro.obs.MetricsRegistry` (the
@@ -24,16 +30,17 @@ submit→first-claim, per-token decode latency, time-to-first-token, tick
 duration histograms; slot-occupancy and tokens/sec gauges; request/token
 counters — and emits ``request_submit`` / ``request_claim`` /
 ``request_first_token`` / ``request_complete`` events plus one ``request``
-span per request on the registry's event trace.
+span per request on the registry's event trace.  Speculative runs add the
+``spec_*`` families (acceptance histogram, drafted/accepted/rejected
+counters, tokens-per-dispatch gauge).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from collections import deque
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,23 +70,34 @@ class Request:
 class ServeConfig:
     num_slots: int = 4
     max_len: int = 256
-    greedy: bool = True
+    greedy: bool = True         # legacy alias; temperature == 0 means greedy
+    temperature: float = 0.0
+    top_k: int = 0              # 0 = full vocab
+    seed: int = 0               # sampling seed (keys the per-position RNG)
 
 
 class ServeEngine(EngineBase):
     def __init__(self, model, params, cfg: ServeConfig, *, policy=None,
-                 mode=None, backend=None, autotune=False, metrics=None):
+                 mode=None, backend=None, autotune=False, metrics=None,
+                 spec=None):
         from repro.core.sparse_linear import resolve_policy
+        from repro.spec.sampling import ReplaySafeSampler
 
         if mode is not None or backend is not None:
-            warnings.warn(
-                "ServeEngine(mode=..., backend=...) is deprecated; pass "
-                "policy=ExecPolicy(mode=..., backend=...) instead (the "
-                "legacy kwargs will be removed after one release, matching "
-                "the PR 4 shim-removal policy)",
-                DeprecationWarning, stacklevel=2)
-        policy = resolve_policy(policy, mode, backend)
+            raise ValueError(
+                "ServeEngine(mode=..., backend=...) was removed (PR 8 "
+                "deprecation); pass policy=ExecPolicy(mode=..., "
+                "backend=...) — and sharding via "
+                "ExecPolicy(plan=ShardingPlan(...))")
+        policy = resolve_policy(policy)
         self.model = model
+        if spec is not None:
+            # establish the tier-sort invariant (per-group pairs ordered
+            # magnitude-descending) BEFORE renumbering/sharding so the
+            # draft tier's prefix-read is exact magnitude pruning even on
+            # shard-stacked nodes (sharding preserves Ne-axis order).
+            from repro.spec.tiers import tier_sort_tree
+            params = tier_sort_tree(params)
         # policy.plan (ShardingPlan): renumber row-parallel packed weights
         # and place everything on the plan's mesh before any compile
         params = self._setup_plan(policy, params)
@@ -112,6 +130,10 @@ class ServeEngine(EngineBase):
                     "combined tp>1 + pp>1 serving would nest the packed TP "
                     "shard_map island inside the pipeline shard_map; pick "
                     "one (DESIGN.md §14)")
+            if spec is not None:
+                raise NotImplementedError(
+                    "speculative decoding with pp>1 would need a pipelined "
+                    "multistep verify program; serve spec on tp/dp plans")
             pp, pp_axis = self.plan.pp, self.plan.pp_axis
             self._step = self._wrap_step(jax.jit(
                 lambda p, s, t: model.decode_step_pipelined(
@@ -124,6 +146,8 @@ class ServeEngine(EngineBase):
         self._fed: List[int] = [0] * cfg.num_slots    # prompt tokens fed
         self._next_tok = np.zeros((cfg.num_slots, 1), np.int32)
         self.completed: List[Request] = []
+        self.sampler = ReplaySafeSampler(temperature=cfg.temperature,
+                                         top_k=cfg.top_k, seed=cfg.seed)
         # -- observability (instruments fetched once; per-tick cost is a few
         #    histogram observes, noise next to the jitted decode step) ------
         self.metrics = metrics if metrics is not None else obs.metrics()
@@ -153,6 +177,19 @@ class ServeEngine(EngineBase):
         self._m_tps = m.gauge(
             "serve_tokens_per_second",
             help="decode throughput of the last run_until_drained window")
+        # -- speculative decoding (DESIGN.md §15) ---------------------------
+        self._spec = spec
+        if spec is not None:
+            from repro.spec.decode import (SpecMetrics, guard_cache_kinds,
+                                           make_multistep)
+            from repro.spec.tiers import derive_draft_tier
+            guard_cache_kinds(self.state)
+            # derive AFTER _setup_plan so the draft view aliases the
+            # placed/renumbered buffers (draft.values IS full.values)
+            self._draft_params, self.tier_report = derive_draft_tier(
+                self.params, spec.draft)
+            self._verify = self._wrap_step(make_multistep(model, policy))
+            self._spec_metrics = SpecMetrics(self.metrics)
 
     def submit(self, req: Request):
         req.output = []
@@ -191,31 +228,56 @@ class ServeEngine(EngineBase):
         self.state = jax.tree.map(reset, self.state, self._init_state,
                                   self._slot_axis)
 
+    def _complete(self, i, req, now):
+        req.complete_ts = now
+        self.completed.append(req)
+        self.active[i] = None
+        self._m_completed.inc()
+        self.trace.event("request_complete", uid=req.uid,
+                         tokens=len(req.output))
+        span = self._spans.pop(req.uid, None)
+        if span is not None:
+            span.end(tokens=len(req.output))
+
     def step(self) -> int:
-        """One engine tick = one decode step for the whole batch.
-        Returns the number of active slots."""
+        """One engine tick.  Returns the number of active slots.
+
+        Non-speculative: one decode step for the whole batch.  Speculative:
+        one draft→verify window (γ draft-tier steps + ONE batched full-tier
+        verify dispatch), clamped so no lane's window crosses ``max_len``."""
         t_tick = time.perf_counter()
         self._claim_slots()
-        n_active = sum(r is not None for r in self.active)
-        self._m_slots.set(n_active)
-        if not n_active:
+        lanes = [i for i, r in enumerate(self.active) if r is not None]
+        self._m_slots.set(len(lanes))
+        if not lanes:
             return 0
+        if self._spec is not None:
+            pos0 = np.asarray(self.state["pos"], np.int64)
+            g_eff = min(self._spec.gamma,
+                        self.cfg.max_len - 1
+                        - max(int(pos0[i]) for i in lanes))
+            if g_eff >= 1:
+                return self._spec_window(t_tick, lanes, pos0, g_eff)
+            # a lane is one token from max_len: fall back to a plain step
+        return self._plain_step(t_tick, lanes)
+
+    def _plain_step(self, t_tick, lanes) -> int:
         t0 = time.perf_counter()
         logits, self.state = self._step(self.params, self.state,
                                         jnp.asarray(self._next_tok))
         logits = np.asarray(logits[:, 0], np.float32)   # device sync
         step_dt = time.perf_counter() - t0
         now = time.monotonic()
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
+        for i in lanes:
+            req = self.active[i]
             self._fed[i] += 1
             if self._fed[i] < len(req.prompt):
                 # still prefilling: feed the next prompt token
                 self._next_tok[i, 0] = req.prompt[self._fed[i]]
                 self._m_prefill.inc()
                 continue
-            tok = int(np.argmax(logits[i]))
+            # the emitted token occupies sequence index _fed[i] (== pos)
+            tok = self.sampler.sample(logits[i], req.uid, self._fed[i])
             req.output.append(tok)
             self._next_tok[i, 0] = tok
             self._m_tokens.inc()
@@ -228,15 +290,96 @@ class ServeEngine(EngineBase):
                     (req.eos_id is not None and tok == req.eos_id) or
                     int(self.state["pos"][i]) >= self.cfg.max_len - 1)
             if done:
-                req.complete_ts = now
-                self.completed.append(req)
-                self.active[i] = None
-                self._m_completed.inc()
-                self.trace.event("request_complete", uid=req.uid,
-                                 tokens=len(req.output))
-                span = self._spans.pop(req.uid, None)
-                if span is not None:
-                    span.end(tokens=len(req.output))
+                self._complete(i, req, now)
+        self._m_slots.set(sum(r is not None for r in self.active))
+        self._m_tick.observe(time.perf_counter() - t_tick)
+        return sum(r is not None for r in self.active)
+
+    def _spec_window(self, t_tick, lanes, pos0, g_eff) -> int:
+        """One speculation window: γ_eff draft-tier steps propose tokens,
+        one batched full-tier multistep dispatch verifies every window
+        position, then each lane commits its accepted prefix + the
+        correcting/bonus token and rolls ``pos`` back to its last valid
+        input (stale draft KV beyond it is masked by attention and
+        overwritten by the next window)."""
+        t0 = time.perf_counter()
+        W = g_eff + 1
+        window = np.zeros((self.cfg.num_slots, W), np.int32)
+        window[:, 0] = self._next_tok[:, 0]
+        is_draft = np.zeros((self.cfg.num_slots, g_eff), bool)
+        d_state = self.state                    # self.state stays pre-draft
+        for j in range(g_eff):
+            d_logits, d_state = self._step(self._draft_params, d_state,
+                                           jnp.asarray(window[:, j:j + 1]))
+            d_logits = np.asarray(d_logits[:, 0], np.float32)
+            for i in lanes:
+                req = self.active[i]
+                fed = self._fed[i] + j + 1      # inputs fed through col j
+                if fed < len(req.prompt):
+                    window[i, j + 1] = req.prompt[fed]
+                else:
+                    # draft proposes with the SAME (rid, pos) key the
+                    # verifier will sample with — acceptance iff equal
+                    window[i, j + 1] = self.sampler.sample(
+                        d_logits[i], req.uid, int(pos0[i]) + j + 1)
+                    is_draft[i, j] = True
+        # ONE batched full-tier dispatch verifies the whole window from the
+        # pre-draft state (jax arrays are immutable — the draft steps above
+        # never touched self.state), rewriting every window position's KV
+        # with full-tier values.
+        f_logits, new_state = self._verify(self.params, self.state,
+                                           jnp.asarray(window))
+        f_logits = np.asarray(f_logits, np.float32)
+        window_dt = time.perf_counter() - t0
+        now = time.monotonic()
+        new_pos = pos0.copy()
+        drafted = accepted = committed = 0
+        for i in lanes:
+            req = self.active[i]
+            p, fed0 = int(pos0[i]), self._fed[i]
+            valid = W                   # window inputs this lane keeps
+            for j in range(W):
+                if fed0 + j + 1 < len(req.prompt):
+                    self._m_prefill.inc()
+                    if j == g_eff:      # window ends mid-prompt
+                        self._next_tok[i, 0] = req.prompt[fed0 + W]
+                    continue
+                tok = self.sampler.sample(f_logits[i, j], req.uid, p + j + 1)
+                if j < g_eff and is_draft[i, j]:
+                    drafted += 1
+                    accepted += int(window[i, j + 1]) == tok
+                req.output.append(tok)
+                committed += 1
+                self._m_tokens.inc()
+                if len(req.output) == 1:
+                    req.first_token_ts = now
+                    self._m_ttft.observe(now - req.submit_ts)
+                    self.trace.event("request_first_token", uid=req.uid)
+                done = (len(req.output) >= req.max_new_tokens or
+                        (req.eos_id is not None and tok == req.eos_id) or
+                        p + j + 1 >= self.cfg.max_len - 1)
+                if done:
+                    valid = j + 1
+                    self._complete(i, req, now)
+                    break
+                if j < g_eff and int(window[i, j + 1]) != tok:
+                    # first mismatch truncates the window; the committed
+                    # full-tier token opens the next one
+                    valid = j + 1
+                    self._next_tok[i, 0] = tok
+                    break
+                if j == g_eff:
+                    # every draft accepted: the bonus token rides along
+                    self._next_tok[i, 0] = tok
+            self._fed[i] += valid
+            new_pos[i] = p + valid
+        self.state = dict(new_state)
+        self.state["pos"] = jnp.asarray(new_pos, jnp.int32)
+        if committed:
+            per_tok = window_dt / committed
+            for _ in range(committed):
+                self._m_tok_lat.observe(per_tok)
+        self._spec_metrics.observe_window(drafted, accepted, committed)
         self._m_slots.set(sum(r is not None for r in self.active))
         self._m_tick.observe(time.perf_counter() - t_tick)
         return sum(r is not None for r in self.active)

@@ -15,7 +15,6 @@ the largest replicated dimension over 'data' (opt_state_specs).
 from __future__ import annotations
 
 import re
-import warnings
 from typing import Optional
 
 import jax
@@ -112,18 +111,13 @@ def _linear_kind_impl(path: str, *, attn_kv_replicated: bool = False) -> str:
     return "replicated"
 
 
-def linear_kind(path: str, *, attn_kv_replicated: bool = False) -> str:
-    """Classify a linear *module* path (no trailing leaf name) as
-    ``col`` | ``row`` | ``replicated`` using the shared rule table.
-
-    .. deprecated:: use :meth:`repro.sharding.plan.ShardingPlan.linear_kind`
-       — the plan carries the KV policy and per-node kind overrides.
-    """
-    warnings.warn(
-        "repro.sharding.partitioning.linear_kind is deprecated; use "
-        "ShardingPlan(attn_kv_replicated=...).linear_kind(path)",
-        DeprecationWarning, stacklevel=2)
-    return _linear_kind_impl(path, attn_kv_replicated=attn_kv_replicated)
+def linear_kind(path: str, **_kw) -> str:
+    """Removed — the classifier lives on the plan object."""
+    raise ValueError(
+        "repro.sharding.partitioning.linear_kind was removed (PR 8 "
+        "deprecation); use ShardingPlan(attn_kv_replicated=...)"
+        ".linear_kind(path) — the plan carries the KV policy and per-node "
+        "kind overrides")
 
 
 def _packed_spec(kind: str, extra: int) -> P:
@@ -267,18 +261,14 @@ def _param_specs_impl(params, *, attn_kv_replicated: bool = False,
         is_leaf=lambda x: isinstance(x, PackedWeight) or _is_legacy_packed(x))
 
 
-def param_specs(params, *, attn_kv_replicated: bool = False) -> dict:
-    """PartitionSpec pytree matching ``params``.
-
-    .. deprecated:: use :meth:`repro.sharding.plan.ShardingPlan.param_specs`
-       — the plan carries the KV policy, per-node kind overrides, and the
-       renumber policy in one serializable object.
-    """
-    warnings.warn(
-        "repro.sharding.partitioning.param_specs is deprecated; use "
-        "ShardingPlan(attn_kv_replicated=...).param_specs(params)",
-        DeprecationWarning, stacklevel=2)
-    return _param_specs_impl(params, attn_kv_replicated=attn_kv_replicated)
+def param_specs(params, **_kw) -> dict:
+    """Removed — spec derivation lives on the plan object."""
+    raise ValueError(
+        "repro.sharding.partitioning.param_specs was removed (PR 8 "
+        "deprecation); use ShardingPlan(attn_kv_replicated=...)"
+        ".param_specs(params) — the plan carries the KV policy, per-node "
+        "kind overrides, and the renumber policy in one serializable "
+        "object")
 
 
 def _base_ndim(path: str, nd: int) -> int:

@@ -1,0 +1,30 @@
+"""``repro.spec`` — self-speculative decoding from one packed tree.
+
+The uniquely-DeMM speculation trick: the draft model is the *same*
+:class:`~repro.core.sparsity.PackedWeight` buffers read at a sparser
+density tier (``tier_ne`` narrows the per-group address stream at trace
+time — no weight copy), the verifier is the full k-reconfigured tier, and
+a replay-safe coupled sampler makes the committed stream token-identical
+to non-speculative decoding at any temperature.  Enabled through
+``serve.make_engine(..., spec=SpecConfig(...))`` or
+``launch/serve.py --spec-draft N:M --spec-gamma G``.
+
+* :mod:`repro.spec.tiers`    — draft-tier derivation (buffer-aliasing view)
+* :mod:`repro.spec.sampling` — counter-based (request, position)-keyed RNG
+* :mod:`repro.spec.decode`   — draft→verify window, batched verify program
+"""
+
+from repro.spec.decode import SpecConfig, SpecMetrics, make_multistep
+from repro.spec.sampling import ReplaySafeSampler, position_noise
+from repro.spec.tiers import (
+    TierReport,
+    derive_draft_tier,
+    parse_tier,
+    tier_sort_tree,
+)
+
+__all__ = [
+    "SpecConfig", "SpecMetrics", "ReplaySafeSampler", "TierReport",
+    "derive_draft_tier", "make_multistep", "parse_tier", "position_noise",
+    "tier_sort_tree",
+]

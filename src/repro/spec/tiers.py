@@ -1,0 +1,104 @@
+"""Draft-tier derivation: a sparser view of a packed tree, zero weight copy.
+
+The inverse of the paper's §II-B k-reconfiguration.  ``reconfigure_k`` lets
+a DeMM(N, M, C, k) engine serve the *denser* kN:M pattern in k passes over
+one stored ``{value, col_idx}`` stream; a **draft tier** reads the *same*
+stream at a sparser pattern by consuming only the first ``tier_ne`` pairs
+per group.  Because ``tier_ne`` is static aux on
+:class:`~repro.core.sparsity.PackedWeight` (the traced children are
+untouched), the draft params tree aliases the full tier's buffers —
+``draft.values is full.values`` — and the narrowing happens at trace time
+inside kernel dispatch (``kernels/ops.demm_matmul_packed``).  One weight
+buffer, two density tiers: the self-speculative serving trick that fixed
+fine-grained engines (S2TA, FlexSA) cannot express.
+
+The prefix-read is exact magnitude pruning only if each group's pairs are
+ordered magnitude-descending; :func:`tier_sort_tree` establishes that
+invariant once per tree (full-tier compute is order-independent — both the
+one-hot scatter reference and the kernels' gather-accumulate sum over the
+Ne axis — so sorting never changes what the full tier computes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.sparsity import PackedWeight, tier_sort_packed
+
+
+def parse_tier(spec: str) -> Tuple[int, int]:
+    """``"8:128"`` -> ``(8, 128)`` — the draft pattern N:M."""
+    try:
+        n_s, m_s = spec.split(":")
+        n, m = int(n_s), int(m_s)
+    except ValueError:
+        raise ValueError(
+            f"draft tier must be 'N:M' (e.g. '8:128'), got {spec!r}")
+    if n < 1 or m < 1 or n > m:
+        raise ValueError(f"draft tier {spec!r}: need 1 <= N <= M")
+    return n, m
+
+
+def _is_pw(x) -> bool:
+    return isinstance(x, PackedWeight)
+
+
+def tier_sort_tree(params):
+    """Reorder every PackedWeight's per-group pairs magnitude-descending
+    (see :func:`~repro.core.sparsity.tier_sort_packed`).  Idempotent."""
+    return jax.tree.map(
+        lambda x: tier_sort_packed(x) if _is_pw(x) else x,
+        params, is_leaf=_is_pw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierReport:
+    """What the derivation pass did to a packed tree."""
+
+    narrowed: int = 0        # nodes retagged to the draft tier
+    full: int = 0            # k-reconfigurable nodes left at the full tier
+    other: int = 0           # non-PackedWeight-matmul leaves (untouched)
+
+    def __str__(self):
+        return (f"{self.narrowed} node(s) at the draft tier, "
+                f"{self.full} at the full tier, {self.other} dense")
+
+
+def derive_draft_tier(params, draft: str):
+    """Walk a packed tree and produce the draft-tier view.
+
+    Every k-reconfigurable :class:`PackedWeight` — one whose group size
+    matches the draft pattern's M and whose ``n_effective`` exceeds the
+    draft N — is retagged with ``tier_ne=N`` (a static-aux change only: the
+    returned tree's values/indices ARE the input tree's arrays).  Nodes the
+    draft pattern cannot narrow (different M, already at or below the draft
+    density, or plain dense arrays) fall back to the full tier unchanged.
+
+    Returns ``(draft_params, TierReport)``.  Raises if the pattern narrows
+    nothing — a draft identical to the full tier would verify itself.
+    """
+    n, m = parse_tier(draft)
+    counts = {"narrowed": 0, "full": 0, "other": 0}
+
+    def one(x):
+        if not _is_pw(x):
+            counts["other"] += 1
+            return x
+        if x.cfg.m == m and x.cfg.n_effective > n:
+            counts["narrowed"] += 1
+            return x.replace(tier_ne=n)
+        counts["full"] += 1
+        return x
+
+    out = jax.tree.map(one, params, is_leaf=_is_pw)
+    report = TierReport(**counts)
+    if report.narrowed == 0:
+        raise ValueError(
+            f"draft tier {draft!r} narrows no PackedWeight in this tree "
+            f"({report}); the packed pattern must share M with the draft "
+            f"and be denser than it (pack with e.g. --sparsity "
+            f"{2 * n}:{m})")
+    return out, report

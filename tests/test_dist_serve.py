@@ -171,11 +171,11 @@ class TestShardingPlan:
         assert hash(pol) == hash(pol.replace())
         assert pol.plan.tp == 2
 
-    def test_deprecated_shims_warn(self):
+    def test_removed_shims_raise(self):
         from repro.sharding import partitioning as part
-        with pytest.warns(DeprecationWarning):
-            assert part.linear_kind("mlp/down") == "row"
-        with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="ShardingPlan"):
+            part.linear_kind("mlp/down")
+        with pytest.raises(ValueError, match="ShardingPlan"):
             part.param_specs({"mlp": {"down": {"w": jnp.zeros((4, 8))}}})
 
     def test_tune_keys_carry_shard_geometry(self):

@@ -17,7 +17,8 @@ from repro.configs.base import get_arch
 from repro.models.families import build_model
 from repro.optim import adamw
 from repro.train.train_loop import make_train_step
-from repro.sharding.partitioning import param_specs, opt_state_specs, shardings_for
+from repro.sharding.partitioning import opt_state_specs, shardings_for
+from repro.sharding.plan import ShardingPlan
 from repro.sharding import context as shctx
 
 cfg = get_arch("stablelm_3b").reduced()
@@ -36,7 +37,7 @@ p_ref, _, m_ref = jax.jit(step)(params, opt, batch, 0)
 # distributed
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 ctx = shctx.make_context(mesh, num_kv_heads=cfg.num_kv_heads)
-pspecs = param_specs(params)
+pspecs = ShardingPlan().param_specs(params)
 pshard = shardings_for(mesh, pspecs)
 zspecs = opt_state_specs(pspecs, params, mesh.shape["data"])
 ospecs = adamw.AdamWState(step=P(), m=zspecs, v=zspecs, compression=None)
@@ -171,7 +172,8 @@ from repro.configs.base import get_arch
 from repro.models.families import build_model
 from repro.optim import adamw
 from repro.train.train_loop import make_train_step
-from repro.sharding.partitioning import param_specs, opt_state_specs, shardings_for
+from repro.sharding.partitioning import opt_state_specs, shardings_for
+from repro.sharding.plan import ShardingPlan
 from repro.sharding import context as shctx
 from repro.launch import hlo_analysis
 
@@ -180,7 +182,7 @@ model = build_model(cfg)
 pshapes = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 ctx = shctx.make_context(mesh, num_kv_heads=cfg.num_kv_heads)
-pspecs = param_specs(pshapes)
+pspecs = ShardingPlan().param_specs(pshapes)
 pshard = shardings_for(mesh, pspecs)
 opt_cfg = adamw.AdamWConfig()
 ostate = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), pshapes)

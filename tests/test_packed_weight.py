@@ -157,7 +157,7 @@ def test_pack_tree_emits_packed_weights_including_stacked():
 # ---------------------------------------------------------------------------
 
 def test_param_specs_structural_for_packed_weights():
-    from repro.sharding import partitioning as part
+    from repro.sharding.plan import ShardingPlan
 
     cfg = SparsityConfig(2, 16)
     def lin(key):
@@ -165,14 +165,14 @@ def test_param_specs_structural_for_packed_weights():
     from repro.launch.pack_tree import pack_tree
     tree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)},
                       "attn": {"wq": lin(2)}})
-    specs = part.param_specs(tree)
+    specs = ShardingPlan().param_specs(tree)
     assert isinstance(specs["mlp"]["gate"], PackedWeight)
     assert specs["mlp"]["gate"].values == P("model", None, None)    # col
     assert specs["mlp"]["down"].values == P(None, "model", None)    # row
     assert specs["attn"]["wq"].values == P("model", None, None)     # col
     # kv-replication classifies structurally too
     tree2 = pack_tree({"attn": {"wk": lin(3)}})
-    specs2 = part.param_specs(tree2, attn_kv_replicated=True)
+    specs2 = ShardingPlan(attn_kv_replicated=True).param_specs(tree2)
     assert specs2["attn"]["wk"].values == P(None, None, None)
 
 
@@ -204,7 +204,9 @@ def test_checkpoint_roundtrip_packed_model_different_mesh():
         template = pack_tree_shapes(model, pshapes)
         mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                     ("data", "model"))
-        shardings = part.shardings_for(mesh, part.param_specs(template))
+        from repro.sharding.plan import ShardingPlan
+        shardings = part.shardings_for(
+            mesh, ShardingPlan().param_specs(template))
         restored = ckpt.restore(template, d, 7, shardings=shardings)
 
     for a, b in zip(jax.tree_util.tree_leaves(packed),
@@ -257,9 +259,9 @@ def test_legacy_packed_dict_rejected_everywhere():
     from repro import tune
     with pytest.raises(ValueError, match="pack_tree"):
         tune.autotune_packed_tree({"mlp": {"gate": legacy}}, 4)
-    from repro.sharding import partitioning as part
+    from repro.sharding.plan import ShardingPlan
     with pytest.raises(ValueError, match="pack_tree"):
-        part.param_specs({"mlp": {"gate": legacy}})
+        ShardingPlan().param_specs({"mlp": {"gate": legacy}})
 
 
 def test_legacy_masked_metadata_rejected():
@@ -366,7 +368,7 @@ def test_block_matches_xwT_path_through_checkpoint():
 
 def test_block_param_specs_structural():
     from repro.launch.pack_tree import pack_tree
-    from repro.sharding import partitioning as part
+    from repro.sharding.plan import ShardingPlan
 
     cfg = SparsityConfig(2, 16)
     def lin(key):
@@ -375,7 +377,7 @@ def test_block_param_specs_structural():
     tree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)}},
                      layout="block")
     assert tree["mlp"]["gate"].layout == "block"
-    specs = part.param_specs(tree)
+    specs = ShardingPlan().param_specs(tree)
     # col-parallel shards the row-block axis of all three children
     assert specs["mlp"]["gate"].values == P("model", None, None, None)
     assert specs["mlp"]["gate"].active_groups == P("model", None)

@@ -239,20 +239,20 @@ def test_autotune_packed_tree_quant_nodes(tmp_path):
 def test_param_specs_shard_scales_alongside_values():
     from repro.launch.pack_tree import pack_tree
     from repro.models.layers import init_linear
-    from repro.sharding import partitioning as part
+    from repro.sharding.plan import ShardingPlan
 
     def lin(key):
         return init_linear(jax.random.PRNGKey(key), 64, 32, sparse=CFG)
     tree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)}},
                      quantize="int8")
-    specs = part.param_specs(tree)
+    specs = ShardingPlan().param_specs(tree)
     assert specs["mlp"]["gate"].values == P("model", None, None)   # col
     assert specs["mlp"]["gate"].scales == P("model")
     assert specs["mlp"]["down"].values == P(None, "model", None)   # row
     assert specs["mlp"]["down"].scales == P(None)                  # no G axis
     btree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)}},
                       layout="block", quantize="int8")
-    bspecs = part.param_specs(btree)
+    bspecs = ShardingPlan().param_specs(btree)
     assert bspecs["mlp"]["gate"].values == P("model", None, None, None)
     assert bspecs["mlp"]["gate"].scales == P("model", None, None)
     assert bspecs["mlp"]["down"].scales == P(None, None, None)
@@ -260,7 +260,7 @@ def test_param_specs_shard_scales_alongside_values():
     # it tiles the contraction dim exactly like the values' group axis
     gtree = pack_tree({"mlp": {"gate": lin(0), "down": lin(1)}},
                       quantize="int8", granularity="per_group")
-    gspecs = part.param_specs(gtree)
+    gspecs = ShardingPlan().param_specs(gtree)
     assert gspecs["mlp"]["gate"].scales == P("model", None)
     assert gspecs["mlp"]["down"].scales == P(None, "model")
 

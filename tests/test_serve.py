@@ -121,15 +121,13 @@ def test_eos_terminates(engine_setup):
     assert eng.completed[0].output == [first]
 
 
-def test_legacy_mode_backend_kwargs_warn(engine_setup):
-    """The mode=/backend= shim still works but is on the PR 4 removal
-    policy: one release of DeprecationWarning, then a ValueError."""
+def test_legacy_mode_backend_kwargs_removed(engine_setup):
+    """The mode=/backend= kwargs completed the PR 4 removal policy (one
+    release of DeprecationWarning in PR 8): now a clear ValueError."""
     cfg, model, params = engine_setup
-    with pytest.warns(DeprecationWarning, match="policy=ExecPolicy"):
-        eng = ServeEngine(model, params,
-                          ServeConfig(num_slots=1, max_len=32),
-                          mode="masked", backend="reference")
-    assert eng.policy.mode == "masked"
-    with pytest.warns(DeprecationWarning):
+    with pytest.raises(ValueError, match="policy=ExecPolicy"):
+        ServeEngine(model, params, ServeConfig(num_slots=1, max_len=32),
+                    mode="masked", backend="reference")
+    with pytest.raises(ValueError, match="policy=ExecPolicy"):
         ServeEngine(model, params, ServeConfig(num_slots=1, max_len=32),
                     backend="reference")

@@ -144,3 +144,96 @@ def test_property_mask_is_topk(seed):
         np.min(np.where(kept < 0, np.inf, kept), axis=-1)
         >= np.max(np.where(np.isinf(dropped), -np.inf, dropped), axis=-1)
     )
+
+
+# ---------------------------------------------------------------------------
+# k-reconfigured tiers on block / q8 / stacked-scan layouts (the draft-tier
+# correctness foundation, DESIGN.md §15 — only xwT was covered before)
+# ---------------------------------------------------------------------------
+
+def _topk_per_group(dense: np.ndarray, m: int, t: int) -> np.ndarray:
+    """Keep the magnitude-top-``t`` entries of every 1×m group."""
+    *lead, k = dense.shape
+    g = dense.reshape(*lead, k // m, m)
+    order = np.argsort(-np.abs(g), axis=-1, kind="stable")
+    mask = np.zeros_like(g, dtype=bool)
+    np.put_along_axis(mask, order[..., :t], True, axis=-1)
+    return np.where(mask, g, 0.0).reshape(dense.shape)
+
+
+def _check_tier_and_reconfig(pw, dense_pruned, t=4):
+    from repro.core.sparse_linear import _reconfigure
+    from repro.core.sparsity import narrow_tier, tier_sort_packed
+    from repro.kernels import ops
+
+    cfg = pw.cfg
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (3, pw.in_features)).astype(np.float32))
+    y_full = ops.demm_matmul_packed(x, pw, backend="reference")
+
+    # k-retag round-trip: kN:M <-> (N, M, k) views share buffers and output
+    split = _reconfigure(pw, SparsityConfig(cfg.n_effective // 2, cfg.m, 2))
+    assert split.values is pw.values and split.indices is pw.indices
+    back = _reconfigure(split, cfg)
+    assert back.cfg == cfg and back.values is pw.values
+    for view in (split, back):
+        np.testing.assert_allclose(
+            np.asarray(ops.demm_matmul_packed(x, view, backend="reference")),
+            np.asarray(y_full), rtol=1e-5, atol=1e-5)
+
+    # tier view: sort once, then the tier_ne prefix IS the magnitude-top-t
+    # sub-pattern — and sorting itself never changes full-tier results
+    srt = tier_sort_packed(pw)
+    np.testing.assert_allclose(np.asarray(srt.to_dense()),
+                               np.asarray(pw.to_dense()), rtol=1e-6)
+    draft = srt.replace(tier_ne=t)
+    assert draft.values is srt.values  # view, not copy
+    got = np.asarray(narrow_tier(draft).to_dense())
+    want = _topk_per_group(np.asarray(dense_pruned), cfg.m, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_reconfigured_tier_block_layout():
+    from repro.core.sparsity import LAYOUT_BLOCK, PackedWeight
+
+    rng = np.random.default_rng(7)
+    cfg = SparsityConfig(8, 16, 1)
+    w = jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32))
+    pw = PackedWeight.from_dense(w, cfg, layout=LAYOUT_BLOCK)
+    _check_tier_and_reconfig(pw, prune(w, cfg))
+
+
+def test_reconfigured_tier_q8_layout():
+    from repro.core.sparsity import PackedWeight
+    from repro.quant import quantize_packed
+
+    rng = np.random.default_rng(8)
+    cfg = SparsityConfig(8, 16, 1)
+    w = jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32))
+    q8 = quantize_packed(PackedWeight.from_dense(w, cfg))
+    assert q8.qdtype is not None
+    # the tier comparison target is the *dequantized* pruned weight: the
+    # per-row scale is constant along Ne, so raw int magnitude order is
+    # dequant magnitude order
+    _check_tier_and_reconfig(q8, q8.to_dense())
+
+
+def test_reconfigured_tier_stacked_scan():
+    """Layer-stacked (scan) weights: both packed layouts keep the tier and
+    k-retag semantics per layer."""
+    from repro.core.sparsity import narrow_tier, tier_sort_packed
+    from repro.launch.pack_tree import _pack_sparse_linear
+
+    rng = np.random.default_rng(9)
+    cfg = SparsityConfig(8, 16, 1)
+    w = jnp.asarray(rng.standard_normal((3, 8, 64)).astype(np.float32))
+    for layout in ("xwT", "block"):
+        pw = _pack_sparse_linear({"w": w}, cfg, layout=layout)
+        assert pw.stack_dims == (3,)
+        srt = tier_sort_packed(pw)
+        np.testing.assert_allclose(np.asarray(srt.to_dense()),
+                                   np.asarray(pw.to_dense()), rtol=1e-6)
+        got = np.asarray(narrow_tier(srt.replace(tier_ne=4)).to_dense())
+        want = np.stack([_topk_per_group(np.asarray(prune(w[i], cfg)),
+                                         cfg.m, 4) for i in range(3)])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,277 @@
+"""repro.spec tests: draft-tier views over one packed tree, replay-safe
+coupled sampling, and speculative-decode token identity on both engines
+(DESIGN.md §15)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.sparse_linear import ExecPolicy
+from repro.core.sparsity import PackedWeight, SparsityConfig
+from repro.launch.pack_tree import pack_tree
+from repro.models.families import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.serve import Request, ServeConfig, make_engine
+from repro.spec import (ReplaySafeSampler, SpecConfig, derive_draft_tier,
+                        parse_tier, position_noise, tier_sort_tree)
+from repro.spec.decode import guard_cache_kinds
+
+from helpers import run_with_devices
+
+# 8:16 pattern on every node -> a 4:16 draft tier narrows the k-reconfigured
+# weights (the arch default's per-node auto-clamp would leave most nodes
+# un-narrowable).
+DRAFT = "4:16"
+POLICY = ExecPolicy(mode="packed", backend="reference")
+
+
+@pytest.fixture(scope="module")
+def spec_setup():
+    cfg = dataclasses.replace(get_arch("stablelm_3b").reduced(),
+                              sparsity=SparsityConfig(8, 16, 1))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    packed = tier_sort_tree(pack_tree(params))
+    return cfg, model, packed
+
+
+def _submit(engine, vocab, n=4, max_new=8, seed=0):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        prompt = rng.integers(0, vocab, 5 + i % 3, dtype=np.int32)
+        engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=max_new,
+                              priority=i % 2))
+    engine.run_until_drained()
+    return {r.uid: r.output for r in engine.completed}
+
+
+def _pws(tree):
+    return [x for x in jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: isinstance(x, PackedWeight))[0]
+        if isinstance(x, PackedWeight)]
+
+
+# ---------------------------------------------------------------------------
+# Tier derivation
+# ---------------------------------------------------------------------------
+
+def test_parse_tier():
+    assert parse_tier("8:128") == (8, 128)
+    for bad in ("8", "0:16", "16:8", "a:b"):
+        with pytest.raises(ValueError):
+            parse_tier(bad)
+
+
+def test_draft_tier_aliases_full_buffers(spec_setup):
+    """ISSUE acceptance: the draft tier is a *view* — `draft.values is
+    full.values` — not a copy."""
+    _, _, packed = spec_setup
+    draft, report = derive_draft_tier(packed, DRAFT)
+    assert report.narrowed >= 1
+    narrowed = 0
+    for f, d in zip(_pws(packed), _pws(draft)):
+        assert d.values is f.values
+        assert d.indices is f.indices
+        if d.tier_ne is not None:
+            narrowed += 1
+            assert d.tier_ne == 4 and f.tier_ne is None
+            assert d.cfg == f.cfg  # retag happens at narrow time, not here
+    assert narrowed == report.narrowed
+
+
+def test_draft_tier_nothing_to_narrow_raises(spec_setup):
+    _, _, packed = spec_setup
+    with pytest.raises(ValueError, match="narrows no"):
+        derive_draft_tier(packed, "8:16")  # not sparser than the pack
+
+
+# ---------------------------------------------------------------------------
+# Replay-safe sampling
+# ---------------------------------------------------------------------------
+
+def test_position_noise_is_counter_keyed():
+    a = position_noise(seed=7, rid=3, pos=11, n=64)
+    b = position_noise(seed=7, rid=3, pos=11, n=64)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, position_noise(seed=7, rid=3, pos=12, n=64))
+    assert not np.array_equal(a, position_noise(seed=7, rid=4, pos=11, n=64))
+    assert not np.array_equal(a, position_noise(seed=8, rid=3, pos=11, n=64))
+
+
+def test_sampler_greedy_is_argmax():
+    s = ReplaySafeSampler(temperature=0.0, top_k=0, seed=0)
+    logits = np.random.default_rng(0).standard_normal(50).astype(np.float32)
+    assert s.sample(logits, rid=1, pos=2) == int(np.argmax(logits))
+
+
+def test_sampler_replays_and_respects_top_k():
+    s = ReplaySafeSampler(temperature=0.9, top_k=4, seed=1)
+    logits = np.random.default_rng(1).standard_normal(50).astype(np.float32)
+    allowed = set(np.argsort(-logits)[:4].tolist())
+    seen = set()
+    for pos in range(40):
+        tok = s.sample(logits, rid=5, pos=pos)
+        assert tok == s.sample(logits, rid=5, pos=pos)  # replay-exact
+        assert tok in allowed
+        seen.add(tok)
+    assert len(seen) > 1  # actually stochastic across positions
+
+
+# ---------------------------------------------------------------------------
+# Cache-kind guard
+# ---------------------------------------------------------------------------
+
+def test_guard_rejects_non_rollbackable_state():
+    cfg = get_arch("xlstm_125m").reduced()
+    model = build_model(cfg)
+    state = model.init_decode_state(batch=1, max_len=16)
+    with pytest.raises(NotImplementedError, match="roll back"):
+        guard_cache_kinds(state)
+
+
+# ---------------------------------------------------------------------------
+# Token identity: speculative == non-speculative, both engines
+# ---------------------------------------------------------------------------
+
+def _engines(model, packed, paged, temperature=0.0, top_k=0, seed=0,
+             spec=None, num_pages=None, max_len=64):
+    if paged:
+        from repro.paged import PagedServeConfig
+        cfg = PagedServeConfig(num_slots=2, max_len=max_len, page_size=4,
+                               num_pages=num_pages, temperature=temperature,
+                               top_k=top_k, seed=seed)
+    else:
+        cfg = ServeConfig(num_slots=2, max_len=max_len,
+                          temperature=temperature, top_k=top_k, seed=seed)
+    # fresh registry per engine: the default is process-global, and these
+    # tests read preempt/spec counters
+    return make_engine(model, packed, cfg, policy=POLICY, spec=spec,
+                       metrics=MetricsRegistry())
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_spec_greedy_token_identity(spec_setup, paged):
+    cfg, model, packed = spec_setup
+    ref = _submit(_engines(model, packed, paged), cfg.vocab_size)
+    eng = _engines(model, packed, paged, spec=SpecConfig(draft=DRAFT, gamma=3))
+    got = _submit(eng, cfg.vocab_size)
+    assert ref == got
+    sm = eng._spec_metrics
+    assert sm._verify_dispatches > 0
+    assert sm._committed_total / sm._verify_dispatches > 1.0
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_spec_sampled_token_identity(spec_setup, paged):
+    """Gumbel-max coupling: the committed stream matches non-spec at
+    temperature > 0 too, not just greedy."""
+    cfg, model, packed = spec_setup
+    kw = dict(temperature=0.8, top_k=8, seed=3)
+    ref = _submit(_engines(model, packed, paged, **kw), cfg.vocab_size)
+    got = _submit(_engines(model, packed, paged, spec=SpecConfig(
+        draft=DRAFT, gamma=3), **kw), cfg.vocab_size)
+    assert ref == got
+
+
+def test_spec_identity_across_engines(spec_setup):
+    """Dense non-spec, dense spec, paged spec: one token stream."""
+    cfg, model, packed = spec_setup
+    ref = _submit(_engines(model, packed, paged=False), cfg.vocab_size)
+    spec = SpecConfig(draft=DRAFT, gamma=4)
+    dense = _submit(_engines(model, packed, paged=False, spec=spec),
+                    cfg.vocab_size)
+    paged = _submit(_engines(model, packed, paged=True, spec=spec),
+                    cfg.vocab_size)
+    assert ref == dense == paged
+
+
+def test_spec_gamma_clamp_near_max_len(spec_setup):
+    """Windows shrink (and fall back to plain steps) as lanes approach
+    max_len; the stream must survive the clamp path."""
+    cfg, model, packed = spec_setup
+    ref = _submit(_engines(model, packed, paged=False, max_len=20),
+                  cfg.vocab_size, max_new=16)
+    got = _submit(_engines(model, packed, paged=False, max_len=20,
+                           spec=SpecConfig(draft=DRAFT, gamma=4)),
+                  cfg.vocab_size, max_new=16)
+    assert ref == got
+
+
+# ---------------------------------------------------------------------------
+# Preempt -> re-prefill -> resume replay (satellite: RNG replay)
+# ---------------------------------------------------------------------------
+
+def _preempts(engine):
+    rows = [c for c in engine.metrics.snapshot(meta=False)["counters"]
+            if c["name"] == "serve_preempt_total"]
+    return rows[0]["value"] if rows else 0
+
+
+@pytest.mark.parametrize("spec", [None, SpecConfig(draft=DRAFT, gamma=3)],
+                         ids=["plain", "spec"])
+def test_sampled_stream_survives_preemption(spec_setup, spec):
+    """A temperature>0 request preempted mid-generation under page pressure
+    resumes bit-identically: the Philox(seed, rid, pos) counter stream does
+    not depend on scheduling history."""
+    cfg, model, packed = spec_setup
+    kw = dict(paged=True, temperature=0.8, top_k=8, seed=5, max_len=48)
+    roomy = _engines(model, packed, num_pages=64, spec=spec, **kw)
+    ref = _submit(roomy, cfg.vocab_size, n=5, max_new=10, seed=5)
+
+    assert _preempts(roomy) == 0
+
+    tight = _engines(model, packed, num_pages=8, spec=spec, **kw)
+    got = _submit(tight, cfg.vocab_size, n=5, max_new=10, seed=5)
+    assert _preempts(tight) > 0, "arena never preempted; test is vacuous"
+    assert ref == got
+
+
+# ---------------------------------------------------------------------------
+# TP=2: draft tier shards with the full tier's plan (forced host devices)
+# ---------------------------------------------------------------------------
+
+_TP_SPEC = r"""
+import dataclasses, numpy as np, jax
+from repro.configs.base import get_arch
+from repro.core.sparsity import PackedWeight, SparsityConfig
+from repro.models.families import build_model
+from repro.launch.serve import run_serve
+from repro.sharding.plan import ShardingPlan
+
+cfg = dataclasses.replace(get_arch("stablelm_3b").reduced(),
+                          sparsity=SparsityConfig(8, 16, 1))
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+kw = dict(packed=True, requests=3, max_new=6, seed=0,
+          plan=ShardingPlan(tp=2))
+base = run_serve(model, params, cfg.vocab_size, **kw)
+ref = {r.uid: r.output for r in base.completed}
+sp = run_serve(model, params, cfg.vocab_size, spec_draft="4:16",
+               spec_gamma=3, **kw)
+got = {r.uid: r.output for r in sp.completed}
+assert ref == got, (ref, got)
+assert sp._spec_metrics.drafted.value > 0
+
+def pws(tree):
+    return [x for x in jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda y: isinstance(y, PackedWeight))[0]
+        if isinstance(x, PackedWeight)]
+
+sharded_narrowed = 0
+for f, d in zip(pws(sp.params), pws(sp._draft_params)):
+    assert d.values is f.values, "draft tier copied a sharded buffer"
+    if d.tier_ne is not None and f.shard_axis is not None:
+        sharded_narrowed += 1
+        per = [s.data.nbytes for s in d.values.addressable_shards]
+        assert len(per) == 2 and all(b < d.values.nbytes for b in per), per
+assert sharded_narrowed, "no narrowed node is TP-sharded; test is vacuous"
+print("TP_SPEC_OK", sharded_narrowed)
+"""
+
+
+def test_tp2_spec_token_identity_and_sharded_draft():
+    out = run_with_devices(_TP_SPEC, n_devices=2)
+    assert "TP_SPEC_OK" in out
