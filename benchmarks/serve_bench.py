@@ -168,6 +168,7 @@ def main(argv=None) -> int:
     from repro.configs.base import ARCH_IDS, get_arch
     from repro.models.families import build_model
     from repro.obs.metrics import MetricsRegistry, run_metadata
+    from repro.obs.slo import SLOConfig, slo_report
     from repro.paged import PagedServeConfig, PagedServeEngine, SchedConfig
     from repro.serve.serve_loop import ServeConfig, ServeEngine
 
@@ -224,6 +225,13 @@ def main(argv=None) -> int:
                          "factor of the packed non-spec baseline (leave "
                          "unset on compute-bound CPU hosts — see module "
                          "docstring)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="judge each leg's completed requests against this "
+                         "time-to-first-token deadline (repro.obs.slo; the "
+                         "per-leg report is embedded either way)")
+    ap.add_argument("--slo-e2e-ms", type=float, default=None,
+                    help="end-to-end latency deadline in ms for the per-leg "
+                         "SLO report")
     args = ap.parse_args(argv)
 
     trace_path = args.trace
@@ -268,8 +276,12 @@ def main(argv=None) -> int:
     pf_pairs = _requests(trace, args.seed, vocab, uid_offset=2 * _WARM_UID,
                          max_new=1)
     pf_dt, _, _ = replay(paged, [(0, r) for _, r in pf_pairs])
+    slo_cfg = SLOConfig(ttft_ms=args.slo_ttft_ms, e2e_ms=args.slo_e2e_ms)
     paged_stats = {
         **lat_stats(p_reqs),
+        # sketch-backed per-phase percentiles + goodput (+ pass/fail when
+        # --slo-* deadlines are set); extra keys the compare gate ignores
+        "slo_report": slo_report(p_reqs, slo_cfg),
         "tokens_per_sec": p_tokens / p_dt,
         "prefill_tokens_per_sec": prompt_tokens / pf_dt,
         "ticks": p_ticks,
@@ -294,6 +306,7 @@ def main(argv=None) -> int:
     lf_dt, _, _ = replay(legacy, [(0, r) for _, r in pf_pairs])
     legacy_stats = {
         **lat_stats(l_reqs),
+        "slo_report": slo_report(l_reqs, slo_cfg),
         "tokens_per_sec": l_tokens / l_dt,
         "prefill_tokens_per_sec": prompt_tokens / lf_dt,
         "ticks": l_ticks,
@@ -342,6 +355,7 @@ def main(argv=None) -> int:
         sm = spec_eng._spec_metrics
         spec_stats = {
             **lat_stats(s_reqs),
+            "slo_report": slo_report(s_reqs, slo_cfg),
             "draft": args.spec,
             "gamma": args.spec_gamma,
             "tokens_per_sec": s_tokens / s_dt,
@@ -387,6 +401,20 @@ def main(argv=None) -> int:
     print(f"  paged: {paged_stats['preempts']} preempts, peak occupancy "
           f"{paged_stats['peak_occupancy']:.2f}, "
           f"{paged_stats['prefill_dispatches']} prefill dispatches")
+    for name, s in (("paged", paged_stats), ("legacy", legacy_stats),
+                    *((("spec", spec_stats),) if spec_stats else ())):
+        rep = s["slo_report"]
+        wt = rep["goodput"]["wasted_tokens"]
+        line = (f"  {name:6s} goodput "
+                + (f"{rep['goodput']['ratio']:.3f}"
+                   if rep["goodput"]["ratio"] is not None else "n/a")
+                + f" (wasted: preempt {wt['preempt']}, spec_reject "
+                  f"{wt['spec_reject']})")
+        if "slo" in rep:
+            line += (f"   slo attainment "
+                     f"{rep['slo']['attainment']:.3f} "
+                     f"({rep['slo']['pass']}/{rep['completed']})")
+        print(line)
     print(f"  prefill speedup {speedup:.2f}x, token_identical="
           f"{token_identical}")
     if spec_stats:

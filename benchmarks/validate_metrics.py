@@ -16,7 +16,9 @@ labels) with value > 0; ``--require-histogram NAME`` demands count > 0 and
 internal consistency (sum(counts) == count, len(counts) == len(buckets)+1);
 ``--require-gauge NAME`` demands the family exists (gauges legitimately
 read 0 — e.g. ``serve_queue_depth`` after a drain — so only presence is
-checked).
+checked); ``--require-sketch NAME`` demands a quantile-sketch family
+(obs v2, DESIGN.md §16) with observations and internal consistency
+(``sum(bins) + zero_count == count``).
 
 The validator implements the JSON-Schema subset the checked-in schema uses
 (type, required, properties, additionalProperties-as-schema, items,
@@ -118,6 +120,23 @@ def check_histogram(snap: dict, name: str) -> list:
     return errors
 
 
+def check_sketch(snap: dict, name: str) -> list:
+    errors = []
+    entries = [s for s in snap.get("sketches", [])
+               if s.get("name") == name]
+    if not entries:
+        return [f"required sketch {name!r} is absent"]
+    for s in entries:
+        label = f"{name}{s.get('labels') or ''}"
+        total = sum(s.get("bins", {}).values()) + s.get("zero_count", 0)
+        if total != s.get("count"):
+            errors.append(f"{label}: sum(bins)+zero_count={total} != "
+                          f"count={s.get('count')}")
+    if not any(s.get("count", 0) > 0 for s in entries):
+        errors.append(f"required sketch {name!r} has no observations")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("snapshot", help="metrics JSON written by --metrics-out")
@@ -135,6 +154,11 @@ def main(argv=None) -> int:
                     help="fail unless this histogram family has "
                          "observations and is internally consistent "
                          "(repeatable)")
+    ap.add_argument("--require-sketch", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless this quantile-sketch family has "
+                         "observations and is internally consistent "
+                         "(sum(bins)+zero_count == count; repeatable)")
     args = ap.parse_args(argv)
 
     with open(args.snapshot) as f:
@@ -149,18 +173,21 @@ def main(argv=None) -> int:
         errors += check_gauge(snap, name)
     for name in args.require_histogram:
         errors += check_histogram(snap, name)
+    for name in args.require_sketch:
+        errors += check_sketch(snap, name)
 
     if errors:
         print(f"{args.snapshot}: INVALID ({len(errors)} errors)")
         for e in errors:
             print(f"  {e}")
         return 1
+    required = (args.require_counter + args.require_gauge
+                + args.require_histogram + args.require_sketch)
     print(f"{args.snapshot}: ok ({len(snap.get('counters', []))} counters, "
           f"{len(snap.get('gauges', []))} gauges, "
-          f"{len(snap.get('histograms', []))} histograms"
-          + (f"; required: {', '.join(args.require_counter + args.require_gauge + args.require_histogram)}"
-             if args.require_counter or args.require_gauge
-             or args.require_histogram else "")
+          f"{len(snap.get('histograms', []))} histograms, "
+          f"{len(snap.get('sketches', []))} sketches"
+          + (f"; required: {', '.join(required)}" if required else "")
           + ")")
     return 0
 

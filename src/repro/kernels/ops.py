@@ -61,13 +61,19 @@ BACKENDS = ("reference", "pallas", "pallas_interpret", "auto")
 
 
 def _count_dispatch(op: str, backend: str):
-    """Trace-time dispatch audit counter (op, resolved backend)."""
+    """Trace-time dispatch audit: counter plus a ``kernel_dispatch`` trace
+    event.  Fires while jax traces the enclosing jit, i.e. inside whatever
+    :mod:`repro.obs.context` the caller entered — under a serving engine
+    the event inherits the dispatching request's ``trace_id``, correlating
+    kernel compiles to the request that triggered them (DESIGN.md §16)."""
     from repro import obs
 
-    obs.metrics().counter(
+    m = obs.metrics()
+    m.counter(
         "kernel_dispatch_total",
         help="DeMM matmul dispatches per (registry op, resolved backend)",
         op=op, backend=backend).inc()
+    m.trace.event("kernel_dispatch", op=op, backend=backend)
 
 
 def demm_matmul_packed(x: jax.Array, pw: PackedWeight,

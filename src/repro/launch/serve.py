@@ -89,7 +89,7 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
               prefill_chunk: int = 32, scheduler: str = "fcfs",
               trace_replay=None, plan=None, replicas: int = 1,
               spec_draft=None, spec_gamma: int = 4,
-              temperature: float = 0.0, top_k: int = 0):
+              temperature: float = 0.0, top_k: int = 0, recorder=None):
     """Pack (optionally) and serve ``requests`` random prompts; returns the
     drained engine.  The reusable core of ``main()`` — the end-to-end
     examples call this directly with their own trained params.
@@ -140,7 +140,7 @@ def run_serve(model, params, vocab_size: int, *, packed: bool = True,
                                 seed=seed)
     engine = make_engine(model, params, serve_cfg, policy=policy,
                          autotune=autotune and packed, replicas=replicas,
-                         spec=spec)
+                         spec=spec, recorder=recorder)
     if trace_replay:
         rows = _load_trace(trace_replay)
         t0 = time.time()
@@ -284,6 +284,29 @@ def main():
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture a jax profiler trace of the serve run "
                          "into this directory (TensorBoard/perfetto)")
+    ap.add_argument("--slo-report", action="store_true",
+                    help="print the SLO / goodput / phase-latency report "
+                         "after the drain (repro.obs.slo, DESIGN.md §16); "
+                         "implied by --slo-ttft-ms/--slo-e2e-ms")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="time-to-first-token deadline in ms; completed "
+                         "requests are judged pass/fail against it")
+    ap.add_argument("--slo-e2e-ms", type=float, default=None,
+                    help="end-to-end (submit -> complete) deadline in ms")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="attach a flight recorder (repro.obs, DESIGN.md "
+                         "§16): bounded per-subsystem event rings + a "
+                         "per-engine tick stall watchdog; stalls, crashes, "
+                         "and SIGTERM dump rings+metrics+metadata here")
+    ap.add_argument("--watchdog-threshold", type=float, default=8.0,
+                    help="--flight-dir: declare a stall when tick silence "
+                         "exceeds this multiple of the EWMA tick interval "
+                         "(floored at 1s)")
+    ap.add_argument("--force-stall", action="store_true",
+                    help="--flight-dir: after the drain, stop beating the "
+                         "watchdog and wait for it to trip (CI leg that "
+                         "proves the stall->dump path); exits nonzero if no "
+                         "dump appears")
     args = ap.parse_args()
     if args.autotune:
         args.backend = "auto"
@@ -322,8 +345,16 @@ def main():
     if args.spec_draft and not args.packed:
         ap.error("--spec-draft requires --packed (the draft tier is a view "
                  "of the packed weight buffers)")
+    if args.force_stall and not args.flight_dir:
+        ap.error("--force-stall needs --flight-dir (there is no watchdog "
+                 "to trip without a flight recorder)")
 
     log = obs.get_logger("launch.serve")
+    recorder = None
+    if args.flight_dir:
+        recorder = obs.FlightRecorder(
+            args.flight_dir, watchdog_threshold=args.watchdog_threshold)
+        recorder.install_signal_handlers()
     cfg = get_arch(args.arch)
     if not args.full:
         cfg = cfg.reduced()
@@ -370,7 +401,9 @@ def main():
 
     profile_ctx = (obs.profile(args.profile_dir) if args.profile_dir
                    else contextlib.nullcontext())
-    with profile_ctx:
+    guard_ctx = (recorder.guard() if recorder is not None
+                 else contextlib.nullcontext())
+    with profile_ctx, guard_ctx:
         engine = run_serve(model, params, cfg.vocab_size, packed=args.packed,
                            layout=args.layout, quantize=args.quantize,
                            granularity=args.quantize_granularity,
@@ -386,7 +419,8 @@ def main():
                            plan=plan, replicas=args.replicas,
                            spec_draft=args.spec_draft,
                            spec_gamma=args.spec_gamma,
-                           temperature=args.temperature, top_k=args.top_k)
+                           temperature=args.temperature, top_k=args.top_k,
+                           recorder=recorder)
     dt = engine.drain_seconds
     mode = "packed" if args.packed else "masked"
     total_tokens = sum(len(r.output) for r in engine.completed)
@@ -412,6 +446,14 @@ def main():
     for r in engine.completed[:3]:
         log.info(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
                  f"-> {r.output[:8]}")
+    slo_cfg = obs.SLOConfig(ttft_ms=args.slo_ttft_ms, e2e_ms=args.slo_e2e_ms)
+    if args.slo_report or slo_cfg.enabled():
+        import json as _json
+        # the DP router's merged facade has no instruments of its own;
+        # publish verdicts only on a real registry
+        reg = engine.metrics if hasattr(engine.metrics, "gauge") else None
+        report = obs.slo_report(engine.completed, slo_cfg, metrics=reg)
+        log.info("slo report\n" + _json.dumps(report, indent=2))
     if args.metrics_out:
         engine.metrics.write(args.metrics_out)
         log.info("wrote metrics snapshot", path=args.metrics_out)
@@ -420,6 +462,17 @@ def main():
         log.info("wrote event trace", path=args.trace_out)
     if args.profile_dir:
         log.info("wrote profiler trace", dir=args.profile_dir)
+    if recorder is not None:
+        if args.force_stall:
+            # CI leg: the drain is done, nothing beats the watchdogs any
+            # more — the stall must be detected and dumped on its own
+            log.info("forcing a stall", flight_dir=args.flight_dir)
+            if not recorder.wait_for_dump(timeout=30.0):
+                recorder.close()
+                raise SystemExit(
+                    "--force-stall: no flight dump appeared within 30s")
+            log.info("flight dump written", dumps=recorder.dumps)
+        recorder.close()
 
 
 if __name__ == "__main__":

@@ -114,6 +114,14 @@ def main():
                          "histograms, restart counters, kernel-dispatch "
                          "counters) here after training; .prom/.txt => "
                          "Prometheus text, else JSON")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="attach a flight recorder (repro.obs, DESIGN.md "
+                         "§16): a train_step stall watchdog + bounded event "
+                         "rings, dumped here on stall/crash/SIGTERM")
+    ap.add_argument("--watchdog-threshold", type=float, default=8.0,
+                    help="--flight-dir: declare a stall when step silence "
+                         "exceeds this multiple of the EWMA step interval "
+                         "(floored at 1s)")
     args = ap.parse_args()
     if args.qat and not args.sparsify:
         ap.error("--qat rides the sparsify training path; add --sparsify")
@@ -167,11 +175,16 @@ def main():
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch)
     rng = np.random.default_rng(0)
+    recorder = None
+    if args.flight_dir:
+        recorder = obs.FlightRecorder(
+            args.flight_dir, watchdog_threshold=args.watchdog_threshold)
+        recorder.install_signal_handlers()
     sup = TrainingSupervisor(
         SupervisorConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
         step_fn, data_cfg,
         to_batch=lambda b: add_frontend_inputs(cfg, b, rng),
-        extra_state=trainer)
+        extra_state=trainer, recorder=recorder)
 
     t0 = time.time()
     # keyed by step (not append-ordered) so supervisor restarts replaying
@@ -226,6 +239,8 @@ def main():
     if args.metrics_out:
         sup.metrics.write(args.metrics_out)
         log.info("wrote metrics snapshot", path=args.metrics_out)
+    if recorder is not None:
+        recorder.close()
 
 
 if __name__ == "__main__":

@@ -13,6 +13,20 @@ The observability layer every perf claim in this repo is judged against
   names DeMM kernels in profiler traces, ``profile(trace_dir)`` dumps a
   jax profiler trace directory for TensorBoard/perfetto.
 
+Observability v2 (DESIGN.md §16) adds:
+
+* :mod:`repro.obs.context`  — contextvar trace context (``trace_id`` /
+  span ids / attribution labels) created per request at ``submit()`` and
+  spliced into every trace event emitted on the request's behalf.
+* :mod:`repro.obs.sketch`   — :class:`QuantileSketch`, a DDSketch-style
+  mergeable relative-error quantile sketch; fourth registry family kind.
+* :mod:`repro.obs.slo`      — per-request phase attribution, goodput /
+  wasted-token accounting, SLO pass-fail reports.
+* :mod:`repro.obs.recorder` — :class:`FlightRecorder` (bounded
+  per-subsystem event rings + stall watchdogs + crash/signal dumps).
+* :mod:`repro.obs.export`   — JSONL trace → Perfetto/Chrome trace JSON
+  (``python -m repro.obs.export``).
+
 The process-wide default registry (:func:`metrics`) is what the kernel
 dispatch counters, the tuning-cache hit/miss counters, the serve engine, and
 the training supervisor share by default, so ``launch/serve.py
@@ -24,6 +38,8 @@ subsystems.  Tests (and anything wanting isolation) construct their own
 
 from __future__ import annotations
 
+from repro.obs.context import TraceContext, current_context, new_trace_id
+from repro.obs.context import use as use_context
 from repro.obs.log import LEVELS, StructuredLogger, get_logger
 from repro.obs.metrics import (
     DEFAULT_TIME_BUCKETS,
@@ -36,13 +52,19 @@ from repro.obs.metrics import (
     set_default_registry,
 )
 from repro.obs.profile import annotate, profile, profiling_active
+from repro.obs.recorder import FlightRecorder, Watchdog
+from repro.obs.sketch import QuantileSketch
+from repro.obs.slo import SLOConfig, phase_sketches, request_phases, slo_report
 from repro.obs.trace import EventTrace, Span
 
 __all__ = [
-    "DEFAULT_TIME_BUCKETS", "Counter", "EventTrace", "Gauge", "Histogram",
-    "LEVELS", "MetricsRegistry", "Span", "StructuredLogger", "annotate",
-    "default_registry", "event", "get_logger", "metrics", "profile",
-    "profiling_active", "run_metadata", "set_default_registry",
+    "DEFAULT_TIME_BUCKETS", "Counter", "EventTrace", "FlightRecorder",
+    "Gauge", "Histogram", "LEVELS", "MetricsRegistry", "QuantileSketch",
+    "SLOConfig", "Span", "StructuredLogger", "TraceContext", "Watchdog",
+    "annotate", "current_context", "default_registry", "event",
+    "get_logger", "metrics", "new_trace_id", "phase_sketches", "profile",
+    "profiling_active", "request_phases", "run_metadata",
+    "set_default_registry", "slo_report", "use_context",
 ]
 
 

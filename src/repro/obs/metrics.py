@@ -22,6 +22,16 @@ Histograms use *fixed* buckets declared at first registration (default:
 waits, and train steps all land mid-range).  Fixed buckets keep ``observe``
 O(log buckets) with no allocation and make snapshots mergeable across
 processes.
+
+The fourth family kind is the quantile **sketch**
+(:class:`~repro.obs.sketch.QuantileSketch`, DDSketch-style): registered via
+``registry.sketch(name, alpha=..., **labels)``, exported in the snapshot
+under ``"sketches"`` and as Prometheus summary-style quantile series, and
+*exactly* mergeable — the DP replica router merges per-replica sketches
+into combined percentiles identical to a single sketch over all
+observations.  Serving latency percentiles (TTFT / per-token decode / e2e)
+report through sketches; the fixed-bucket histogram instruments stay for
+dashboard compatibility and cheap rate queries.
 """
 
 from __future__ import annotations
@@ -33,6 +43,8 @@ import time
 from bisect import bisect_left
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.sketch import DEFAULT_ALPHA, QuantileSketch
+
 # Exponential-ish time buckets in seconds: 100µs .. 60s.  Decode ticks on
 # CPU land around 1-100ms, train steps 10ms-10s, queue waits anywhere.
 DEFAULT_TIME_BUCKETS = (
@@ -40,7 +52,10 @@ DEFAULT_TIME_BUCKETS = (
     0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
 )
 
-_KINDS = ("counter", "gauge", "histogram")
+_KINDS = ("counter", "gauge", "histogram", "sketch")
+
+# Quantiles rendered in the Prometheus exposition for sketch families.
+SKETCH_QUANTILES = (0.5, 0.9, 0.99)
 
 
 def run_metadata() -> dict:
@@ -133,13 +148,15 @@ class Histogram:
 
 
 class _Family:
-    __slots__ = ("kind", "help", "buckets", "children")
+    __slots__ = ("kind", "help", "buckets", "alpha", "children")
 
     def __init__(self, kind: str, help_text: str,
-                 buckets: Optional[Tuple[float, ...]]):
+                 buckets: Optional[Tuple[float, ...]],
+                 alpha: Optional[float] = None):
         self.kind = kind
         self.help = help_text
         self.buckets = buckets
+        self.alpha = alpha
         self.children: Dict[Tuple[Tuple[str, str], ...], object] = {}
 
 
@@ -176,18 +193,25 @@ class MetricsRegistry:
             from repro.obs.trace import EventTrace
             trace = EventTrace()
         self.trace = trace
+        # Surface ring overflow as a counter — registered lazily on the
+        # first actual drop so registries that never overflow stay clean.
+        if getattr(trace, "on_drop", None) is None:
+            trace.on_drop = lambda n: self.counter(
+                "trace_events_dropped_total",
+                help="trace events evicted from the bounded ring").inc(n)
 
     # -- registration / lookup ----------------------------------------------
 
     def _get(self, kind: str, name: str, help_text: str,
              labels: Dict[str, str],
-             buckets: Optional[Sequence[float]] = None):
+             buckets: Optional[Sequence[float]] = None,
+             alpha: Optional[float] = None):
         lk = tuple(sorted((str(k), str(v)) for k, v in labels.items()))
         with self._lock:
             fam = self._families.get(name)
             if fam is None:
                 fam = _Family(kind, help_text,
-                              tuple(buckets) if buckets else None)
+                              tuple(buckets) if buckets else None, alpha)
                 self._families[name] = fam
             elif fam.kind != kind:
                 raise ValueError(
@@ -199,6 +223,9 @@ class MetricsRegistry:
                     child = Counter(self._lock)
                 elif kind == "gauge":
                     child = Gauge(self._lock)
+                elif kind == "sketch":
+                    child = QuantileSketch(self._lock,
+                                           alpha=fam.alpha or DEFAULT_ALPHA)
                 else:
                     child = Histogram(self._lock,
                                       fam.buckets or DEFAULT_TIME_BUCKETS)
@@ -218,6 +245,14 @@ class MetricsRegistry:
         calls reuse the family's fixed buckets (snapshots stay mergeable)."""
         return self._get("histogram", name, help, labels, buckets)
 
+    def sketch(self, name: str, help: str = "",
+               alpha: Optional[float] = None, **labels) -> QuantileSketch:
+        """A mergeable quantile sketch (DDSketch-style; see
+        :mod:`repro.obs.sketch`).  ``alpha`` (relative-error bound) is
+        honored on first registration of ``name``; later calls reuse the
+        family's alpha so per-replica sketches stay exactly mergeable."""
+        return self._get("sketch", name, help, labels, alpha=alpha)
+
     def reset(self, *, clear_trace: bool = True):
         """Drop every family (tests / fresh measurement windows)."""
         with self._lock:
@@ -228,7 +263,7 @@ class MetricsRegistry:
     # -- exporters ----------------------------------------------------------
 
     def snapshot(self, *, meta: bool = True) -> dict:
-        counters, gauges, hists = [], [], []
+        counters, gauges, hists, sketches = [], [], [], []
         with self._lock:
             for name in sorted(self._families):
                 fam = self._families[name]
@@ -239,13 +274,16 @@ class MetricsRegistry:
                         counters.append({**entry, "value": child.value})
                     elif fam.kind == "gauge":
                         gauges.append({**entry, "value": child.value})
+                    elif fam.kind == "sketch":
+                        sketches.append({**entry, **child.to_entry()})
                     else:
                         hists.append({**entry,
                                       "buckets": list(child.buckets),
                                       "counts": list(child.counts),
                                       "sum": child.sum,
                                       "count": child.count})
-        out = {"counters": counters, "gauges": gauges, "histograms": hists}
+        out = {"counters": counters, "gauges": gauges, "histograms": hists,
+               "sketches": sketches}
         if meta:
             out["meta"] = run_metadata()
         return out
@@ -258,13 +296,26 @@ class MetricsRegistry:
                 fam = self._families[name]
                 if fam.help:
                     lines.append(f"# HELP {name} {fam.help}")
-                lines.append(f"# TYPE {name} {fam.kind}")
+                # sketches render as Prometheus summaries (quantile series)
+                kind = "summary" if fam.kind == "sketch" else fam.kind
+                lines.append(f"# TYPE {name} {kind}")
                 for lk in sorted(fam.children):
                     child = fam.children[lk]
                     labels = dict(lk)
                     ls = _label_str(labels)
                     if fam.kind in ("counter", "gauge"):
                         lines.append(f"{name}{ls} {child.value:g}")
+                        continue
+                    if fam.kind == "sketch":
+                        for q in SKETCH_QUANTILES:
+                            v = child.quantile(q)
+                            if v is not None:
+                                lines.append(
+                                    f"{name}"
+                                    f"{_label_str(labels, {'quantile': f'{q:g}'})}"
+                                    f" {v:g}")
+                        lines.append(f"{name}_sum{ls} {child.sum:g}")
+                        lines.append(f"{name}_count{ls} {child.count}")
                         continue
                     cum = child.cumulative()
                     for b, c in zip(child.buckets, cum):

@@ -14,7 +14,17 @@ Timestamps come from ``time.monotonic()`` so orderings and durations are
 immune to wall-clock steps; ``wall`` is carried for cross-host correlation
 only.  The ring is bounded (default 64k events) so a long-running server
 cannot grow without limit — attach a file sink (``EventTrace(path=...)`` or
-``set_sink``) to keep everything.
+``set_sink``) to keep everything.  Overflow is *counted*, not silent:
+``trace.dropped`` tracks evicted events, an ``on_drop`` callback lets the
+owning registry surface it as ``trace_events_dropped_total``, and
+:meth:`EventTrace.write` prepends a ``_trace_header`` line whenever events
+were lost so offline consumers know the file is a suffix.
+
+Every event additionally splices the active request's
+:class:`~repro.obs.context.TraceContext` (``trace_id`` / ``span_id`` /
+attribution labels) unless the caller passed an explicit ``trace_id`` —
+that one hook is how kernel-dispatch, autotune, and tune-cache events get
+correlated to the serving request that triggered them.
 """
 
 from __future__ import annotations
@@ -24,7 +34,17 @@ import os
 import threading
 import time
 from collections import deque
-from typing import Iterator, List, Optional
+from typing import Callable, Iterator, List, Optional
+
+
+def _context_attrs(attrs: dict) -> dict:
+    """Attrs contributed by the ambient TraceContext (empty if none or if
+    the caller already attributed the event explicitly)."""
+    if "trace_id" in attrs:
+        return {}
+    from repro.obs import context as _context
+    ctx = _context.current()
+    return ctx.attrs() if ctx is not None else {}
 
 
 class Span:
@@ -40,7 +60,7 @@ class Span:
     def __init__(self, trace: "EventTrace", name: str, attrs: dict):
         self._trace = trace
         self.name = name
-        self.attrs = attrs
+        self.attrs = {**_context_attrs(attrs), **attrs}
         self.t0 = time.monotonic()
         self.wall0 = time.time()
         self.ended = False
@@ -75,6 +95,14 @@ class EventTrace:
         self._lock = threading.Lock()
         self._events: deque = deque(maxlen=max_events)
         self._file = None
+        self.dropped = 0
+        # called as on_drop(n) after ring eviction; the owning registry uses
+        # it to bump trace_events_dropped_total (lazily — no counter family
+        # exists until loss actually happens)
+        self.on_drop: Optional[Callable[[int], None]] = None
+        # called as tap(rec) on every emit; the flight recorder uses it to
+        # route events into per-subsystem rings
+        self.tap: Optional[Callable[[dict], None]] = None
         if path:
             self.set_sink(path)
 
@@ -82,14 +110,23 @@ class EventTrace:
 
     def _emit(self, rec: dict):
         with self._lock:
+            evicting = (self._events.maxlen is not None
+                        and len(self._events) == self._events.maxlen)
+            if evicting:
+                self.dropped += 1
             self._events.append(rec)
             if self._file is not None:
                 self._file.write(json.dumps(rec, default=str) + "\n")
                 self._file.flush()
+            on_drop, tap = self.on_drop, self.tap
+        if evicting and on_drop is not None:
+            on_drop(1)
+        if tap is not None:
+            tap(rec)
 
     def event(self, name: str, **attrs) -> dict:
         rec = {"name": name, "ts": time.monotonic(), "wall": time.time(),
-               **attrs}
+               **_context_attrs(attrs), **attrs}
         self._emit(rec)
         return rec
 
@@ -109,6 +146,7 @@ class EventTrace:
     def clear(self):
         with self._lock:
             self._events.clear()
+            self.dropped = 0
 
     def set_sink(self, path: Optional[str]):
         """Stream every subsequent event to ``path`` as JSON lines (append);
@@ -125,13 +163,23 @@ class EventTrace:
 
     def write(self, path: str) -> int:
         """Dump the buffered events to ``path`` as JSONL; returns #events.
-        (Events already streamed by a sink are not deduplicated — use one
-        mechanism or the other per file.)"""
-        events = self.events
+        If the ring overflowed, a ``_trace_header`` line records how many
+        events were dropped (oldest-first), so the dump is marked as a
+        suffix rather than a complete history.  (Events already streamed by
+        a sink are not deduplicated — use one mechanism or the other per
+        file.)"""
+        with self._lock:
+            events = list(self._events)
+            dropped = self.dropped
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
         with open(path, "w") as f:
+            if dropped:
+                f.write(json.dumps({"name": "_trace_header",
+                                    "dropped": dropped,
+                                    "events": len(events),
+                                    "wall": time.time()}) + "\n")
             for rec in events:
                 f.write(json.dumps(rec, default=str) + "\n")
         return len(events)

@@ -77,7 +77,7 @@ class PagedServeEngine(EngineBase):
     """
 
     def __init__(self, model, params, cfg: PagedServeConfig, *, policy=None,
-                 autotune=False, metrics=None, spec=None):
+                 autotune=False, metrics=None, spec=None, recorder=None):
         from repro.core.sparse_linear import resolve_policy
         from repro.spec.sampling import ReplaySafeSampler
 
@@ -171,7 +171,24 @@ class PagedServeEngine(EngineBase):
         self._m_tps = m.gauge(
             "serve_tokens_per_second",
             help="decode throughput of the last run_until_drained window")
+        # goodput accounting: tokens whose KV a preemption evicted — the
+        # resume re-ingests them, so they are work done twice
+        self._m_wasted_preempt = m.counter(
+            "serve_wasted_tokens_total",
+            help="tokens of work the engine re-did or discarded, by cause",
+            cause="preempt")
+        # sketch-backed latency percentiles (mergeable across DP replicas)
+        self._sk_ttft = m.sketch(
+            "serve_ttft_seconds_sketch",
+            help="submit -> first token (quantile sketch)")
+        self._sk_tok = m.sketch(
+            "serve_decode_token_seconds_sketch",
+            help="per-generated-token decode latency (quantile sketch)")
+        self._sk_e2e = m.sketch(
+            "serve_e2e_seconds_sketch",
+            help="submit -> completion (quantile sketch)")
         self._m_pages_free.set(self.kv.pages_free)
+        self._setup_recorder(recorder)
         # -- speculative decoding (DESIGN.md §15) ---------------------------
         self._spec = spec
         if spec is not None:
@@ -215,12 +232,15 @@ class PagedServeEngine(EngineBase):
                 f"--max-pages or --page-size")
         req.output = []
         req.submit_ts = time.monotonic()
+        ctx = self._request_context(req)   # mints req.trace_id
         self.sched.submit(req)
         self._m_submitted.inc()
         self._m_queue_depth.set(len(self.sched))
-        self._spans[req.uid] = self.trace.span("request", uid=req.uid)
-        self.trace.event("request_submit", uid=req.uid,
-                         prompt_len=len(req.prompt), priority=req.priority)
+        with obs.use_context(ctx):
+            self._spans[req.uid] = self.trace.span("request", uid=req.uid)
+            self.trace.event("request_submit", uid=req.uid,
+                             prompt_len=len(req.prompt),
+                             priority=req.priority)
 
     # -- device-control sync ------------------------------------------------
 
@@ -262,11 +282,26 @@ class PagedServeEngine(EngineBase):
         req.claim_ts = now
         self.sched.stage[req.uid] = Stage.SCHEDULED
         self.trace.event("request_schedule", uid=req.uid, slot=slot,
-                         resume_tokens=len(req.output))
+                         resume_tokens=len(req.output),
+                         trace_id=req.trace_id)
+        if req.preempts > 0:
+            # a preempt-resume: the whole work buffer is a re-ingest
+            self.trace.event("request_resume", uid=req.uid, slot=slot,
+                             resume_tokens=len(work),
+                             trace_id=req.trace_id)
 
     def _preempt(self, slot: int):
         req = self.active[slot]
         freed = self.kv.release(slot)
+        # every token already ingested into the evicted pages is work the
+        # resume must redo — charge it to the preempt waste cause now,
+        # while the ingest depth is still known
+        evicted_tokens = int(self._pos[slot])
+        req.preempts += 1
+        req.preempt_ts = time.monotonic()
+        if evicted_tokens > 0:
+            req.wasted_prefill_tokens += evicted_tokens
+            self._m_wasted_preempt.inc(evicted_tokens)
         self.active[slot] = None
         self._work[slot] = None
         self._decode_mask[slot] = False
@@ -277,7 +312,9 @@ class PagedServeEngine(EngineBase):
         self._m_queue_depth.set(len(self.sched))
         self._page_gauges()
         self.trace.event("request_preempt", uid=req.uid, slot=slot,
-                         pages_freed=freed, tokens_done=len(req.output))
+                         pages_freed=freed, tokens_done=len(req.output),
+                         tokens_evicted=evicted_tokens,
+                         trace_id=req.trace_id)
 
     def _complete(self, slot: int, req: Request, now: float):
         req.complete_ts = now
@@ -288,11 +325,13 @@ class PagedServeEngine(EngineBase):
         self._decode_mask[slot] = False
         self._pos[slot] = 0
         self._m_completed.inc()
+        self._sk_e2e.observe(now - req.submit_ts)
         self._page_gauges()
         self.sched.stage[req.uid] = Stage.COMPLETE
         self.trace.event("request_complete", uid=req.uid,
                          tokens=len(req.output),
-                         preempts=self.sched.preempts_of[req.uid])
+                         preempts=self.sched.preempts_of[req.uid],
+                         trace_id=req.trace_id)
         span = self._spans.pop(req.uid, None)
         if span is not None:
             span.end(tokens=len(req.output))
@@ -342,10 +381,17 @@ class PagedServeEngine(EngineBase):
         req.output.append(tok)
         self._next_tok[slot, 0] = tok
         self._m_tokens.inc()
+        if req.preempt_ts is not None:
+            # the eviction round trip (requeue -> re-claim -> re-prefill)
+            # ends here; attribute it for the slo phase breakdown
+            req.preempt_overhead_s += now - req.preempt_ts
+            req.preempt_ts = None
         if len(req.output) == 1:
             req.first_token_ts = now
             self._m_ttft.observe(now - req.submit_ts)
-            self.trace.event("request_first_token", uid=req.uid)
+            self._sk_ttft.observe(now - req.submit_ts)
+            self.trace.event("request_first_token", uid=req.uid,
+                             trace_id=req.trace_id)
         if (len(req.output) >= req.max_new_tokens or
                 (req.eos_id is not None and tok == req.eos_id)):
             self._complete(slot, req, now)
@@ -368,13 +414,20 @@ class PagedServeEngine(EngineBase):
                 if self._fed[i] == 0:
                     self.sched.stage[req.uid] = Stage.PREFILL
                     self.trace.event("request_prefill", uid=req.uid, slot=i,
+                                     trace_id=req.trace_id,
                                      tokens=len(self._work[i]),
                                      chunks=self.prefill.num_chunks(
                                          len(self._work[i])))
                 self._sync_control()
                 was = self._fed[i]
-                logits, self.state, fed = self._prefill_step(
-                    self.params, self.state, self._work[i], was, i)
+                # chunk dispatch under the owning request's context: the
+                # prefill_chunk event (and any compile-time kernel_dispatch
+                # events) carry its trace_id
+                with obs.use_context(self._request_context(req)):
+                    logits, self.state, fed = self._prefill_step(
+                        self.params, self.state, self._work[i], was, i)
+                    self.trace.event("prefill_chunk", uid=req.uid, slot=i,
+                                     fed_from=was, fed_to=fed)
                 self._fed[i] = fed
                 self._pos[i] = fed
                 self.kv.note_tokens(i, fed)
@@ -419,8 +472,13 @@ class PagedServeEngine(EngineBase):
             return 0
         self._sync_control()
         t0 = time.perf_counter()
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(np.array(self._next_tok)))
+        first = next(i for i in range(self.cfg.num_slots)
+                     if self._decode_mask[i])
+        # batched dispatch: attributed to the first decode-ready lane
+        with obs.use_context(self._request_context(self.active[first])):
+            logits, self.state = self._decode(
+                self.params, self.state,
+                jnp.asarray(np.array(self._next_tok)))
         logits = np.asarray(logits[:, 0], np.float32)   # device sync
         step_dt = time.perf_counter() - t0
         self._m_disp_decode.inc()
@@ -438,6 +496,7 @@ class PagedServeEngine(EngineBase):
             self._next_tok[i, 0] = tok
             self._m_tokens.inc()
             self._m_tok_lat.observe(step_dt)
+            self._sk_tok.observe(step_dt)
             if (len(req.output) >= req.max_new_tokens or
                     (req.eos_id is not None and tok == req.eos_id) or
                     int(self._pos[i]) >= self.cfg.max_len - 1):
@@ -464,16 +523,20 @@ class PagedServeEngine(EngineBase):
         window = np.zeros((self.cfg.num_slots, W), np.int32)
         window[:, 0] = self._next_tok[:, 0]
         d_state = self.state                # self.state stays pre-draft
+        window_ctx = self._request_context(self.active[lanes[0]])
         for j in range(g_eff):
-            d_logits, d_state = self._decode(self._draft_params, d_state,
-                                             jnp.asarray(window[:, j:j + 1]))
+            with obs.use_context(window_ctx):
+                d_logits, d_state = self._decode(
+                    self._draft_params, d_state,
+                    jnp.asarray(window[:, j:j + 1]))
             d_logits = np.asarray(d_logits[:, 0], np.float32)
             self._m_disp_draft.inc()
             for i in lanes:
                 window[i, j + 1] = self.sampler.sample(
                     d_logits[i], self.active[i].uid, int(pos0[i]) + j + 1)
-        f_logits, new_state = self._verify(self.params, self.state,
-                                           jnp.asarray(window))
+        with obs.use_context(window_ctx):
+            f_logits, new_state = self._verify(self.params, self.state,
+                                               jnp.asarray(window))
         f_logits = np.asarray(f_logits, np.float32)
         self._m_disp_verify.inc()
         self.state = new_state
@@ -485,13 +548,17 @@ class PagedServeEngine(EngineBase):
             p = int(pos0[i])
             valid = W                   # window inputs this lane keeps
             finished = False
+            lane_accepted = lane_committed = 0
             for j in range(W):
                 tok = self.sampler.sample(f_logits[i, j], req.uid, p + j + 1)
                 if j < g_eff:
                     drafted += 1
-                    accepted += int(window[i, j + 1]) == tok
+                    ok = int(window[i, j + 1]) == tok
+                    accepted += ok
+                    lane_accepted += ok
                 req.output.append(tok)
                 committed += 1
+                lane_committed += 1
                 self._m_tokens.inc()
                 if (len(req.output) >= req.max_new_tokens or
                         (req.eos_id is not None and tok == req.eos_id) or
@@ -511,10 +578,23 @@ class PagedServeEngine(EngineBase):
                 self._pos[i] = p + valid
                 self.kv.note_tokens(i, p + valid)
                 self.kv.trim(i, p + valid)
+            # every draft lane proposed g_eff tokens; the uncommitted ones
+            # (incl. drafts past a truncation point) are discarded work
+            lane_rejected = g_eff - lane_accepted
+            if lane_rejected > 0:
+                req.rejected_draft_tokens += lane_rejected
+                self._spec_metrics.observe_wasted(lane_rejected)
+            if lane_committed:
+                self.trace.event("spec_commit", uid=req.uid,
+                                 trace_id=req.trace_id,
+                                 committed=lane_committed,
+                                 accepted=lane_accepted,
+                                 rejected=lane_rejected)
         if committed:
             per_tok = window_dt / committed
             for _ in range(committed):
                 self._m_tok_lat.observe(per_tok)
+                self._sk_tok.observe(per_tok)
         self._spec_metrics.observe_window(drafted, accepted, committed)
         self._page_gauges()
         return len(lanes)
@@ -525,6 +605,7 @@ class PagedServeEngine(EngineBase):
         """One engine tick (admit → prefill → decode).  Returns the number
         of occupied slots after the tick."""
         t_tick = time.perf_counter()
+        self._beat()
         self.tick_count += 1
         self._admit()
         self._run_prefill()

@@ -31,7 +31,7 @@ __all__ = [
 
 def make_engine(model, params, config, *, plan=None, policy=None,
                 autotune: bool = False, metrics=None, replicas: int = 1,
-                spec=None):
+                spec=None, recorder=None):
     """Build a serving engine for ``config``.
 
     * ``config`` — :class:`ServeConfig` selects the dense-cache
@@ -50,6 +50,9 @@ def make_engine(model, params, config, *, plan=None, policy=None,
       drafts with the sparser-tier view of the same packed buffers and
       verifies in batched full-tier dispatches (DESIGN.md §15).  Requires
       a packed params tree whose pattern the draft tier can narrow.
+    * ``recorder`` — optional :class:`~repro.obs.FlightRecorder`: each
+      engine taps its trace into the recorder's rings and beats a stall
+      watchdog once per tick (DESIGN.md §16).
     """
     from repro.core.sparse_linear import resolve_policy
 
@@ -68,10 +71,12 @@ def make_engine(model, params, config, *, plan=None, policy=None,
         if type_name == "PagedServeConfig":
             from repro.paged import PagedServeEngine
             return PagedServeEngine(model, params, config, policy=policy,
-                                    autotune=autotune, metrics=m, spec=spec)
+                                    autotune=autotune, metrics=m, spec=spec,
+                                    recorder=recorder)
         if isinstance(config, ServeConfig):
             return ServeEngine(model, params, config, policy=policy,
-                               autotune=autotune, metrics=m, spec=spec)
+                               autotune=autotune, metrics=m, spec=spec,
+                               recorder=recorder)
         raise TypeError(
             f"make_engine: unknown config type {type(config).__name__!r} "
             "(expected ServeConfig or PagedServeConfig)")

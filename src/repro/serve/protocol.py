@@ -44,11 +44,20 @@ class EngineBase:
     Subclasses must set ``self.model`` before calling :meth:`_setup_plan`
     (the plan reads the arch's head counts off ``model.cfg``) and implement
     ``submit`` / ``step`` / ``run_until_drained``.
+
+    Observability v2 plumbing lives here too: per-engine trace attribution
+    labels (``replica`` — set by the DP router via :meth:`set_replica` —
+    plus ``tp_shard``/``pp_stage`` extents from the plan), per-request
+    :class:`~repro.obs.context.TraceContext` roots, and optional
+    flight-recorder attachment (:meth:`_setup_recorder`).
     """
 
     plan = None          # ShardingPlan from policy.plan (or None)
     mesh = None          # the plan's Mesh (None on a single device)
     _shctx = None        # ShardingContext installed around compiled steps
+    replica_id = None    # set by ReplicaRouter on DP replicas
+    _recorder = None     # FlightRecorder (launch --flight-dir)
+    _watchdog = None     # stall watchdog beaten once per step()
 
     # -- protocol aliases ---------------------------------------------------
 
@@ -59,6 +68,56 @@ class EngineBase:
     def drain(self, max_ticks: int = 10000) -> int:
         """Protocol alias for :meth:`run_until_drained`."""
         return self.run_until_drained(max_ticks)
+
+    # -- trace attribution (DESIGN.md §16) ----------------------------------
+
+    def set_replica(self, i: int):
+        """Stamp this engine as DP replica ``i`` — every subsequent trace
+        context (and so every event) carries ``replica=i``."""
+        self.replica_id = int(i)
+        if self._watchdog is not None:
+            # recorder attached before the router stamped us: rename so
+            # flight dumps distinguish the per-replica tick watchdogs
+            self._watchdog.name = f"serve_tick_r{self.replica_id}"
+
+    def _trace_labels(self) -> dict:
+        """Topology labels attached to this engine's trace contexts.  The
+        engine runs the whole tp×pp extent of its plan (shards live inside
+        one process), so labels record extents, not per-device ranks."""
+        out = {}
+        if self.replica_id is not None:
+            out["replica"] = str(self.replica_id)
+        if self.plan is not None:
+            if self.plan.tp > 1:
+                out["tp_shard"] = f"0:{self.plan.tp}"
+            if self.plan.pp > 1:
+                out["pp_stage"] = f"0:{self.plan.pp}"
+        return out
+
+    def _request_context(self, req):
+        """The request's root TraceContext (creating ``req.trace_id`` on
+        first use); entered around every dispatch done on its behalf."""
+        from repro.obs.context import TraceContext, new_trace_id
+        if getattr(req, "trace_id", None) is None:
+            req.trace_id = new_trace_id()
+        return TraceContext(req.trace_id, span_id=req.trace_id,
+                            labels=tuple(sorted(
+                                self._trace_labels().items())))
+
+    def _setup_recorder(self, recorder):
+        """Attach a FlightRecorder: tap this engine's trace into its rings
+        and register a per-engine tick watchdog (beaten by ``step()``)."""
+        self._recorder = recorder
+        if recorder is None:
+            return
+        recorder.attach_trace(self.trace)
+        name = "serve_tick" if self.replica_id is None \
+            else f"serve_tick_r{self.replica_id}"
+        self._watchdog = recorder.watchdog(name)
+
+    def _beat(self):
+        if self._watchdog is not None:
+            self._watchdog.beat()
 
     # -- plan plumbing ------------------------------------------------------
 

@@ -53,6 +53,19 @@ class _MergedMetrics:
                 h.counts = list(e["counts"])
                 h.sum = e["sum"]
                 h.count = e["count"]
+            for e in snap.get("sketches", ()):
+                from repro.obs.sketch import QuantileSketch
+                part = QuantileSketch.from_entry(e)
+                # per-replica labeled copy ...
+                sk = out.sketch(e["name"], alpha=part.alpha,
+                                **{**e["labels"], **extra_labels})
+                sk.merge(part)
+                # ... plus the exact bucket-wise merge into the combined
+                # (replica-less) instrument: its percentiles equal a single
+                # sketch that saw every replica's observations
+                if "replica" in extra_labels:
+                    out.sketch(e["name"], alpha=part.alpha,
+                               **e["labels"]).merge(part)
 
         for i, eng in enumerate(self._router.replicas):
             copy_from(eng.metrics, {"replica": str(i)})
@@ -87,6 +100,11 @@ class ReplicaRouter(EngineBase):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
         self.replicas = list(replicas)
+        # stamp each engine with its replica id so every trace context it
+        # mints (and so every event) carries replica=<i>
+        for i, eng in enumerate(self.replicas):
+            if hasattr(eng, "set_replica"):
+                eng.set_replica(i)
         self._rr = 0
         self._registry = MetricsRegistry()
         self.metrics = _MergedMetrics(self)

@@ -64,6 +64,15 @@ class Request:
     claim_ts: Optional[float] = None
     first_token_ts: Optional[float] = None
     complete_ts: Optional[float] = None
+    # -- observability v2 (DESIGN.md §16) -----------------------------------
+    # correlates every trace event emitted on this request's behalf
+    trace_id: Optional[str] = None
+    # waste / phase attribution (repro.obs.slo):
+    preempts: int = 0                 # times evicted by the paged scheduler
+    wasted_prefill_tokens: int = 0    # tokens re-ingested after preemption
+    rejected_draft_tokens: int = 0    # draft proposals the verifier threw away
+    preempt_overhead_s: float = 0.0   # evict -> resumed-re-prefill round trips
+    preempt_ts: Optional[float] = None   # open preemption episode start
 
 
 @dataclasses.dataclass
@@ -79,7 +88,7 @@ class ServeConfig:
 class ServeEngine(EngineBase):
     def __init__(self, model, params, cfg: ServeConfig, *, policy=None,
                  mode=None, backend=None, autotune=False, metrics=None,
-                 spec=None):
+                 spec=None, recorder=None):
         from repro.core.sparse_linear import resolve_policy
         from repro.spec.sampling import ReplaySafeSampler
 
@@ -177,6 +186,18 @@ class ServeEngine(EngineBase):
         self._m_tps = m.gauge(
             "serve_tokens_per_second",
             help="decode throughput of the last run_until_drained window")
+        # sketch-backed latency percentiles (mergeable across DP replicas;
+        # the fixed-bucket histograms above stay for rate/dashboard queries)
+        self._sk_ttft = m.sketch(
+            "serve_ttft_seconds_sketch",
+            help="submit -> first token (quantile sketch)")
+        self._sk_tok = m.sketch(
+            "serve_decode_token_seconds_sketch",
+            help="per-generated-token decode latency (quantile sketch)")
+        self._sk_e2e = m.sketch(
+            "serve_e2e_seconds_sketch",
+            help="submit -> completion (quantile sketch)")
+        self._setup_recorder(recorder)
         # -- speculative decoding (DESIGN.md §15) ---------------------------
         self._spec = spec
         if spec is not None:
@@ -194,11 +215,13 @@ class ServeEngine(EngineBase):
     def submit(self, req: Request):
         req.output = []
         req.submit_ts = time.monotonic()
+        ctx = self._request_context(req)   # mints req.trace_id
         self.queue.append(req)
         self._m_submitted.inc()
-        self._spans[req.uid] = self.trace.span("request", uid=req.uid)
-        self.trace.event("request_submit", uid=req.uid,
-                         prompt_len=len(req.prompt))
+        with obs.use_context(ctx):
+            self._spans[req.uid] = self.trace.span("request", uid=req.uid)
+            self.trace.event("request_submit", uid=req.uid,
+                             prompt_len=len(req.prompt))
 
     def _claim_slots(self):
         for i in range(self.cfg.num_slots):
@@ -210,7 +233,8 @@ class ServeEngine(EngineBase):
                 self._next_tok[i, 0] = req.prompt[0]
                 req.claim_ts = time.monotonic()
                 self._m_queue_wait.observe(req.claim_ts - req.submit_ts)
-                self.trace.event("request_claim", uid=req.uid, slot=i)
+                self.trace.event("request_claim", uid=req.uid, slot=i,
+                                 trace_id=req.trace_id)
 
     def _reset_slot(self, i):
         """Restore slot ``i``'s state region from the initial template.
@@ -233,8 +257,9 @@ class ServeEngine(EngineBase):
         self.completed.append(req)
         self.active[i] = None
         self._m_completed.inc()
+        self._sk_e2e.observe(now - req.submit_ts)
         self.trace.event("request_complete", uid=req.uid,
-                         tokens=len(req.output))
+                         tokens=len(req.output), trace_id=req.trace_id)
         span = self._spans.pop(req.uid, None)
         if span is not None:
             span.end(tokens=len(req.output))
@@ -246,6 +271,7 @@ class ServeEngine(EngineBase):
         one draft→verify window (γ draft-tier steps + ONE batched full-tier
         verify dispatch), clamped so no lane's window crosses ``max_len``."""
         t_tick = time.perf_counter()
+        self._beat()
         self._claim_slots()
         lanes = [i for i, r in enumerate(self.active) if r is not None]
         self._m_slots.set(len(lanes))
@@ -263,8 +289,11 @@ class ServeEngine(EngineBase):
 
     def _plain_step(self, t_tick, lanes) -> int:
         t0 = time.perf_counter()
-        logits, self.state = self._step(self.params, self.state,
-                                        jnp.asarray(self._next_tok))
+        # batched dispatch: attributed to the first active lane's request
+        # (any compile-time kernel_dispatch events inherit its trace_id)
+        with obs.use_context(self._request_context(self.active[lanes[0]])):
+            logits, self.state = self._step(self.params, self.state,
+                                            jnp.asarray(self._next_tok))
         logits = np.asarray(logits[:, 0], np.float32)   # device sync
         step_dt = time.perf_counter() - t0
         now = time.monotonic()
@@ -282,10 +311,13 @@ class ServeEngine(EngineBase):
             self._next_tok[i, 0] = tok
             self._m_tokens.inc()
             self._m_tok_lat.observe(step_dt)
+            self._sk_tok.observe(step_dt)
             if len(req.output) == 1:
                 req.first_token_ts = now
                 self._m_ttft.observe(now - req.submit_ts)
-                self.trace.event("request_first_token", uid=req.uid)
+                self._sk_ttft.observe(now - req.submit_ts)
+                self.trace.event("request_first_token", uid=req.uid,
+                                 trace_id=req.trace_id)
             done = (len(req.output) >= req.max_new_tokens or
                     (req.eos_id is not None and tok == req.eos_id) or
                     int(self.state["pos"][i]) >= self.cfg.max_len - 1)
@@ -308,9 +340,12 @@ class ServeEngine(EngineBase):
         window[:, 0] = self._next_tok[:, 0]
         is_draft = np.zeros((self.cfg.num_slots, g_eff), bool)
         d_state = self.state                    # self.state stays pre-draft
+        window_ctx = self._request_context(self.active[lanes[0]])
         for j in range(g_eff):
-            d_logits, d_state = self._step(self._draft_params, d_state,
-                                           jnp.asarray(window[:, j:j + 1]))
+            with obs.use_context(window_ctx):
+                d_logits, d_state = self._step(
+                    self._draft_params, d_state,
+                    jnp.asarray(window[:, j:j + 1]))
             d_logits = np.asarray(d_logits[:, 0], np.float32)
             for i in lanes:
                 req = self.active[i]
@@ -327,8 +362,9 @@ class ServeEngine(EngineBase):
         # pre-draft state (jax arrays are immutable — the draft steps above
         # never touched self.state), rewriting every window position's KV
         # with full-tier values.
-        f_logits, new_state = self._verify(self.params, self.state,
-                                           jnp.asarray(window))
+        with obs.use_context(window_ctx):
+            f_logits, new_state = self._verify(self.params, self.state,
+                                               jnp.asarray(window))
         f_logits = np.asarray(f_logits, np.float32)
         window_dt = time.perf_counter() - t0
         now = time.monotonic()
@@ -338,6 +374,7 @@ class ServeEngine(EngineBase):
             req = self.active[i]
             p, fed0 = int(pos0[i]), self._fed[i]
             valid = W                   # window inputs this lane keeps
+            lane_accepted = lane_committed = 0
             for j in range(W):
                 if fed0 + j + 1 < len(req.prompt):
                     self._m_prefill.inc()
@@ -347,14 +384,19 @@ class ServeEngine(EngineBase):
                 tok = self.sampler.sample(f_logits[i, j], req.uid, p + j + 1)
                 if j < g_eff and is_draft[i, j]:
                     drafted += 1
-                    accepted += int(window[i, j + 1]) == tok
+                    ok = int(window[i, j + 1]) == tok
+                    accepted += ok
+                    lane_accepted += ok
                 req.output.append(tok)
                 committed += 1
+                lane_committed += 1
                 self._m_tokens.inc()
                 if len(req.output) == 1:
                     req.first_token_ts = now
                     self._m_ttft.observe(now - req.submit_ts)
-                    self.trace.event("request_first_token", uid=req.uid)
+                    self._sk_ttft.observe(now - req.submit_ts)
+                    self.trace.event("request_first_token", uid=req.uid,
+                                     trace_id=req.trace_id)
                 done = (len(req.output) >= req.max_new_tokens or
                         (req.eos_id is not None and tok == req.eos_id) or
                         p + j + 1 >= self.cfg.max_len - 1)
@@ -373,12 +415,26 @@ class ServeEngine(EngineBase):
                     self._next_tok[i, 0] = tok
             self._fed[i] += valid
             new_pos[i] = p + valid
+            # lane-level waste: every drafted-but-uncommitted proposal
+            # (including drafts past a truncation point, whose draft-step
+            # work is discarded unexamined)
+            lane_rejected = int(is_draft[i].sum()) - lane_accepted
+            if lane_rejected > 0:
+                req.rejected_draft_tokens += lane_rejected
+                self._spec_metrics.observe_wasted(lane_rejected)
+            if lane_committed:
+                self.trace.event("spec_commit", uid=req.uid,
+                                 trace_id=req.trace_id,
+                                 committed=lane_committed,
+                                 accepted=lane_accepted,
+                                 rejected=lane_rejected)
         self.state = dict(new_state)
         self.state["pos"] = jnp.asarray(new_pos, jnp.int32)
         if committed:
             per_tok = window_dt / committed
             for _ in range(committed):
                 self._m_tok_lat.observe(per_tok)
+                self._sk_tok.observe(per_tok)
         self._spec_metrics.observe_window(drafted, accepted, committed)
         self._m_slots.set(sum(r is not None for r in self.active))
         self._m_tick.observe(time.perf_counter() - t_tick)

@@ -139,8 +139,20 @@ class SpecMetrics:
             "spec_tokens_per_dispatch",
             help="committed tokens per full-tier (verify) dispatch, "
                  "running mean")
+        # goodput accounting (repro.obs.slo): every drafted-but-uncommitted
+        # proposal is draft-tier work thrown away.  Distinct from
+        # spec_rejected_tokens_total, which counts only *examined* drafts —
+        # drafts past a window truncation point are wasted too.
+        self.wasted = m.counter(
+            "serve_wasted_tokens_total",
+            help="tokens of work the engine re-did or discarded, by cause",
+            cause="spec_reject")
         self._committed_total = 0
         self._verify_dispatches = 0
+
+    def observe_wasted(self, n: int):
+        """Account ``n`` draft proposals discarded without commit."""
+        self.wasted.inc(n)
 
     def observe_window(self, drafted: int, accepted: int, committed: int):
         """Account one speculation window (one verify dispatch)."""

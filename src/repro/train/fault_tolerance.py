@@ -47,13 +47,19 @@ class TrainingSupervisor:
 
     def __init__(self, cfg: SupervisorConfig, train_step: Callable,
                  data_cfg: DataConfig, to_batch: Optional[Callable] = None,
-                 extra_state=None, metrics=None):
+                 extra_state=None, metrics=None, recorder=None):
         """``extra_state`` (optional) is any object with an
         ``extra_state() -> pytree`` / ``load_extra_state(pytree)`` pair
         (e.g. ``sparsetrain.SparseTrainer``): its tree is saved under the
         checkpoint's ``extra`` key and pushed back on restore, so stateful
         schedules (pruning masks, QAT observers) survive restarts with the
-        same bitwise-replay guarantee as params."""
+        same bitwise-replay guarantee as params.
+
+        ``recorder`` (optional :class:`~repro.obs.FlightRecorder`,
+        DESIGN.md §16): the supervisor taps its trace into the recorder's
+        rings, beats a ``train_step`` stall watchdog once per step, and
+        dumps flight data when the run dies (restart budget exhausted or an
+        unexpected exception)."""
         self.cfg = cfg
         self.train_step = train_step
         self.data_cfg = data_cfg
@@ -79,6 +85,11 @@ class TrainingSupervisor:
             help="checkpoint restore duration")
         self._m_ckpt_saves = m.counter(
             "train_checkpoint_saves_total", help="checkpoints written")
+        self._recorder = recorder
+        self._watchdog = None
+        if recorder is not None:
+            recorder.attach_trace(m.trace)
+            self._watchdog = recorder.watchdog("train_step")
 
     def _save(self, state, step):
         t0 = time.perf_counter()
@@ -122,6 +133,8 @@ class TrainingSupervisor:
         metrics = None
         while step < num_steps:
             try:
+                if self._watchdog is not None:
+                    self._watchdog.beat()
                 if failure_injector is not None:
                     failure_injector(step)
                 t0 = time.perf_counter()
@@ -138,11 +151,18 @@ class TrainingSupervisor:
                 self._m_failures.inc()
                 self.restarts += 1
                 if self.restarts > self.cfg.max_restarts:
+                    if self._recorder is not None:
+                        self._recorder.dump("crash-restart-budget")
                     raise
                 self._m_restarts.inc()
                 self.metrics.trace.event("restart", step=step,
                                          reason=str(e)[:200])
                 state, step = self._restore(state)
+            except BaseException:
+                # unexpected failure: capture the flight rings before dying
+                if self._recorder is not None:
+                    self._recorder.dump("crash-train")
+                raise
         if self.pending_save is not None:
             self.pending_save.result()
             self.pending_save = None

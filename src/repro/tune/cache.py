@@ -198,12 +198,20 @@ class TuneCache:
         misses = _counter("tune_cache_misses_total",
                           "resolve() fell back to a fresh heuristic default",
                           op=p.op)
+        from repro import obs
+
         hit = self.get(p)
         if hit is not None:
             hits.inc()
+            # resolve() runs at jit-trace time, i.e. inside the dispatching
+            # request's obs context — the event inherits its trace_id
+            obs.metrics().trace.event("tune_cache_resolve", op=p.op,
+                                      outcome="hit", backend=hit.backend)
             return hit
         misses.inc()
         cfg = heuristic_default(p)
+        obs.metrics().trace.event("tune_cache_resolve", op=p.op,
+                                  outcome="miss", backend=cfg.backend)
         # memoize the heuristic so repeated traces skip the registry walk,
         # but never persist it: a later autotune run should win.
         with self._lock:

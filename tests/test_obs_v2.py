@@ -1,0 +1,665 @@
+"""Observability v2 tests (DESIGN.md §16): quantile-sketch math and exact
+merge, request-scoped trace context, drop accounting, SLO/goodput reports,
+the flight recorder + stall watchdog, Perfetto export / trace propagation
+on a real paged run, and router-merged sketches under speculative decoding
+across DP replicas."""
+
+import dataclasses
+import json
+import math
+import pathlib
+import time
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env: deterministic example replay
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro import obs
+from repro.configs.base import get_arch
+from repro.core.sparse_linear import ExecPolicy
+from repro.core.sparsity import SparsityConfig
+from repro.launch.pack_tree import pack_tree
+from repro.models.families import build_model
+from repro.obs import MetricsRegistry
+from repro.obs.context import TraceContext, use
+from repro.obs.export import (check_propagation, load_events, span_trees,
+                              to_chrome_trace)
+from repro.obs.recorder import FlightRecorder, Watchdog, subsystem_of
+from repro.obs.sketch import DEFAULT_ALPHA, MIN_VALUE, QuantileSketch
+from repro.obs.slo import (SLOConfig, phase_sketches, request_phases,
+                           request_tokens, slo_report)
+from repro.obs.trace import EventTrace
+from repro.serve import Request, ServeConfig, make_engine
+from repro.spec import SpecConfig, tier_sort_tree
+
+# 8:16 pattern on every node -> a 4:16 draft tier narrows the
+# k-reconfigured weights (same idiom as tests/test_spec.py)
+DRAFT = "4:16"
+POLICY = ExecPolicy(mode="packed", backend="reference")
+
+
+@pytest.fixture(scope="module")
+def spec_setup():
+    cfg = dataclasses.replace(get_arch("stablelm_3b").reduced(),
+                              sparsity=SparsityConfig(8, 16, 1))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    packed = tier_sort_tree(pack_tree(params))
+    return cfg, model, packed
+
+
+@pytest.fixture
+def fresh_default_registry():
+    """Isolate the process-wide registry (kernel dispatch / tune counters
+    land there) and restore the previous one afterwards."""
+    prev = obs.default_registry()
+    reg = MetricsRegistry()
+    obs.set_default_registry(reg)
+    yield reg
+    obs.set_default_registry(prev)
+
+
+def _values(seed, n):
+    """Positive latency-like values spanning µs..hours, none in the zero
+    bucket (the shim only draws integers, so floats derive from a seed)."""
+    rng = np.random.default_rng(seed)
+    return 10.0 ** rng.uniform(-6.0, 3.5, size=n)
+
+
+# ---------------------------------------------------------------------------
+# sketch: relative-error bound, exact merge, serialization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 400))
+def test_sketch_relative_error_bound(seed, n):
+    """Every quantile estimate is within alpha (relative) of the true
+    nearest-rank value, across 9+ orders of magnitude."""
+    vals = _values(seed, n)
+    sk = QuantileSketch(alpha=DEFAULT_ALPHA)
+    for v in vals:
+        sk.observe(v)
+    ordered = np.sort(vals)
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        est = sk.quantile(q)
+        true = ordered[int(math.floor(q * (n - 1)))]
+        assert abs(est - true) <= DEFAULT_ALPHA * true * (1 + 1e-9), \
+            f"q={q}: |{est} - {true}| > alpha*true"
+
+
+@settings(max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), cut_a=st.integers(0, 120),
+       cut_b=st.integers(0, 120))
+def test_sketch_merge_is_exact_and_order_free(seed, cut_a, cut_b):
+    """Bucket-wise merge: any split/grouping/order of the observations
+    yields identical bucket state, hence identical quantiles."""
+    vals = _values(seed, 120)
+    a, b = sorted((cut_a, cut_b))
+    parts = [vals[:a], vals[a:b], vals[b:]]
+
+    def sketch_of(chunk):
+        sk = QuantileSketch(alpha=DEFAULT_ALPHA)
+        for v in chunk:
+            sk.observe(v)
+        return sk
+
+    whole = sketch_of(vals)
+    # ((p0 + p1) + p2) and (p0 + (p2 + p1)): grouping and order both vary
+    left = sketch_of(parts[0]).merge(sketch_of(parts[1])) \
+        .merge(sketch_of(parts[2]))
+    right = sketch_of(parts[0]).merge(
+        sketch_of(parts[2]).merge(sketch_of(parts[1])))
+    for merged in (left, right):
+        assert merged.bins == whole.bins
+        assert merged.zero_count == whole.zero_count
+        assert merged.count == whole.count
+        for q in (0.0, 0.5, 0.9, 0.99, 1.0):
+            assert merged.quantile(q) == whole.quantile(q)
+
+
+def test_sketch_empty_is_merge_identity():
+    vals = _values(7, 50)
+    sk = QuantileSketch()
+    for v in vals:
+        sk.observe(v)
+    before = sk.to_entry()
+    sk.merge(QuantileSketch())              # right identity
+    assert sk.to_entry() == before
+    other = QuantileSketch().merge(sk)      # left identity
+    assert other.bins == sk.bins and other.count == sk.count
+    assert QuantileSketch().quantile(0.5) is None
+    assert len(QuantileSketch()) == 0
+
+
+def test_sketch_alpha_mismatch_and_domain_errors():
+    a = QuantileSketch(alpha=0.01)
+    b = QuantileSketch(alpha=0.02)
+    with pytest.raises(ValueError, match="different alpha"):
+        a.merge(b)
+    with pytest.raises(ValueError):
+        QuantileSketch(alpha=1.5)
+    with pytest.raises(ValueError):
+        a.observe(-0.1)
+    a.observe(1.0)
+    with pytest.raises(ValueError):
+        a.quantile(1.5)
+
+
+def test_sketch_zero_bucket():
+    sk = QuantileSketch()
+    sk.observe(0.0)
+    sk.observe(MIN_VALUE / 2)
+    sk.observe(1.0)
+    assert sk.zero_count == 2 and sk.count == 3
+    assert sk.quantile(0.0) == 0.0
+    assert sk.quantile(1.0) == pytest.approx(1.0, rel=DEFAULT_ALPHA)
+
+
+def test_sketch_entry_roundtrip_survives_json():
+    sk = QuantileSketch()
+    for v in _values(3, 80):
+        sk.observe(v)
+    entry = json.loads(json.dumps(sk.to_entry()))   # snapshot wire format
+    back = QuantileSketch.from_entry(entry)
+    assert back.bins == sk.bins and back.count == sk.count
+    for q in (0.1, 0.5, 0.99):
+        assert back.quantile(q) == sk.quantile(q)
+    assert sk.copy().quantile(0.5) == sk.quantile(0.5)
+
+
+# ---------------------------------------------------------------------------
+# registry: sketch as the fourth family kind
+# ---------------------------------------------------------------------------
+
+def test_registry_sketch_family_snapshot_and_prometheus():
+    reg = MetricsRegistry()
+    sk = reg.sketch("lat_sketch", help="latency", alpha=0.02, phase="decode")
+    assert sk.alpha == 0.02
+    # later registrations reuse the family alpha (mergeability)
+    assert reg.sketch("lat_sketch", alpha=0.5, phase="prefill").alpha == 0.02
+    for v in (0.001, 0.01, 0.01, 0.1):
+        sk.observe(v)
+    snap = reg.snapshot(meta=False)
+    entries = [e for e in snap["sketches"] if e["name"] == "lat_sketch"]
+    assert len(entries) == 2
+    (e,) = [e for e in entries if e["labels"] == {"phase": "decode"}]
+    assert e["alpha"] == 0.02 and e["count"] == 4
+    assert sum(e["bins"].values()) + e["zero_count"] == e["count"]
+    text = reg.to_prometheus()
+    assert "# TYPE lat_sketch summary" in text
+    assert 'lat_sketch{phase="decode",quantile="0.5"}' in text
+    assert 'lat_sketch_count{phase="decode"} 4' in text
+    # kind conflicts are rejected like any other family
+    reg.counter("c").inc()
+    with pytest.raises(ValueError):
+        reg.sketch("c")
+
+
+def test_registry_sketch_snapshot_passes_validator(tmp_path):
+    import importlib.util
+    root = pathlib.Path(__file__).resolve().parents[1]
+    spec = importlib.util.spec_from_file_location(
+        "validate_metrics", root / "benchmarks" / "validate_metrics.py")
+    vm = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(vm)
+
+    reg = MetricsRegistry()
+    reg.counter("serve_requests_completed_total").inc(2)
+    reg.sketch("serve_ttft_seconds_sketch").observe(0.05)
+    path = tmp_path / "m.json"
+    reg.write(str(path))
+    assert vm.main([str(path),
+                    "--schema", str(root / "benchmarks" /
+                                    "metrics_schema.json"),
+                    "--require-sketch", "serve_ttft_seconds_sketch"]) == 0
+    # an absent sketch family fails the gate
+    assert vm.main([str(path),
+                    "--schema", str(root / "benchmarks" /
+                                    "metrics_schema.json"),
+                    "--require-sketch", "nope_sketch"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# trace context: contextvar splice, explicit wins, drop accounting
+# ---------------------------------------------------------------------------
+
+def test_event_splices_ambient_context():
+    trace = EventTrace()
+    ctx = TraceContext.root(replica=0, tp_shard=1)
+    with use(ctx):
+        rec = trace.event("kernel_dispatch", op="xwT")
+    assert rec["trace_id"] == ctx.trace_id
+    assert rec["span_id"] == ctx.span_id
+    assert rec["replica"] == "0" and rec["tp_shard"] == "1"
+    # outside the block: no splice
+    assert "trace_id" not in trace.event("kernel_dispatch", op="xwT")
+
+
+def test_explicit_trace_id_wins_over_ambient():
+    trace = EventTrace()
+    with use(TraceContext.root()):
+        rec = trace.event("spec_commit", trace_id="t-explicit", uid=3)
+    assert rec["trace_id"] == "t-explicit"
+    assert "span_id" not in rec      # ambient context contributed nothing
+
+
+def test_context_nesting_and_children():
+    outer = TraceContext.root(replica=0)
+    with use(outer):
+        child = outer.child(chunk=2)
+        assert child.trace_id == outer.trace_id
+        assert child.parent_id == outer.span_id
+        assert dict(child.labels)["chunk"] == "2"
+        with use(child):
+            from repro.obs.context import current
+            assert current() is child
+        assert_current_is(outer)
+    from repro.obs.context import current
+    assert current() is None
+
+
+def assert_current_is(ctx):
+    from repro.obs.context import current
+    assert current() is ctx
+
+
+def test_span_inherits_context():
+    trace = EventTrace()
+    ctx = TraceContext.root()
+    with use(ctx):
+        with trace.span("request", uid=1):
+            pass
+    (rec,) = trace.named("request")
+    assert rec["ph"] == "span" and rec["trace_id"] == ctx.trace_id
+
+
+def test_trace_drop_accounting_and_header(tmp_path):
+    reg = MetricsRegistry(trace=EventTrace(max_events=4))
+    for i in range(7):
+        reg.trace.event("request_step", i=i)
+    assert reg.trace.dropped == 3
+    (c,) = [e for e in reg.snapshot(meta=False)["counters"]
+            if e["name"] == "trace_events_dropped_total"]
+    assert c["value"] == 3
+    path = tmp_path / "t.jsonl"
+    assert reg.trace.write(str(path)) == 4
+    header, events = load_events(str(path))
+    assert header is not None and header["dropped"] == 3
+    assert len(events) == 4
+    assert [e["i"] for e in events] == [3, 4, 5, 6]   # oldest-first suffix
+    # an un-overflowed trace writes no header line
+    reg2 = MetricsRegistry()
+    reg2.trace.event("x")
+    reg2.trace.write(str(tmp_path / "t2.jsonl"))
+    header2, _ = load_events(str(tmp_path / "t2.jsonl"))
+    assert header2 is None
+
+
+# ---------------------------------------------------------------------------
+# slo: phase attribution, goodput, deadlines
+# ---------------------------------------------------------------------------
+
+def _req(sub=0.0, claim=0.1, first=0.4, done=1.0, prompt=8, out=4,
+         wasted=0, rejected=0, overhead=0.0, preempts=0):
+    return SimpleNamespace(
+        submit_ts=sub, claim_ts=claim, first_token_ts=first,
+        complete_ts=done, prompt=list(range(prompt)),
+        output=list(range(out)), wasted_prefill_tokens=wasted,
+        rejected_draft_tokens=rejected, preempt_overhead_s=overhead,
+        preempts=preempts)
+
+
+def test_request_phases_and_tokens():
+    ph = request_phases(_req(overhead=0.2))
+    assert ph["queue_wait"] == pytest.approx(0.1)
+    assert ph["prefill"] == pytest.approx(0.3)
+    assert ph["decode"] == pytest.approx(0.6)
+    assert ph["preempt_reprefill"] == pytest.approx(0.2)   # overlay
+    assert ph["ttft"] == pytest.approx(0.4)
+    assert ph["e2e"] == pytest.approx(1.0)
+    # incomplete request: missing boundaries are omitted, not zeroed
+    ph = request_phases(_req(first=None, done=None))
+    assert set(ph) == {"queue_wait"}
+    toks = request_tokens(_req(wasted=5, rejected=3))
+    assert toks == {"useful": 12, "wasted_preempt": 5,
+                    "wasted_spec_reject": 3}
+
+
+def test_slo_report_goodput_and_attainment():
+    reqs = [
+        _req(done=0.5),                               # fast: passes both
+        _req(first=0.9, done=2.5, wasted=12, preempts=1, overhead=0.3),
+        _req(first=None, done=None),                  # still in flight
+        _req(done=1.2, rejected=6),
+    ]
+    reg = MetricsRegistry()
+    rep = slo_report(reqs, SLOConfig(ttft_ms=500.0, e2e_ms=2000.0),
+                     metrics=reg)
+    assert rep["requests"] == 4 and rep["completed"] == 3
+    assert rep["preempted_requests"] == 1
+    g = rep["goodput"]
+    assert g["useful_tokens"] == 4 * 12
+    assert g["wasted_tokens"] == {"preempt": 12, "spec_reject": 6}
+    assert g["ratio"] == pytest.approx(48 / 66)
+    # req 2 misses both deadlines (ttft 900ms, e2e 2500ms)
+    slo = rep["slo"]
+    assert slo["pass"] == 2 and slo["fail"] == 1
+    assert slo["fail_ttft"] == 1 and slo["fail_e2e"] == 1
+    assert slo["attainment"] == pytest.approx(2 / 3)
+    assert rep["phases"]["decode"]["count"] == 3
+    assert rep["phases"]["preempt_reprefill"]["count"] == 1
+    # verdicts published on the registry
+    snap = reg.snapshot(meta=False)
+    names = {(e["name"], tuple(sorted(e["labels"].items()))): e["value"]
+             for e in snap["counters"]}
+    assert names[("serve_slo_pass_total", ())] == 2
+    assert names[("serve_slo_fail_total", (("slo", "ttft"),))] == 1
+    (gr,) = [e for e in snap["gauges"]
+             if e["name"] == "serve_goodput_ratio"]
+    assert gr["value"] == pytest.approx(48 / 66)
+
+
+def test_slo_report_without_deadlines_has_no_slo_block():
+    rep = slo_report([_req()], SLOConfig())
+    assert "slo" not in rep and rep["goodput"]["ratio"] == 1.0
+
+
+def test_phase_sketches_merge_matches_single():
+    """The property serve_bench relies on: per-run phase sketches merged
+    across runs equal one sketch over the concatenated requests."""
+    runs = [[_req(done=0.5 + 0.1 * i) for i in range(4)],
+            [_req(first=0.8, done=3.0 + i) for i in range(3)]]
+    merged = phase_sketches(runs[0])
+    for phase, sk in phase_sketches(runs[1]).items():
+        if phase in merged:
+            merged[phase].merge(sk)
+        else:
+            merged[phase] = sk
+    combined = phase_sketches(runs[0] + runs[1])
+    for phase in combined:
+        assert merged[phase].bins == combined[phase].bins
+        assert merged[phase].quantile(0.9) == combined[phase].quantile(0.9)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder + watchdog
+# ---------------------------------------------------------------------------
+
+def test_subsystem_routing():
+    assert subsystem_of("kernel_dispatch") == "kernels"
+    assert subsystem_of("autotune_search") == "tune"
+    assert subsystem_of("tune_cache_resolve") == "tune"
+    assert subsystem_of("train_step") == "train"
+    assert subsystem_of("checkpoint_save") == "train"
+    assert subsystem_of("request_submit") == "serve"
+    assert subsystem_of("request") == "serve"
+    assert subsystem_of("spec_commit") == "serve"
+    assert subsystem_of("prefill_chunk") == "serve"
+    assert subsystem_of("logger_line") == "misc"
+
+
+def test_watchdog_arms_only_after_second_beat():
+    wd = Watchdog("t", on_stall=lambda w: None, threshold=2.0,
+                  min_stall_s=0.5, poll_s=30.0)   # poll far away: we drive
+    try:
+        now = time.monotonic()
+        assert not wd.check(now + 1e9)        # no beats: never a stall
+        wd.beat()
+        assert not wd.check(time.monotonic() + 1e9)   # one beat: jit grace
+        wd.beat()                             # ewma exists -> armed
+        assert not wd.check(time.monotonic() + 0.01)
+        assert wd.check(time.monotonic() + 10.0)
+        assert wd.stalls == 1
+        # one dump per episode until the loop beats again
+        assert not wd.check(time.monotonic() + 20.0)
+        wd.beat()
+        assert wd.check(time.monotonic() + 10.0)
+        assert wd.stalls == 2
+        assert wd.state()["beats"] == 3
+    finally:
+        wd.stop()
+
+
+def test_watchdog_threshold_scales_with_ewma():
+    wd = Watchdog("t", on_stall=lambda w: None, threshold=4.0,
+                  min_stall_s=0.001, poll_s=30.0)
+    try:
+        wd.beat()
+        time.sleep(0.05)
+        wd.beat()
+        # ewma ~= 0.05 -> stall threshold ~= 0.2, floored well below
+        assert 0.1 < wd.stall_after() < 1.0
+        assert not wd.check(time.monotonic() + 0.01)
+        assert wd.check(time.monotonic() + 5.0)
+    finally:
+        wd.stop()
+
+
+def test_recorder_rings_and_dump(tmp_path):
+    reg = MetricsRegistry()
+    rec = FlightRecorder(str(tmp_path), metrics=reg, ring_size=3)
+    rec.attach_trace(reg.trace)
+    for i in range(5):
+        reg.trace.event("request_step", i=i)
+    reg.trace.event("kernel_dispatch", op="xwT")
+    out = rec.dump("unit-test")
+    assert out in rec.dumps
+    rings = json.loads((tmp_path / "flight-0001-unit-test" /
+                        "rings.json").read_text())
+    # serve ring is bounded: only the 3 most recent request_step events
+    assert [e["i"] for e in rings["serve"]] == [2, 3, 4]
+    assert rings["kernels"][0]["name"] == "kernel_dispatch"
+    meta = json.loads((tmp_path / "flight-0001-unit-test" /
+                       "meta.json").read_text())
+    assert meta["reason"] == "unit-test"
+    assert meta["ring_sizes"] == {"serve": 3, "kernels": 1}
+    metrics = json.loads((tmp_path / "flight-0001-unit-test" /
+                          "metrics.json").read_text())
+    assert "counters" in metrics
+    (c,) = [e for e in reg.snapshot(meta=False)["counters"]
+            if e["name"] == "flight_dumps_total"]
+    assert c["value"] == 1
+    rec.close()
+
+
+def test_recorder_guard_dumps_on_crash(tmp_path):
+    rec = FlightRecorder(str(tmp_path), metrics=MetricsRegistry())
+    with pytest.raises(RuntimeError):
+        with rec.guard():
+            raise RuntimeError("boom")
+    assert len(rec.dumps) == 1 and "crash-RuntimeError" in rec.dumps[0]
+    rec.close()
+
+
+def test_recorder_watchdog_stall_produces_one_dump(tmp_path):
+    reg = MetricsRegistry()
+    rec = FlightRecorder(str(tmp_path), metrics=reg)
+    rec.attach_trace(reg.trace)
+    wd = rec.watchdog("serve_tick", threshold=2.0, min_stall_s=0.05,
+                      poll_s=0.01)
+    assert wd.threshold == 2.0
+    reg.trace.event("request_submit", uid=0)
+    wd.beat()
+    time.sleep(0.02)
+    wd.beat()                      # armed; then silence -> stall
+    assert rec.wait_for_dump(timeout=5.0)
+    rec.close()
+    assert len(rec.dumps) == 1     # one dump per episode, close() raced none
+    rings = json.loads((pathlib.Path(rec.dumps[0]) /
+                        "rings.json").read_text())
+    assert rings["serve"][0]["name"] == "request_submit"
+    (c,) = [e for e in reg.snapshot(meta=False)["counters"]
+            if e["name"] == "obs_watchdog_stalls_total"]
+    assert c["value"] == 1 and c["labels"] == {"watch": "serve_tick"}
+
+
+def test_recorder_default_threshold_and_tap_chaining(tmp_path):
+    rec = FlightRecorder(str(tmp_path), metrics=MetricsRegistry(),
+                         watchdog_threshold=3.5)
+    wd = rec.watchdog("w", poll_s=30.0)
+    assert wd.threshold == 3.5
+    wd.stop()
+    # attach_trace chains an existing tap instead of clobbering it
+    seen = []
+    trace = EventTrace()
+    trace.tap = seen.append
+    rec.attach_trace(trace)
+    trace.event("request_x")
+    assert len(seen) == 1
+    assert [e["name"] for e in rec.rings["serve"]] == ["request_x"]
+    rec.close()
+    rec.close()                    # idempotent
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: paged run -> trace propagation, export, waste accounting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def paged_run(spec_setup):
+    """One paged serve run with an undersized arena (forces preemption)
+    and speculative decoding, against a fresh default registry so engine,
+    kernel-dispatch, and tune-cache events share one trace."""
+    from repro.paged import PagedServeConfig
+    cfg, model, packed = spec_setup
+    prev = obs.default_registry()
+    reg = MetricsRegistry()
+    obs.set_default_registry(reg)
+    try:
+        engine = make_engine(
+            model, packed,
+            PagedServeConfig(num_slots=4, max_len=96, page_size=8,
+                             num_pages=13, prefill_chunk=16),
+            policy=POLICY, spec=SpecConfig(draft=DRAFT, gamma=3))
+        rng = np.random.default_rng(0)
+        for uid, plen in enumerate((5, 23, 11, 37)):
+            engine.submit(Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
+                max_new_tokens=8))
+        engine.run_until_drained()
+        yield engine, reg
+    finally:
+        obs.set_default_registry(prev)
+
+
+def test_paged_trace_propagation(paged_run):
+    engine, reg = paged_run
+    events = reg.trace.events
+    assert check_propagation(events) == []
+    # every completed request has a span tree from submit to complete
+    trees = span_trees(events)
+    for req in engine.completed:
+        assert req.trace_id in trees
+        names = [e["name"] for e in trees[req.trace_id]]
+        # the request span carries ts at its *start*, so it ties with the
+        # submit point event — assert lifecycle membership, not order
+        assert "request_submit" in names[:2]
+        assert "request_complete" in names
+    # chunked prefill and spec verify both attributed to their requests
+    assert any(e["name"] == "prefill_chunk" and "trace_id" in e
+               for e in events)
+    assert any(e["name"].startswith("spec_") and "trace_id" in e
+               for e in events)
+
+
+def test_paged_export_chrome_trace(paged_run):
+    engine, reg = paged_run
+    chrome = to_chrome_trace(reg.trace.events)
+    blob = json.dumps(chrome)            # must be valid JSON end-to-end
+    assert json.loads(blob)["displayTimeUnit"] == "ms"
+    evs = chrome["traceEvents"]
+    assert {e["ph"] for e in evs} >= {"X", "i", "M"}
+    # one named virtual thread per request trace
+    threads = [e for e in evs
+               if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert len(threads) >= len(engine.completed)
+    assert all(e["ts"] >= 0.0 for e in evs if "ts" in e)
+
+
+def test_paged_preemption_waste_and_slo(paged_run):
+    engine, reg = paged_run
+    assert any(r.preempts > 0 for r in engine.completed)
+    preempted = [r for r in engine.completed if r.preempts]
+    assert all(r.wasted_prefill_tokens > 0 for r in preempted)
+    assert all(r.preempt_overhead_s > 0.0 for r in preempted)
+    wasted = {e["labels"].get("cause"): e["value"]
+              for e in reg.snapshot(meta=False)["counters"]
+              if e["name"] == "serve_wasted_tokens_total"}
+    assert wasted.get("preempt", 0) == sum(
+        r.wasted_prefill_tokens for r in engine.completed)
+    assert wasted.get("spec_reject", 0) == sum(
+        r.rejected_draft_tokens for r in engine.completed)
+    rep = slo_report(engine.completed, SLOConfig(e2e_ms=1e7))
+    assert rep["preempted_requests"] == len(preempted)
+    assert rep["goodput"]["ratio"] < 1.0
+    assert rep["slo"]["pass"] == len(engine.completed)
+    # engine sketches observed every request
+    sketches = {e["name"]: e
+                for e in reg.snapshot(meta=False)["sketches"]}
+    assert sketches["serve_ttft_seconds_sketch"]["count"] == len(
+        engine.completed)
+    assert sketches["serve_e2e_seconds_sketch"]["count"] == len(
+        engine.completed)
+
+
+def test_paged_trace_jsonl_round_trips_export(paged_run, tmp_path):
+    _, reg = paged_run
+    path = tmp_path / "serve_trace.jsonl"
+    reg.trace.write(str(path))
+    header, events = load_events(str(path))
+    assert header is None                      # no overflow in this run
+    assert check_propagation(events) == []
+
+
+# ---------------------------------------------------------------------------
+# DP router: merged sketches under speculative decoding
+# ---------------------------------------------------------------------------
+
+def test_router_merged_sketches_under_spec(spec_setup):
+    cfg, model, packed = spec_setup
+    router = make_engine(model, packed, ServeConfig(num_slots=2, max_len=64),
+                         policy=POLICY, spec=SpecConfig(draft=DRAFT, gamma=3),
+                         replicas=2)
+    rng = np.random.default_rng(0)
+    for uid in range(4):
+        router.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, 5 + uid % 3,
+                                dtype=np.int32),
+            max_new_tokens=6))
+    router.run_until_drained()
+    assert sorted(r.uid for r in router.completed) == [0, 1, 2, 3]
+    snap = router.metrics.snapshot(meta=False)
+
+    # spec counters survive the merge with replica attribution
+    drafts = {e["labels"].get("replica"): e["value"]
+              for e in snap["counters"]
+              if e["name"] == "spec_draft_tokens_total"}
+    assert set(drafts) == {"0", "1"} and all(v > 0 for v in drafts.values())
+
+    for name in ("serve_ttft_seconds_sketch", "serve_e2e_seconds_sketch"):
+        entries = [e for e in snap["sketches"] if e["name"] == name]
+        per_replica = {e["labels"]["replica"]: e for e in entries
+                       if "replica" in e["labels"]}
+        (combined,) = [e for e in entries if "replica" not in e["labels"]]
+        assert set(per_replica) == {"0", "1"}
+        # round-robin: two requests per replica, four combined
+        assert all(e["count"] == 2 for e in per_replica.values())
+        assert combined["count"] == 4
+        # the exact-merge property: the combined instrument's bucket state
+        # equals the bucket-wise sum of the replica sketches, so its
+        # percentiles are those of one sketch that saw every observation
+        manual = QuantileSketch.from_entry(per_replica["0"])
+        manual.merge(QuantileSketch.from_entry(per_replica["1"]))
+        got = QuantileSketch.from_entry(combined)
+        assert got.bins == manual.bins
+        assert got.zero_count == manual.zero_count
+        for q in (0.5, 0.9, 0.99):
+            assert got.quantile(q) == manual.quantile(q)
